@@ -1,0 +1,102 @@
+"""Shared benchmark helpers: store factories, trace replay, timing."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+from repro.data.traces import TraceEvent
+
+MB = 1024 * 1024
+
+
+def bench_store(*, elastic: bool = True, recovery: bool = True,
+                demand_cache: bool = True, gc_interval: float = 60.0,
+                M: int = 2, N: int = 2, capacity: int = 2 * MB,
+                visibility_lag: float = 0.0) -> tuple:
+    """Paper-shaped store scaled to CPU-bench sizes (EC 4+2, MB slabs)."""
+    clock = Clock()
+    cfg = StoreConfig(
+        ec=ECConfig(k=4, p=2),
+        function_capacity=capacity,
+        fragment_bytes=1 * MB,
+        gc=GCConfig(gc_interval=gc_interval if elastic else 1e12,
+                    active_intervals=M, degraded_intervals=N,
+                    active_warmup=gc_interval / 10,
+                    degraded_warmup=gc_interval / 2),
+        num_recovery_functions=4,
+        enable_recovery=recovery,
+        cos_visibility_lag=visibility_lag,
+    )
+    store = InfiniStore(cfg, clock=clock)
+    if not demand_cache:
+        store._demand_cache = lambda ckey, data: None
+    if not elastic:
+        store.window.mark = lambda key: None     # no compaction (IC-like)
+    return store, clock
+
+
+@dataclass
+class ReplayResult:
+    gets: int = 0
+    puts: int = 0
+    get_lat_us: List[float] = field(default_factory=list)
+    put_lat_us: List[float] = field(default_factory=list)
+    func_count_series: List[int] = field(default_factory=list)
+    alive_series: List[int] = field(default_factory=list)
+    hit_ratio: float = 0.0
+    dollars: Dict[str, float] = field(default_factory=dict)
+    overhead: float = 0.0
+
+    def p(self, series: str, q: float) -> float:
+        data = getattr(self, series)
+        return float(np.percentile(data, q)) if data else 0.0
+
+
+def replay(store: InfiniStore, clock: Clock, events: List[TraceEvent],
+           *, payload_cache: Optional[dict] = None,
+           fail_rate: float = 0.0, seed: int = 0,
+           scale_bytes: float = 1.0) -> ReplayResult:
+    """Replay a trace against the store, driving the logical clock."""
+    rng = np.random.default_rng(seed)
+    res = ReplayResult()
+    payloads = payload_cache if payload_cache is not None else {}
+    t_prev = 0.0
+    for ev in events:
+        dt = max(ev.t - t_prev, 0.0)
+        if dt > 0:
+            clock.advance(dt)
+            store.gc_tick()
+        t_prev = ev.t
+        size = max(16, int(ev.size * scale_bytes))
+        if fail_rate and rng.random() < fail_rate and store.sms.slabs:
+            fids = sorted(store.sms.slabs)
+            store.inject_failure(fids[rng.integers(len(fids))])
+        if ev.op == "put" or ev.key not in payloads:
+            data = rng.bytes(min(size, 4 * MB))
+            t0 = time.perf_counter()
+            store.put(ev.key, data)
+            res.put_lat_us.append((time.perf_counter() - t0) * 1e6)
+            payloads[ev.key] = data
+            res.puts += 1
+        else:
+            t0 = time.perf_counter()
+            got = store.get(ev.key)
+            res.get_lat_us.append((time.perf_counter() - t0) * 1e6)
+            assert got == payloads[ev.key], f"corrupt read {ev.key}"
+            res.gets += 1
+        res.func_count_series.append(store.num_functions())
+        res.alive_series.append(store.sms.alive_count())
+    res.hit_ratio = store.stats.hit_ratio
+    res.dollars = store.ledger.dollars()
+    res.overhead = store.ledger.pay_per_access_overhead()
+    return res
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,48 @@
+"""Paper Figs. 9 & 15/16: the function count must track the working set,
+and throughput must scale with offered load."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import MB, bench_store, replay, row
+from repro.data.traces import azure_blob_trace, ibm_registry_trace
+
+
+def run() -> list:
+    out = []
+    # Fig 9: function count vs WSS over the IBM-like trace
+    events = ibm_registry_trace(num_objects=150, num_requests=900,
+                                duration=2400.0, scale_bytes=0.002, seed=3)
+    st, clock = bench_store(elastic=True, gc_interval=60.0, M=2, N=2,
+                            capacity=1 * MB)
+    t0 = time.perf_counter()
+    r = replay(st, clock, events, seed=3)
+    us = (time.perf_counter() - t0) * 1e6 / len(events)
+    series = np.array(r.func_count_series)
+    # windowed WSS proxy: distinct keys in trailing window
+    wss = []
+    win = 120
+    keys = [e.key for e in events]
+    for i in range(len(events)):
+        wss.append(len(set(keys[max(0, i - win):i + 1])))
+    corr = float(np.corrcoef(series, np.array(wss))[0, 1])
+    out.append(row("fig9_elastic_function_count", us,
+                   f"min={series.min()} max={series.max()} "
+                   f"ratio={series.max() / max(series.min(), 1):.1f} "
+                   f"corr_wss={corr:.2f}"))
+
+    # Fig 15-like: azure burst replay — store absorbs RPS bursts by scaling
+    ev_az = azure_blob_trace(num_objects=80, num_requests=700,
+                             duration=600.0, scale_bytes=0.002, seed=4)
+    st2, clock2 = bench_store(elastic=True, gc_interval=30.0, M=2, N=2,
+                              capacity=1 * MB)
+    t0 = time.perf_counter()
+    r2 = replay(st2, clock2, ev_az, seed=4)
+    us2 = (time.perf_counter() - t0) * 1e6 / len(ev_az)
+    s2 = np.array(r2.func_count_series)
+    out.append(row("fig15_azure_burst_scaling", us2,
+                   f"funcs_min={s2.min()} funcs_max={s2.max()} "
+                   f"hit={r2.hit_ratio:.3f}"))
+    return out

@@ -1,0 +1,50 @@
+"""Paper Figs. 22/23: factor analysis — which design options pay.
+
+Configurations (paper §6.5):
+  SNR  — static pool, no parallel recovery
+  SR   — static pool, recovery on
+  IS_NC— InfiniStore without demand-cache functions
+  IS   — full InfiniStore
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import MB, bench_store, replay, row
+from repro.data.traces import ibm_registry_trace
+
+
+def run(num_requests: int = 600) -> list:
+    events = ibm_registry_trace(num_objects=100, num_requests=num_requests,
+                                duration=1800.0, scale_bytes=0.002, seed=9)
+    out = []
+    variants = {
+        "SNR": dict(elastic=False, recovery=False),
+        "SR": dict(elastic=False, recovery=True),
+        "IS_NC": dict(elastic=True, recovery=True, demand_cache=False),
+        "IS": dict(elastic=True, recovery=True),
+    }
+    results = {}
+    for name, kw in variants.items():
+        st, clock = bench_store(capacity=1 * MB, gc_interval=120.0,
+                                M=3, N=3, **kw)
+        if not kw.get("demand_cache", True):
+            st._demand_cache = lambda ckey, data: None   # disable caching
+        t0 = time.perf_counter()
+        r = replay(st, clock, events, seed=9, fail_rate=0.02)
+        us = (time.perf_counter() - t0) * 1e6 / len(events)
+        results[name] = r
+        out.append(row(f"fig22_23_{name}", us,
+                       f"cost=${r.dollars['total']:.6f} "
+                       f"hit={r.hit_ratio:.3f} "
+                       f"get_p90={r.p('get_lat_us', 90):.0f}us"))
+    # headline comparisons from the paper
+    is_r, nc = results["IS"], results["IS_NC"]
+    out.append(row("fig22_23_summary", 0.0,
+                   f"IS_hit>{'=' if is_r.hit_ratio >= nc.hit_ratio else '<'}"
+                   f"NC={is_r.hit_ratio >= nc.hit_ratio} "
+                   f"IS_cost=${is_r.dollars['total']:.6f} "
+                   f"SR_cost=${results['SR'].dollars['total']:.6f}"))
+    return out

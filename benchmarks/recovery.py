@@ -1,0 +1,66 @@
+"""Paper Figs. 18-21: parallel recovery — recovery time/throughput vs the
+number of recovery functions, and GET latency impact during recovery."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import MB, row
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+
+
+def build_loaded_store(num_recovery: int, objects: int = 60,
+                       obj_bytes: int = 60_000):
+    cfg = StoreConfig(ec=ECConfig(k=4, p=2),
+                      function_capacity=64 * MB,
+                      gc=GCConfig(gc_interval=1e12),
+                      num_recovery_functions=num_recovery)
+    st = InfiniStore(cfg, clock=Clock())
+    rng = np.random.default_rng(0)
+    payloads = {}
+    for i in range(objects):
+        payloads[f"o{i}"] = rng.bytes(obj_bytes)
+        st.put(f"o{i}", payloads[f"o{i}"])
+    return st, payloads
+
+
+def run() -> list:
+    out = []
+    # Fig 19/20: recovery time & throughput vs recovery-group size
+    for R in (1, 4, 8):
+        st, payloads = build_loaded_store(R)
+        fid = st.chunk_map["o0|1/f0#0"]
+        lost_bytes = sum(len(v) for v in st.sms.get(fid).storage.values())
+        st.inject_failure(fid)
+        t0 = time.perf_counter()
+        assert st.get("o0") == payloads["o0"]     # triggers recovery
+        wall = time.perf_counter() - t0
+        thpt = st.recovery.stats.bytes_recovered / max(wall, 1e-9) / MB
+        out.append(row(f"fig19_recovery_R{R}", wall * 1e6,
+                       f"lost={lost_bytes / 1024:.0f}KB "
+                       f"recovered={st.recovery.stats.bytes_recovered / 1024:.0f}KB "
+                       f"thpt={thpt:.0f}MB/s "
+                       f"parallel={st.recovery.stats.parallel_recoveries}"))
+    # Fig 21: GET latency around a reclamation event
+    st, payloads = build_loaded_store(4)
+    lat_before, lat_after = [], []
+    for i in range(20):
+        t0 = time.perf_counter()
+        st.get(f"o{i % 10}")
+        lat_before.append((time.perf_counter() - t0) * 1e6)
+    fid = st.chunk_map["o3|1/f0#1"]
+    st.inject_failure(fid)
+    for i in range(20):
+        t0 = time.perf_counter()
+        got = st.get(f"o{i % 10}")
+        lat_after.append((time.perf_counter() - t0) * 1e6)
+        assert got == payloads[f"o{i % 10}"]
+    out.append(row("fig21_get_latency_during_recovery",
+                   float(np.mean(lat_after)),
+                   f"before_p50={np.percentile(lat_before, 50):.0f}us "
+                   f"after_p50={np.percentile(lat_after, 50):.0f}us "
+                   f"no_interruption=True"))
+    return out

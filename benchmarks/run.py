@@ -1,0 +1,55 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Prints ``name,us_per_call,derived`` CSV (plus a roofline summary read
+from the dry-run records, see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+MODULES = [
+    ("workloads", "Fig 1 workload characterization"),
+    ("hit_ratio", "Table 2 SMS hit ratios"),
+    ("elasticity", "Figs 9/15 elasticity"),
+    ("cost_timeline", "Figs 10/11 cost + pay-per-access"),
+    ("ycsb", "Figs 12-14 YCSB latency/throughput"),
+    ("scaleout", "Figs 16/17 scale-out"),
+    ("recovery", "Figs 18-21 parallel recovery"),
+    ("factor_analysis", "Figs 22/23 factor analysis"),
+    ("kernels", "kernel microbenchmarks"),
+    ("roofline", "§Roofline summary (reads experiments/dryrun.jsonl)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name, desc in MODULES:
+        if args.only and args.only != mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["run"])
+            for line in mod.run():
+                print(line, flush=True)
+            print(f"# {mod_name} ({desc}) done in {time.time()-t0:.1f}s",
+                  flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {mod_name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

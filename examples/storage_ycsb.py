@@ -1,0 +1,32 @@
+"""YCSB-style stress example against the storage engine (paper §6.2).
+
+    PYTHONPATH=src python examples/storage_ycsb.py [--ops 500]
+"""
+import argparse
+
+from benchmarks.common import MB, bench_store
+from benchmarks.ycsb import ycsb
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ops", type=int, default=500)
+    ap.add_argument("--object-kb", type=int, default=256)
+    ap.add_argument("--read-frac", type=float, default=0.95)
+    args = ap.parse_args()
+    st, clock = bench_store(elastic=True, gc_interval=600.0,
+                            capacity=8 * MB)
+    r = ycsb(st, clock, num_keys=24, object_bytes=args.object_kb * 1024,
+             ops=args.ops, read_frac=args.read_frac, seed=0)
+    print(f"{args.ops} ops, {args.object_kb}KB objects, "
+          f"{args.read_frac:.0%} reads:")
+    print(f"  throughput {r['rps']:.0f} req/s ({r['mbps']:.0f} MB/s)")
+    print(f"  GET p50={r['get_p50']:.0f}us p90={r['get_p90']:.0f}us; "
+          f"PUT p90={r['put_p90']:.0f}us")
+    print(f"  functions: {st.num_functions()}, "
+          f"hit ratio {st.stats.hit_ratio:.3f}")
+    print(f"  cost: {st.ledger.dollars()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+experiments/dryrun.jsonl (between AUTOGEN markers; the rest of the file
+is hand-written).
+
+Usage: PYTHONPATH=src:. python scripts/make_experiments.py
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import load_records, terms  # noqa: E402
+from repro.configs import get_config, shapes_for  # noqa: E402
+
+OUT = Path("EXPERIMENTS.md")
+MARK_DRY = ("<!-- AUTOGEN:DRYRUN -->", "<!-- /AUTOGEN:DRYRUN -->")
+MARK_ROOF = ("<!-- AUTOGEN:ROOFLINE -->", "<!-- /AUTOGEN:ROOFLINE -->")
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | GiB/dev (CPU-measured) | GiB/dev "
+        "(TPU-corrected) | fits 16G | lower+compile (s) | params |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        m = r["memory"]
+        fits = "yes" if m["tpu_corrected_bytes"] <= 16e9 else "NO"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_bytes(m['total_bytes'])} | "
+            f"{fmt_bytes(m['tpu_corrected_bytes'])} | {fits} | "
+            f"{r['lower_s'] + r['compile_s']:.1f} | "
+            f"{r['param_count'] / 1e9:.2f}B |")
+    # skips
+    lines.append("")
+    lines.append("Skipped cells (DESIGN.md §5): "
+                 + "; ".join(
+                     f"`{a}`×`long_500k` (pure full attention)"
+                     for a in sorted(
+                         n for n in
+                         ("qwen1.5-0.5b", "qwen3-1.7b", "qwen3-14b",
+                          "qwen1.5-110b", "internvl2-1b",
+                          "qwen2-moe-a2.7b", "granite-moe-1b-a400m",
+                          "musicgen-large"))))
+    return "\n".join(lines)
+
+
+def collective_mix(r):
+    parts = []
+    for k, v in sorted(r.get("collectives_by_op", {}).items(),
+                       key=lambda kv: -kv[1]["ring_bytes"])[:2]:
+        parts.append(f"{k}:{v['ring_bytes'] / 1e9:.1f}GB")
+    return " ".join(parts) if parts else "-"
+
+
+NOTES = {
+    "compute": "raise MXU occupancy: larger microbatch / fused kernels",
+    "memory": "cut HBM traffic: flash-attn custom-vjp, fused norms, "
+              "bf16 end-to-end",
+    "collective": "reshard / overlap: change EP axis, reduce microbatch "
+                  "all-gathers, overlap grads with backward",
+}
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective "
+        "(s) | dominant | MODEL_FLOPS | useful-flops ratio | roofline "
+        "fraction | top collectives |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = terms(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{t['compute_s']:.2e} | {t['memory_s']:.2e} | "
+            f"{t['collective_s']:.2e} | **{t['dominant']}** | "
+            f"{t['model_flops']:.2e} | {t['useful_flops_ratio']:.2f} | "
+            f"{t['roofline_fraction']:.3f} | {collective_mix(r)} |")
+    return "\n".join(lines)
+
+
+def splice(text, markers, payload):
+    a, b = markers
+    i, j = text.index(a) + len(a), text.index(b)
+    return text[:i] + "\n" + payload + "\n" + text[j:]
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        raise SystemExit("no dry-run records")
+    text = OUT.read_text()
+    text = splice(text, MARK_DRY, dryrun_table(recs))
+    text = splice(text, MARK_ROOF, roofline_table(recs))
+    OUT.write_text(text)
+    print(f"EXPERIMENTS.md updated with {len(recs)} cells")
+
+
+if __name__ == "__main__":
+    main()

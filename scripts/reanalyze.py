@@ -1,0 +1,54 @@
+"""Re-run the HLO analyzer over saved experiments/hlo/*.txt without
+recompiling, refreshing the analysis fields of experiments/dryrun.jsonl
+in place. Lets the roofline methodology iterate cheaply.
+
+Usage: PYTHONPATH=src python scripts/reanalyze.py [dryrun.jsonl]
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.hlo import analyze_hlo, bf16_upcast_f32_bytes  # noqa: E402
+
+HLO_DIR = Path("experiments/hlo")
+
+
+def main() -> None:
+    path = Path(sys.argv[1] if len(sys.argv) > 1
+                else "experiments/dryrun.jsonl")
+    recs = [json.loads(l) for l in path.read_text().splitlines() if l]
+    n = 0
+    for rec in recs:
+        if not rec.get("ok"):
+            continue
+        hlo = HLO_DIR / (f"{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+                         f"{rec.get('tag', '')}.txt")
+        if not hlo.exists():
+            continue
+        txt = hlo.read_text()
+        multi = rec["mesh"].count("x") == 2
+        a = analyze_hlo(txt, pod_stride=256 if multi else 10**9)
+        rec["analysis"] = a.summary()
+        rec["collectives_by_op"] = {}
+        for c in a.collectives:
+            key = f"{c.opcode}{'_dcn' if c.dcn else ''}"
+            d = rec["collectives_by_op"].setdefault(
+                key, {"count": 0.0, "result_bytes": 0.0, "ring_bytes": 0.0})
+            d["count"] += c.count
+            d["result_bytes"] += c.result_bytes
+            d["ring_bytes"] += c.ring_bytes
+        upcast = bf16_upcast_f32_bytes(txt)
+        rec["memory"]["f32_upcast_bytes"] = upcast
+        rec["memory"]["tpu_corrected_bytes"] = max(
+            rec["memory"]["total_bytes"] - upcast,
+            rec["memory"]["argument_bytes"] + rec["memory"]["output_bytes"]
+            - rec["memory"]["alias_bytes"])
+        n += 1
+    path.write_text("\n".join(json.dumps(r) for r in recs) + "\n")
+    print(f"re-analyzed {n}/{len(recs)} records in {path}")
+
+
+if __name__ == "__main__":
+    main()

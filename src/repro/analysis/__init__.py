@@ -1,0 +1,1 @@
+from repro.analysis.hlo import HloAnalysis, analyze_hlo  # noqa: F401

@@ -1,0 +1,482 @@
+"""Optimized-HLO analyzer for the roofline pass.
+
+XLA's `compiled.cost_analysis()` visits each `while` body ONCE, so a model
+whose layers run under `lax.scan` is undercounted by num_layers x (verified
+in tests/test_hlo_analysis.py). This module re-walks the HLO call graph
+with loop trip-count multipliers and reports:
+
+  * dot/convolution FLOPs          (compute roofline term)
+  * per-instruction bytes accessed (memory roofline term proxy)
+  * collective bytes by op type and mesh axis (collective roofline term),
+    with ring-traffic adjustment and ICI/DCN classification from
+    replica_groups.
+
+Pure text parsing (numpy only) — no jax dependency, so it can run over
+dumped HLO from any backend.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-]+)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    shapes: List[Tuple[str, Tuple[int, ...]]]   # result shape(s)
+    operands: List[str]
+    attrs: str
+    line: str
+
+    def result_bytes(self) -> int:
+        return sum(DTYPE_BYTES.get(dt, 4) * int(np.prod(dims or (1,)))
+                   for dt, dims in self.shapes)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+@dataclass
+class CollectiveStat:
+    opcode: str
+    count: float = 0.0
+    result_bytes: float = 0.0      # sum of result sizes x multiplier
+    ring_bytes: float = 0.0        # per-device ring traffic x multiplier
+    dcn: bool = False
+    group_size: int = 1
+
+
+@dataclass
+class HloAnalysis:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: List[CollectiveStat] = field(default_factory=list)
+    while_trips: List[int] = field(default_factory=list)
+    transcendentals: float = 0.0
+
+    @property
+    def collective_result_bytes(self) -> float:
+        return sum(c.result_bytes for c in self.collectives)
+
+    def ring_bytes(self, dcn: Optional[bool] = None) -> float:
+        return sum(c.ring_bytes for c in self.collectives
+                   if dcn is None or c.dcn == dcn)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_result_bytes,
+            "ici_ring_bytes": self.ring_bytes(dcn=False),
+            "dcn_ring_bytes": self.ring_bytes(dcn=True),
+            "num_collectives": float(sum(c.count for c in self.collectives)),
+        }
+
+
+# --------------------------------------------------------------------------
+# Parsing
+# --------------------------------------------------------------------------
+
+def _parse_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in DTYPE_BYTES:
+            dims_t = tuple(int(x) for x in dims.split(",") if x) if dims else ()
+            out.append((dt, dims_t))
+    return out
+
+
+def _split_result_and_rest(line: str):
+    """'%x = <type> opcode(...), attrs' -> (result_type_str, opcode, rest)."""
+    eq = line.find(" = ")
+    if eq < 0:
+        return None
+    rest = line[eq + 3:]
+    if rest.startswith("("):
+        depth, i = 0, 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str, rest = rest[:i + 1], rest[i + 1:].lstrip()
+    else:
+        m = re.match(r"[a-z0-9\[\],{}:\* ]*?(?=[a-z][a-z0-9\-]*\()", rest)
+        if m:
+            type_str, rest = rest[:m.end()], rest[m.end():]
+        else:
+            sp = rest.find(" ")
+            type_str, rest = rest[:sp], rest[sp + 1:]
+    m = re.match(r"([a-z][a-z0-9\-]*)\(", rest)
+    if not m:
+        return None
+    opcode = m.group(1)
+    args = rest[m.end():]
+    return type_str, opcode, args
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith(("//", "HloModule")):
+            continue
+        m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{$", line)
+        if m and " = " not in line.split("{")[0]:
+            cur = Computation(m.group(2))
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None or " = " not in line:
+            continue
+        nm = re.match(r"(ROOT\s+)?%?([\w.\-]+)\s+=", line)
+        if not nm:
+            continue
+        parsed = _split_result_and_rest(line)
+        if not parsed:
+            continue
+        type_str, opcode, args = parsed
+        # operand names: %foo references in the argument list (before attrs)
+        arg_end = 0
+        depth = 0
+        for i, ch in enumerate(args):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth < 0:
+                arg_end = i
+                break
+        operand_names = re.findall(r"%([\w.\-]+)", args[:arg_end])
+        instr = Instr(name=nm.group(2), opcode=opcode,
+                      shapes=_parse_shapes(type_str),
+                      operands=operand_names,
+                      attrs=args[arg_end:], line=line)
+        cur.instrs.append(instr)
+        cur.by_name[instr.name] = instr
+    return comps, entry
+
+
+# --------------------------------------------------------------------------
+# Graph walk
+# --------------------------------------------------------------------------
+
+def _called_computations(instr: Instr) -> List[str]:
+    return _CALL_ATTR_RE.findall(instr.line)
+
+
+def _int_const(instr: Optional[Instr]) -> Optional[int]:
+    if instr is not None and instr.opcode == "constant":
+        m = re.search(r"constant\((-?\d+)\)", instr.line)
+        if m:
+            return int(m.group(1))
+    return None
+
+
+def _while_trip_count(comps, cond_name: str) -> int:
+    """Trip count of a jax scan/while: the integer constant compared
+    against the loop counter (`i < N`). Only constants that actually feed
+    a `compare` are considered — NOT arbitrary literals in the condition
+    (index-clamping constants would wildly inflate the multiplier)."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    candidates: List[int] = []
+
+    def scan_comp(c: Computation, operand_resolver):
+        for ins in c.instrs:
+            if ins.opcode == "compare":
+                for nm in ins.operands:
+                    v = operand_resolver(nm)
+                    if v is not None and v > 0:
+                        candidates.append(v)
+            elif ins.opcode in ("fusion", "call"):
+                for callee_name in _called_computations(ins):
+                    callee = comps.get(callee_name)
+                    if callee is None:
+                        continue
+                    # map callee params -> caller operands
+                    params = [i for i in callee.instrs
+                              if i.opcode == "parameter"]
+                    params.sort(key=lambda i: int(
+                        re.search(r"parameter\((\d+)\)", i.line).group(1)))
+
+                    def resolver(nm, _c=c, _ins=ins, _params=params):
+                        cal = next((p for p in _params if p.name == nm), None)
+                        if cal is not None:
+                            idx = _params.index(cal)
+                            if idx < len(_ins.operands):
+                                return _int_const(
+                                    _c.by_name.get(_ins.operands[idx]))
+                            return None
+                        callee_comp = comps.get(
+                            _called_computations(_ins)[0])
+                        return _int_const(callee_comp.by_name.get(nm)
+                                          if callee_comp else None)
+
+                    scan_comp(callee, resolver)
+
+    scan_comp(comp, lambda nm: _int_const(comp.by_name.get(nm)))
+    return max(candidates) if candidates else 1
+
+
+def _dot_flops(comp: Computation, instr: Instr) -> float:
+    out_elems = sum(int(np.prod(d or (1,))) for _, d in instr.shapes)
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    lhs = comp.by_name.get(instr.operands[0]) if instr.operands else None
+    if lhs is None or not lhs.shapes:
+        # operand declared elsewhere (rare) — assume square-ish
+        return 2.0 * out_elems
+    lhs_dims = lhs.shapes[0][1]
+    contract = 1
+    if mc and mc.group(1):
+        for d in mc.group(1).split(","):
+            di = int(d)
+            if di < len(lhs_dims):
+                contract *= lhs_dims[di]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(comp: Computation, instr: Instr) -> float:
+    out_elems = sum(int(np.prod(d or (1,))) for _, d in instr.shapes)
+    rhs = comp.by_name.get(instr.operands[1]) if len(instr.operands) > 1 else None
+    kernel = int(np.prod(rhs.shapes[0][1] or (1,))) if rhs and rhs.shapes else 1
+    return 2.0 * out_elems * max(kernel, 1) / max(
+        1, (rhs.shapes[0][1][-1] if rhs and rhs.shapes and rhs.shapes[0][1]
+            else 1))
+
+
+def _collective_stat(instr: Instr, mult: float, pod_stride: int
+                     ) -> CollectiveStat:
+    opcode = instr.opcode.replace("-start", "")
+    rb = instr.result_bytes()
+    gsize, dcn = 1, False
+    m = _GROUPS_LIST_RE.search(instr.line)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        ids = [int(x) for x in first.split(",") if x.strip()]
+        gsize = max(len(ids), 1)
+        dcn = bool(ids) and (max(ids) - min(ids)) >= pod_stride
+    else:
+        m = _GROUPS_IOTA_RE.search(instr.line)
+        if m:
+            ng, gs = int(m.group(1)), int(m.group(2))
+            dims = tuple(int(x) for x in m.group(3).split(","))
+            perm = (tuple(int(x) for x in m.group(4).split(","))
+                    if m.group(4) else tuple(range(len(dims))))
+            ids = np.arange(int(np.prod(dims))).reshape(dims).transpose(perm)
+            groups = ids.reshape(ng, gs)
+            gsize = gs
+            dcn = bool((groups.max(1) - groups.min(1) >= pod_stride).any())
+    g = max(gsize, 1)
+    if opcode == "all-reduce":
+        ring = 2.0 * rb * (g - 1) / g
+    elif opcode == "all-gather":
+        ring = rb * (g - 1) / g          # rb is the gathered size
+    elif opcode == "reduce-scatter":
+        ring = rb * (g - 1)              # rb is the scattered size
+    elif opcode in ("all-to-all", "ragged-all-to-all"):
+        ring = rb * (g - 1) / g
+    else:                                # collective-permute / broadcast
+        ring = rb
+    return CollectiveStat(opcode=opcode, count=mult, result_bytes=rb * mult,
+                          ring_bytes=ring * mult, dcn=dcn, group_size=g)
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "reshape", "after-all", "partition-id",
+               "replica-id", "iota", "broadcast"}
+
+
+def _fusion_dus_bytes(comps, instr: Instr) -> Optional[float]:
+    """If a fusion's root is a dynamic-update-slice, the buffer updates in
+    place: traffic = 2x the update window (read-modify-write), not the
+    whole (possibly layer-stacked) result buffer."""
+    for cname in _called_computations(instr):
+        c = comps.get(cname)
+        if c and c.instrs:
+            root = c.instrs[-1]
+            if root.opcode == "dynamic-update-slice" \
+                    and len(root.operands) > 1:
+                upd = c.by_name.get(root.operands[1])
+                if upd is not None:
+                    return 2.0 * upd.result_bytes()
+    return None
+
+
+def bf16_upcast_f32_bytes(text: str, min_bytes: int = 128 * 2**20) -> int:
+    """XLA:CPU materializes f32 shadow copies of large bf16 buffers (CPUs
+    lack native bf16 dots); TPU compiles keep them bf16. Returns the total
+    bytes of DISTINCT large f32 shapes produced by `convert` from bf16 —
+    one buffer per shape, since XLA's buffer assignment reuses them.
+    Used to derive `tpu_corrected_bytes` in the dry-run records."""
+    shapes = {}
+    for m in re.finditer(
+            r"= f32\[([0-9,]+)\][^ ]* convert\(", text):
+        dims = tuple(int(x) for x in m.group(1).split(",") if x)
+        b = 4 * int(np.prod(dims))
+        if b >= min_bytes:
+            shapes[dims] = b
+    return int(sum(shapes.values()))
+
+
+def analyze_hlo(text: str, *, pod_stride: int = 256) -> HloAnalysis:
+    comps, entry = parse_hlo(text)
+    res = HloAnalysis()
+    if entry is None:
+        return res
+
+    def operand_bytes(comp: Computation, instr: Instr,
+                      cap: Optional[int] = None) -> float:
+        """Sum of operand sizes; with `cap`, each operand is charged at
+        most `cap` bytes — loop fusions (kLoop/kOutput) that slice a big
+        loop-invariant operand only read a result-sized window per
+        iteration, so charging the full operand would overcount scanned
+        attention/params reads by the trip count."""
+        tot = 0.0
+        for nm in instr.operands:
+            op = comp.by_name.get(nm)
+            if op is not None:
+                b = op.result_bytes()
+                tot += min(b, cap) if cap is not None else b
+        return tot
+
+    seen_async: set = set()
+
+    def walk(name: str, mult: float, count_bytes: bool = True):
+        comp = comps.get(name)
+        if comp is None:
+            return
+
+        def add_bytes(instr):
+            if count_bytes:
+                res.bytes_accessed += (instr.result_bytes()
+                                       + operand_bytes(comp, instr)) * mult
+
+        def add_bytes_n(nbytes):
+            if count_bytes:
+                res.bytes_accessed += nbytes * mult
+
+        for instr in comp.instrs:
+            op = instr.opcode
+            base = op.replace("-start", "")
+            if op.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                res.collectives.append(
+                    _collective_stat(instr, mult, pod_stride))
+                add_bytes(instr)
+                continue
+            if op == "while":
+                conds = re.search(r"condition=%?([\w.\-]+)", instr.line)
+                bodys = re.search(r"body=%?([\w.\-]+)", instr.line)
+                trips = _while_trip_count(comps, conds.group(1)) if conds else 1
+                res.while_trips.append(trips)
+                if bodys:
+                    walk(bodys.group(1), mult * trips, count_bytes)
+                continue
+            if op == "conditional":
+                for c in _called_computations(instr):
+                    walk(c, mult, count_bytes)   # upper bound: all branches
+                continue
+            if op == "scatter":
+                upd = comp.by_name.get(instr.operands[2]) \
+                    if len(instr.operands) > 2 else None
+                add_bytes_n(2 * (upd.result_bytes() if upd
+                                 else instr.result_bytes()))
+                continue
+            if op in ("fusion", "map", "reduce", "reduce-window", "sort",
+                      "select-and-scatter", "custom-call"):
+                # count the fusion's HBM boundary once; recurse only to
+                # find dots (fusion internals stay in registers/VMEM).
+                # kLoop/kOutput fusions read at most a result-sized window
+                # of each operand per execution; kInput (reduction)
+                # fusions read operands fully.
+                for c in _called_computations(instr):
+                    walk(c, mult, False)
+                if count_bytes:
+                    rb = instr.result_bytes()
+                    dus = _fusion_dus_bytes(comps, instr)
+                    if dus is not None:
+                        # in-place dynamic-update-slice fusion: traffic is
+                        # the updated window, not the whole buffer
+                        res.bytes_accessed += dus * mult
+                    else:
+                        cap = None
+                        if op == "fusion" and "kind=kInput" not in instr.line:
+                            cap = max(rb, 1)
+                        res.bytes_accessed += (rb + operand_bytes(
+                            comp, instr, cap)) * mult
+                if "exponential" in instr.line or "tanh" in instr.line:
+                    res.transcendentals += mult
+                continue
+            if op == "call":
+                for c in _called_computations(instr):
+                    walk(c, mult, count_bytes)
+                continue
+            if op == "dot":
+                res.flops += _dot_flops(comp, instr) * mult
+                add_bytes(instr)
+                continue
+            if op == "convolution":
+                res.flops += _conv_flops(comp, instr) * mult
+                add_bytes(instr)
+                continue
+            if op in ("dynamic-slice", "gather", "slice"):
+                # reads only the sliced region (== result), not the full
+                # operand — charging the operand would overcount scanned
+                # layer-param reads by num_layers x
+                add_bytes_n(2 * instr.result_bytes())
+                continue
+            if op == "dynamic-update-slice":
+                upd = comp.by_name.get(instr.operands[1]) \
+                    if len(instr.operands) > 1 else None
+                add_bytes_n(2 * (upd.result_bytes() if upd
+                                 else instr.result_bytes()))
+                continue
+            if op == "convert":
+                # XLA:CPU's giant bf16->f32 shadow converts don't exist on
+                # TPU; skip them so the memory term stays hardware-true
+                src = comp.by_name.get(instr.operands[0]) \
+                    if instr.operands else None
+                if (instr.result_bytes() >= 128 * 2**20 and src is not None
+                        and src.shapes and src.shapes[0][0] == "bf16"):
+                    continue
+                add_bytes(instr)
+                continue
+            if op in _SKIP_BYTES:
+                continue
+            add_bytes(instr)
+
+    walk(entry, 1.0)
+    return res

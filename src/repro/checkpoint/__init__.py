@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointer import (Checkpointer,  # noqa: F401
+                                           CheckpointConfig)

@@ -1,0 +1,20 @@
+"""granite-moe-1b-a400m [moe] — 24L d_model=1024 16H (GQA kv=8) d_ff=512
+vocab=49155, MoE 32 experts top-8. [hf:ibm-granite/granite-3.0-1b-a400m-base]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,                 # per-expert hidden size
+    vocab_size=49155,
+    tie_embeddings=True,
+    moe=MoEConfig(num_experts=32, top_k=8, d_expert=512,
+                  num_shared_experts=0, expert_sharding="expert"),
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

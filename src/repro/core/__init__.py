@@ -1,0 +1,20 @@
+"""InfiniStore core: the paper's contribution as a composable library.
+
+ServerlessMemory (sliding-window GC-bucket management + PlaceChunk
+placement + slab pool) coupled with a persistent COS layer, RS erasure
+coding, insertion-log failure detection, and parallel recovery.
+"""
+from repro.core.clock import Clock  # noqa: F401
+from repro.core.cos import COS  # noqa: F401
+from repro.core.costmodel import CostLedger  # noqa: F401
+from repro.core.ec import ECConfig, RSCodec  # noqa: F401
+from repro.core.gc_window import (BucketState, GCConfig,  # noqa: F401
+                                  SlidingWindow)
+from repro.core.insertion_log import InsertionLog, PutRecord  # noqa: F401
+from repro.core.placement import PlacementManager  # noqa: F401
+from repro.core.recovery import RecoveryManager  # noqa: F401
+from repro.core.sms import SMS, Slab  # noqa: F401
+from repro.core.store import (ConcurrentPutError, InfiniStore,  # noqa: F401
+                              StoreConfig)
+from repro.core.versioning import (MetadataTable, Meta,  # noqa: F401
+                                   PersistentBuffer)

@@ -1,0 +1,125 @@
+"""Cloud Object Store (COS): the persistence layer (paper §5.2, §5.5).
+
+Backends: in-memory dict (tests/benchmarks) or a directory on disk
+(checkpointing). Eventual consistency is SIMULATED via a configurable
+visibility lag: a newly PUT object/version only becomes readable after
+`visibility_lag` clock time, which is exactly the behaviour the
+SCFS-style consistency-increasing GET loop (Appendix A) must mask.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+from repro.core.clock import Clock
+
+
+@dataclass
+class COSStats:
+    puts: int = 0
+    gets: int = 0
+    get_misses: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+
+    @property
+    def stored_ops(self) -> Tuple[int, int]:
+        return self.puts, self.gets
+
+
+class COS:
+    def __init__(self, clock: Clock, *, visibility_lag: float = 0.0,
+                 root: Optional[str] = None, workers: int = 8):
+        self.clock = clock
+        self.visibility_lag = visibility_lag
+        self.root = Path(root) if root else None
+        if self.root:
+            self.root.mkdir(parents=True, exist_ok=True)
+        self._mem: Dict[str, bytes] = {}
+        self._visible_at: Dict[str, float] = {}
+        self._lock = threading.RLock()
+        self.stats = COSStats()
+        self._pool = ThreadPoolExecutor(max_workers=workers,
+                                        thread_name_prefix="cos")
+
+    # ---- sync API -------------------------------------------------------
+
+    def _path(self, key: str) -> Path:
+        h = hashlib.sha1(key.encode()).hexdigest()
+        return self.root / h[:2] / h[2:]
+
+    def put(self, key: str, data: bytes) -> None:
+        with self._lock:
+            self.stats.puts += 1
+            self.stats.bytes_in += len(data)
+            self._visible_at[key] = self.clock.now() + self.visibility_lag
+            if self.root:
+                p = self._path(key)
+                p.parent.mkdir(parents=True, exist_ok=True)
+                tmp = p.with_suffix(".tmp")
+                tmp.write_bytes(data)
+                os.replace(tmp, p)
+            else:
+                self._mem[key] = bytes(data)
+
+    def get(self, key: str) -> Optional[bytes]:
+        with self._lock:
+            self.stats.gets += 1
+            vis = self._visible_at.get(key)
+            if vis is None or self.clock.now() < vis:
+                self.stats.get_misses += 1
+                return None
+            if self.root:
+                p = self._path(key)
+                if not p.exists():
+                    self.stats.get_misses += 1
+                    return None
+                data = p.read_bytes()
+            else:
+                data = self._mem.get(key)
+                if data is None:
+                    self.stats.get_misses += 1
+                    return None
+            self.stats.bytes_out += len(data)
+            return data
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            vis = self._visible_at.get(key)
+            return vis is not None and self.clock.now() >= vis
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._visible_at.pop(key, None)
+            if self.root:
+                p = self._path(key)
+                if p.exists():
+                    p.unlink()
+            else:
+                self._mem.pop(key, None)
+
+    def list_keys(self, prefix: str = "") -> list:
+        with self._lock:
+            return sorted(k for k in self._visible_at if k.startswith(prefix))
+
+    @property
+    def stored_bytes(self) -> int:
+        with self._lock:
+            if self.root:
+                return sum(self._path(k).stat().st_size
+                           for k in self._visible_at
+                           if self._path(k).exists())
+            return sum(len(self._mem.get(k, b"")) for k in self._visible_at)
+
+    # ---- async API (persistent-buffer path, §5.3.2) ----------------------
+
+    def put_async(self, key: str, data: bytes) -> Future:
+        return self._pool.submit(self.put, key, data)
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=True)

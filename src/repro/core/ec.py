@@ -1,0 +1,85 @@
+"""Reed-Solomon erasure-coding codec facade (paper: RS(10+2) by default).
+
+Splits a byte payload into k data chunks + p parity chunks; any k of the
+k+p chunks reconstruct the payload. Host math is numpy (table-based);
+`backend="pallas"` routes the GF(256) matmul through the TPU kernel
+(interpret mode on CPU) — bit-identical by tests/test_kernels_rs.py.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.kernels.rs_gf256.ref import (cauchy_parity_matrix,
+                                        gf_inv_matrix_np, gf_matmul_np)
+
+_HEADER = struct.Struct("<I")    # original length prefix
+
+
+@dataclass(frozen=True)
+class ECConfig:
+    k: int = 10
+    p: int = 2
+
+    @property
+    def n(self) -> int:
+        return self.k + self.p
+
+
+class RSCodec:
+    def __init__(self, cfg: ECConfig = ECConfig(), *, backend: str = "numpy"):
+        self.cfg = cfg
+        self.backend = backend
+        self._parity = cauchy_parity_matrix(cfg.k, cfg.p)
+        self._gen = np.concatenate(
+            [np.eye(cfg.k, dtype=np.uint8), self._parity], axis=0)
+
+    def _matmul(self, G: np.ndarray, X: np.ndarray) -> np.ndarray:
+        if self.backend == "pallas":
+            from repro.kernels.rs_gf256.ops import gf256_matmul
+            return np.asarray(gf256_matmul(G, X, backend="interpret"))
+        return gf_matmul_np(G, X)
+
+    # ---- encode -------------------------------------------------------------
+
+    def encode(self, payload: bytes) -> List[bytes]:
+        """payload -> k+p chunk payloads (equal length)."""
+        k, p = self.cfg.k, self.cfg.p
+        framed = _HEADER.pack(len(payload)) + payload
+        clen = -(-len(framed) // k)
+        buf = np.zeros((k, clen), np.uint8)
+        flat = np.frombuffer(framed, np.uint8)
+        buf.reshape(-1)[:len(flat)] = flat
+        parity = self._matmul(self._parity, buf)
+        return [buf[i].tobytes() for i in range(k)] + \
+               [parity[i].tobytes() for i in range(p)]
+
+    # ---- decode -------------------------------------------------------------
+
+    def decode(self, chunks: Dict[int, bytes]) -> bytes:
+        """chunks: {chunk_index: payload} with >= k entries. Returns the
+        original payload (any k of the k+p indices suffice)."""
+        k = self.cfg.k
+        if len(chunks) < k:
+            raise ValueError(
+                f"need >= {k} chunks to decode, got {len(chunks)}")
+        idx = sorted(chunks)[:k]
+        clen = len(chunks[idx[0]])
+        data_rows = np.zeros((k, clen), np.uint8)
+        if all(i < k for i in idx) and idx == list(range(k)):
+            for i in idx:
+                data_rows[i] = np.frombuffer(chunks[i], np.uint8)
+        else:
+            sub = self._gen[idx]                         # (k, k)
+            surv = np.stack([np.frombuffer(chunks[i], np.uint8)
+                             for i in idx])
+            data_rows = self._matmul(gf_inv_matrix_np(sub), surv)
+        framed = data_rows.reshape(-1).tobytes()
+        (orig_len,) = _HEADER.unpack(framed[:_HEADER.size])
+        return framed[_HEADER.size:_HEADER.size + orig_len]
+
+    def chunk_len(self, payload_len: int) -> int:
+        return -(-(payload_len + _HEADER.size) // self.cfg.k)

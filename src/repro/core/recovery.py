@@ -1,0 +1,209 @@
+"""Failure detection + local/parallel recovery (paper §5.5, Fig. 19-21).
+
+Detection: on invocation, the instance compares its local (term, hash)
+with the daemon's piggybacked view — mismatch means the instance was
+reclaimed and restarted cold (§5.5.1). The diff_rank delta decides local
+vs parallel recovery: if many chunks are missing, a pre-selected group of
+R recovery functions each restores `hash(key) % R == i`'s portion from
+COS in parallel and serves GETs for that portion until the storage
+function resumes (§5.5.2, RAMCloud-style but with *temporary* recovery
+placement to survive cascading reclamations).
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core.cos import COS
+from repro.core.insertion_log import InsertionLog, Piggyback
+from repro.core.sms import SMS, Slab
+
+
+def _chunk_shard(key: str, groups: int) -> int:
+    return int.from_bytes(hashlib.md5(key.encode()).digest()[:4],
+                          "little") % groups
+
+
+@dataclass
+class RecoveryStats:
+    detections: int = 0
+    local_recoveries: int = 0
+    parallel_recoveries: int = 0
+    chunks_recovered: int = 0
+    bytes_recovered: int = 0
+    recovery_seconds: float = 0.0
+
+
+@dataclass
+class RecoverySession:
+    fid: int
+    group: List[int]
+    pending: Set[str]
+    recovered: Dict[str, bytes] = field(default_factory=dict)
+    done: bool = False
+
+
+class RecoveryManager:
+    def __init__(self, sms: SMS, cos: COS, logs: Dict[int, InsertionLog], *,
+                 num_recovery_functions: int = 20, workers: int = 8,
+                 retain_seconds: float = 60.0):
+        self.sms = sms
+        self.cos = cos
+        self.logs = logs
+        self.R = num_recovery_functions
+        self.retain_seconds = retain_seconds
+        self.stats = RecoveryStats()
+        self._pool = ThreadPoolExecutor(max_workers=workers,
+                                        thread_name_prefix="recovery")
+        self._lock = threading.RLock()
+        # fid -> pre-selected recovery group (function ids)
+        self.recovery_groups: Dict[int, List[int]] = {}
+        # functions currently acting as a recovery function (one storage
+        # function each, §5.5.2 phase 1)
+        self._busy_recovery: Set[int] = set()
+        self.sessions: Dict[int, RecoverySession] = {}
+
+    # ---- group management (phase 1) -------------------------------------
+
+    def assign_group(self, fid: int, candidates: List[int]) -> List[int]:
+        """Pre-select (or refresh) the recovery group for a storage
+        function from the non-recovering pool."""
+        with self._lock:
+            group = [c for c in candidates
+                     if c != fid and c not in self._busy_recovery][:self.R]
+            self.recovery_groups[fid] = group
+            return group
+
+    def _claim_group(self, fid: int, candidates: List[int]) -> List[int]:
+        with self._lock:
+            group = self.recovery_groups.get(fid, [])
+            group = [g for g in group if g not in self._busy_recovery]
+            for c in candidates:
+                if len(group) >= self.R:
+                    break
+                if c != fid and c not in self._busy_recovery \
+                        and c not in group:
+                    group.append(c)
+            for g in group:
+                self._busy_recovery.add(g)
+            return group
+
+    def _release_group(self, group: List[int]) -> None:
+        with self._lock:
+            for g in group:
+                self._busy_recovery.discard(g)
+
+    # ---- detection (§5.5.1) ----------------------------------------------
+
+    def check_failed(self, slab: Slab, daemon_view: Piggyback) -> bool:
+        """Consistency check an invoked instance performs against the
+        piggybacked insertion info."""
+        failed = (slab.term != daemon_view.term
+                  or slab.log_hash != daemon_view.hash)
+        if failed and daemon_view.term > 0:
+            self.stats.detections += 1
+            return True
+        return False
+
+    def needs_parallel(self, slab: Slab, daemon_view: Piggyback) -> bool:
+        """diff_rank difference significantly larger than the recovery
+        group size => parallel recovery (§5.5.1)."""
+        diff = daemon_view.diff_rank - slab.diff_rank
+        return diff > self.R
+
+    # ---- recovery (§5.5.2) -------------------------------------------------
+
+    def _download(self, keys: List[str]) -> Dict[str, bytes]:
+        out: Dict[str, bytes] = {}
+        for key in keys:
+            data = self.cos.get(f"chunk/{key}")
+            if data is not None:
+                out[key] = data
+        return out
+
+    def recover_local(self, slab: Slab) -> int:
+        """The failed instance replays its manifest and restores every
+        missing chunk from COS by itself."""
+        t0 = time.monotonic()
+        log = self.logs.get(slab.fid)
+        if log is None:                       # no durable history: no-op
+            return 0
+        manifest = log.manifest()
+        missing = [k for k in manifest if slab.load(k) is None]
+        got = self._download(missing)
+        for key, data in got.items():
+            slab.store(key, data)
+        slab.term = log.term
+        slab.log_hash = log.last_hash
+        slab.diff_rank = log.diff_rank
+        self.stats.local_recoveries += 1
+        self.stats.chunks_recovered += len(got)
+        self.stats.bytes_recovered += sum(len(v) for v in got.values())
+        self.stats.recovery_seconds += time.monotonic() - t0
+        return len(got)
+
+    def recover_parallel(self, slab: Slab, candidates: List[int],
+                         *, on_ready: Optional[Callable] = None
+                         ) -> RecoverySession:
+        """Phase 2: fan the missing chunk set out over the recovery group;
+        each worker i downloads keys with hash(key) % R == i. Phase 3:
+        the storage instance reabsorbs the chunks and resumes service."""
+        t0 = time.monotonic()
+        log = self.logs.get(slab.fid)
+        if log is None:
+            return RecoverySession(fid=slab.fid, group=[], pending=set(),
+                                   done=True)
+        manifest = log.manifest()
+        missing = [k for k in manifest if slab.load(k) is None]
+        group = self._claim_group(slab.fid, candidates)
+        R = max(len(group), 1)
+        session = RecoverySession(fid=slab.fid, group=group,
+                                  pending=set(missing))
+        with self._lock:
+            self.sessions[slab.fid] = session
+
+        def worker(i: int) -> Dict[str, bytes]:
+            mine = [k for k in missing if _chunk_shard(k, R) == i]
+            got = self._download(mine)
+            with self._lock:
+                session.recovered.update(got)
+                session.pending -= set(got.keys())
+                # recovery functions hold the data TEMPORARILY in their
+                # cache space and serve GETs for their portion
+                if i < len(group) and group[i] in self.sms.slabs:
+                    rslab = self.sms.slabs[group[i]]
+                    for k2, v in got.items():
+                        rslab.cache_put(k2, v)
+            return got
+
+        futures = [self._pool.submit(worker, i) for i in range(R)]
+        wait(futures)
+        # phase 3: service resumption — the storage instance restores all
+        for key, data in session.recovered.items():
+            slab.store(key, data)
+        slab.term = log.term
+        slab.log_hash = log.last_hash
+        slab.diff_rank = log.diff_rank
+        session.done = True
+        self._release_group(group)
+        self.stats.parallel_recoveries += 1
+        self.stats.chunks_recovered += len(session.recovered)
+        self.stats.bytes_recovered += sum(
+            len(v) for v in session.recovered.values())
+        self.stats.recovery_seconds += time.monotonic() - t0
+        if on_ready:
+            on_ready(session)
+        return session
+
+    def serve_during_recovery(self, fid: int, key: str) -> Optional[bytes]:
+        """GETs rerouted to the recovery group while a storage function
+        recovers (§5.5.2 phase 2)."""
+        with self._lock:
+            session = self.sessions.get(fid)
+            if session is None:
+                return None
+            return session.recovered.get(key)

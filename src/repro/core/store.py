@@ -1,0 +1,459 @@
+"""InfiniStore facade: GET/PUT over the SMS + COS layers (paper §5).
+
+Wires together: CAS versioning + persistent buffer (Appendix A), RS
+erasure coding, PlaceChunk over the sliding-window GC-buckets, insertion
+logs, failure detection + local/parallel recovery, demand caching,
+compaction, large-object fragmentation, the two-queue scheme, and
+pay-per-access cost accounting.
+
+This is the control plane ("client daemon"); payloads are bytes. The
+serving/checkpoint layers put device-backed data through the same paths.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.clock import Clock
+from repro.core.cos import COS
+from repro.core.costmodel import CostLedger
+from repro.core.ec import ECConfig, RSCodec
+from repro.core.gc_window import BucketState, GCConfig, SlidingWindow
+from repro.core.insertion_log import InsertionLog, Piggyback, PutRecord
+from repro.core.placement import PlacementManager
+from repro.core.recovery import RecoveryManager
+from repro.core.sms import SMS
+from repro.core.versioning import MetadataTable, PersistentBuffer
+
+MB = 1024 * 1024
+
+
+@dataclass
+class StoreConfig:
+    ec: ECConfig = field(default_factory=ECConfig)       # RS(10+2)
+    function_capacity: int = 1536 * MB                   # Lambda memory
+    fragment_bytes: int = 200 * MB                       # §5.3.4
+    small_request_bytes: int = 1 * MB                    # two-queue split
+    gc: GCConfig = field(default_factory=GCConfig)
+    num_recovery_functions: int = 20
+    enable_recovery: bool = True       # False = SNR ablation (Fig. 22/23)
+    provider_idle_reclaim: float = 3600.0                # FaaS reclamation
+    cos_visibility_lag: float = 0.0
+    autoscale: str = "linear"
+    # estimated per-request function busy time model (seconds/byte + base),
+    # calibrated to the paper's ~75 MB/s per-instance bandwidth
+    busy_base_s: float = 0.001
+    busy_per_byte_s: float = 1.0 / (75 * MB)
+
+
+@dataclass
+class StoreStats:
+    puts: int = 0
+    gets: int = 0
+    sms_chunk_hits: int = 0
+    sms_chunk_misses: int = 0
+    buffer_hits: int = 0
+    migrations: int = 0
+    compactions: int = 0
+    degraded_hits: int = 0
+    small_requests: int = 0
+    large_requests: int = 0
+
+    @property
+    def hit_ratio(self) -> float:
+        tot = self.sms_chunk_hits + self.sms_chunk_misses
+        return self.sms_chunk_hits / tot if tot else 0.0
+
+
+class InfiniStore:
+    def __init__(self, cfg: StoreConfig = StoreConfig(), *,
+                 clock: Optional[Clock] = None,
+                 cos_root: Optional[str] = None, seed: int = 0):
+        self.cfg = cfg
+        self.clock = clock or Clock()
+        self.cos = COS(self.clock, visibility_lag=cfg.cos_visibility_lag,
+                       root=cos_root)
+        self.sms = SMS(self.clock)
+        self.window = SlidingWindow(cfg.gc, self.clock)
+        self.codec = RSCodec(cfg.ec)
+        self.mt = MetadataTable()
+        self.pb = PersistentBuffer()
+        self.logs: Dict[int, InsertionLog] = {}
+        self.ledger = CostLedger()
+        self.stats = StoreStats()
+        self.rng = np.random.default_rng(seed)
+        self._lock = threading.RLock()
+        # chunk key -> function id (the daemon's chunk-function mapping)
+        self.chunk_map: Dict[str, int] = {}
+        # daemon's piggybacked view of each function's insertion state
+        self.daemon_view: Dict[int, Piggyback] = {}
+        from repro.core.sms import hardcap
+        self.placement = PlacementManager(
+            cfg.ec.n, hardcap(cfg.function_capacity),
+            autoscale=cfg.autoscale,
+            new_function_cb=self._on_new_function)
+        self.recovery = RecoveryManager(
+            self.sms, self.cos, self.logs,
+            num_recovery_functions=cfg.num_recovery_functions)
+        self._pending_records: Dict[int, List[PutRecord]] = {}
+
+    # ------------------------------------------------------------------
+    # function lifecycle
+    # ------------------------------------------------------------------
+
+    def _on_new_function(self, fid: int, fg_id: int, capacity: int) -> None:
+        self.sms.add(fid, capacity)
+        self.logs[fid] = InsertionLog(fid, self.cos)
+        self.daemon_view[fid] = Piggyback()
+        self.window.latest.add_function(fid, fg_id)
+        self.recovery.assign_group(fid, list(self.sms.slabs.keys()))
+
+    def _invoke(self, fid: int, nbytes: int, category: str) -> None:
+        """Invoke a function instance: failure detection happens here, on
+        invocation, exactly as in the paper (§5.5.1)."""
+        slab = self.sms.get(fid)
+        busy = self.cfg.busy_base_s + nbytes * self.cfg.busy_per_byte_s
+        was_dead = not slab.alive
+        slab.invoke(busy)
+        gb = slab.capacity / (1024 ** 3)
+        self.ledger.invoke(category, gb=gb, seconds=busy)
+        view = self.daemon_view.get(fid, Piggyback())
+        failed = self.recovery.check_failed(slab, view) or was_dead
+        if failed and view.term > 0 and self.cfg.enable_recovery:
+            self._recover(fid)
+
+    def _recover(self, fid: int) -> None:
+        slab = self.sms.get(fid)
+        view = self.daemon_view[fid]
+        candidates = [f for f in self.sms.slabs
+                      if self.window.state_of_function(f)
+                      == BucketState.ACTIVE]
+        t0 = self.clock.now()
+        if self.recovery.needs_parallel(slab, view):
+            session = self.recovery.recover_parallel(slab, candidates)
+            nbytes = sum(len(v) for v in session.recovered.values())
+            for rfid in session.group:
+                self.ledger.invoke("recovery",
+                                   gb=self.sms.get(rfid).capacity / 1024**3,
+                                   seconds=self.cfg.busy_base_s
+                                   + nbytes / max(len(session.group), 1)
+                                   * self.cfg.busy_per_byte_s)
+        else:
+            n = self.recovery.recover_local(slab)
+            self.ledger.invoke("recovery", gb=slab.capacity / 1024**3,
+                               seconds=self.cfg.busy_base_s
+                               + n * self.cfg.busy_per_byte_s * 1024)
+        del t0
+
+    # ------------------------------------------------------------------
+    # PUT (Appendix A left + §5.3.1/§5.3.2)
+    # ------------------------------------------------------------------
+
+    def put(self, key: str, value: bytes) -> int:
+        """Strongly-consistent versioned PUT. Returns the version."""
+        self.stats.puts += 1
+        self._track_queue(len(value))
+        c = self.mt.prepare(key, 1)
+        while True:
+            m, ok = self.mt.cas(key, c)
+            if ok:
+                break
+            if not m.is_done():
+                m.wait(timeout=5.0)
+                raise ConcurrentPutError(key)
+            c.revise(m.ver + 1)
+        ver = c.ver
+        self.mt.store(f"{key}|{ver}", c)
+        fragments = [value[i:i + self.cfg.fragment_bytes]
+                     for i in range(0, max(len(value), 1),
+                                    self.cfg.fragment_bytes)]
+        c.num_fragments = len(fragments)
+        c.size = len(value)
+        ok_all = True
+        for fi, frag in enumerate(fragments):
+            fkey = f"{key}|{ver}/f{fi}"
+            self.pb.create(fkey, frag)              # persistent buffer
+            ok_all &= self._put_fragment(fkey, frag)
+        # PUT returns after SMS insertion; COS persistence is async and
+        # retried from the persistent buffer (§5.3.2). Here the insertion
+        # log append IS the durable point, then buffers release.
+        for fi in range(len(fragments)):
+            self.pb.release(f"{key}|{ver}/f{fi}")
+        ok = c.done(ok_all)
+        if ok and c.prev_ver > 0:
+            self._gc_old_version(key, c.prev_ver)
+        return ver if ok else -1
+
+    def _gc_old_version(self, key: str, ver: int) -> None:
+        """Free the superseded version's SMS chunks (COS retains them for
+        any concurrent reader still on the old version)."""
+        m = self.mt.load(f"{key}|{ver}")
+        nfrags = m.num_fragments if m is not None else 1
+        for fi in range(nfrags):
+            for idx in range(self.cfg.ec.n):
+                ckey = f"{key}|{ver}/f{fi}#{idx}"
+                fid = self.chunk_map.pop(ckey, None)
+                if fid is not None and fid in self.sms.slabs:
+                    slab = self.sms.get(fid)
+                    data = slab.load(ckey)
+                    if slab.delete(ckey) and data is not None:
+                        self.placement.release(fid, len(data))
+                self.window.unmark(ckey)
+
+    def _place_chunk(self, idx: int, nbytes: int) -> int:
+        """PlaceChunk with the SLAB as the authority on fullness: if the
+        placement ledger drifted (migrations/recovery add slab bytes it
+        doesn't see), seal the FG to resync and probe on."""
+        while True:
+            fid = self.placement.place_chunk(idx, nbytes)
+            slab = self.sms.get(fid)
+            if slab.used < slab.hardcap:
+                return fid
+            self.placement.seal_fg(self.placement.functions[fid].fg_id)
+
+    def _put_fragment(self, fkey: str, frag: bytes) -> bool:
+        chunks = self.codec.encode(frag)
+        per_fid_records: Dict[int, List[PutRecord]] = {}
+        for idx, chunk in enumerate(chunks):
+            ckey = f"{fkey}#{idx}"
+            fid = self._place_chunk(idx, len(chunk))
+            slab = self.sms.get(fid)
+            self._invoke(fid, len(chunk), "request")
+            if not slab.store(ckey, chunk):
+                return False
+            with self._lock:
+                self.chunk_map[ckey] = fid
+            # function writes its chunk to COS before returning (§5.2)
+            self.cos.put(f"chunk/{ckey}", chunk)
+            self.ledger.cos_op("put")
+            per_fid_records.setdefault(fid, []).append(
+                PutRecord(key=ckey, size=len(chunk), version=0))
+        # consolidate this window's records into insertion nodes (§5.5.1)
+        for fid, records in per_fid_records.items():
+            log = self.logs[fid]
+            log.append(records)
+            slab = self.sms.get(fid)
+            slab.term = log.term
+            slab.log_hash = log.last_hash
+            slab.diff_rank = log.diff_rank
+            self.daemon_view[fid] = log.piggyback()
+        return True
+
+    # ------------------------------------------------------------------
+    # GET (Appendix A right + §5.3.3)
+    # ------------------------------------------------------------------
+
+    def get(self, key: str) -> Optional[bytes]:
+        self.stats.gets += 1
+        m = self.mt.load(key)
+        attempts = 0
+        while m is not None and not m.is_done_ok() and attempts < 8:
+            if not m.is_done():                       # concurrent PUT
+                m.wait(timeout=5.0)
+            if m.is_done_ok():
+                break
+            if m.prev_ver <= 0:
+                return None
+            m = self.mt.load(f"{key}|{m.prev_ver}")
+            attempts += 1
+        if m is None or not m.is_done_ok():
+            return None
+        ver = m.ver
+        frags: List[bytes] = []
+        for fi in range(m.num_fragments):
+            fkey = f"{key}|{ver}/f{fi}"
+            buf = self.pb.load(fkey)                 # read-after-write
+            if buf is not None:
+                self.stats.buffer_hits += 1
+                frags.append(buf)
+                continue
+            frag = self._get_fragment(fkey)
+            if frag is None:
+                return None
+            frags.append(frag)
+        out = b"".join(frags)
+        self._track_queue(len(out))
+        return out[:m.size] if m.size else out
+
+    def _get_fragment(self, fkey: str) -> Optional[bytes]:
+        n, k = self.cfg.ec.n, self.cfg.ec.k
+        have: Dict[int, bytes] = {}
+        missing: List[int] = []
+        for idx in range(n):
+            ckey = f"{fkey}#{idx}"
+            fid = self.chunk_map.get(ckey)
+            if fid is None:
+                missing.append(idx)
+                continue
+            data = self._read_chunk(ckey, fid)
+            if data is not None:
+                have[idx] = data
+                if len(have) >= k:
+                    break                            # EC: k chunks suffice
+            else:
+                missing.append(idx)
+        if len(have) < k:
+            # on-demand migration from COS (§5.3.3)
+            for idx in missing:
+                ckey = f"{fkey}#{idx}"
+                data = self._cos_read_consistent(f"chunk/{ckey}")
+                if data is not None:
+                    have[idx] = data
+                    self._demand_cache(ckey, data)
+                if len(have) >= k:
+                    break
+        if len(have) < k:
+            return None
+        return self.codec.decode(have)
+
+    def _read_chunk(self, ckey: str, fid: int) -> Optional[bytes]:
+        slab = self.sms.slabs.get(fid)
+        if slab is None:                              # function released
+            self.stats.sms_chunk_misses += 1
+            return None
+        state = self.window.state_of_function(fid)
+        if state is None or state == BucketState.RELEASED:
+            self.stats.sms_chunk_misses += 1
+            return None
+        self._invoke(fid, 0, "request")
+        data = self.recovery.serve_during_recovery(fid, ckey)
+        if data is None:
+            data = slab.load(ckey)
+        if data is None:
+            self.stats.sms_chunk_misses += 1
+            return None
+        self.stats.sms_chunk_hits += 1
+        self.ledger.invoke("request", gb=slab.capacity / 1024**3,
+                           seconds=len(data) * self.cfg.busy_per_byte_s)
+        # mark re-accessed data for compaction (§5.3.3)
+        self.window.mark(ckey)
+        if state == BucketState.DEGRADED:
+            self.stats.degraded_hits += 1
+            self._migrate_chunks([ckey])              # sync migration
+        return data
+
+    def _cos_read_consistent(self, key: str, max_tries: int = 16
+                             ) -> Optional[bytes]:
+        """SCFS-style consistency-increasing loop: retry until the
+        eventually-consistent COS shows the object (Appendix A)."""
+        for _ in range(max_tries):
+            data = self.cos.get(key)
+            self.ledger.cos_op("get")
+            if data is not None:
+                return data
+            if self.clock.is_wall:
+                import time
+                time.sleep(0.005)
+            else:
+                self.clock.advance(max(self.cfg.cos_visibility_lag / 4,
+                                       0.001))
+        return None
+
+    # ------------------------------------------------------------------
+    # demand caching + compaction + GC
+    # ------------------------------------------------------------------
+
+    def _demand_cache(self, ckey: str, data: bytes) -> None:
+        """GET-triggered caching into the latest bucket's cache space
+    (§5.3.3 'cache functions'); evictable, not counted against HARDCAP."""
+        fid = self.placement.get_open_funcs(0)[0]
+        self.sms.get(fid).cache_put(ckey, data)
+        with self._lock:
+            self.chunk_map[ckey] = fid
+        self.stats.migrations += 1
+
+    def _migrate_chunks(self, ckeys: List[str]) -> None:
+        """Compaction: move marked/hit chunks into the latest GC-bucket by
+        loading them from COS into newly placed slots (§5.3.3)."""
+        for ckey in ckeys:
+            data = self.cos.get(f"chunk/{ckey}")
+            self.ledger.cos_op("get")
+            if data is None:
+                old = self.chunk_map.get(ckey)
+                data = self.sms.slabs[old].load(ckey) if old is not None \
+                    and old in self.sms.slabs else None
+            if data is None:
+                continue
+            idx = int(ckey.rsplit("#", 1)[1])
+            fid = self._place_chunk(idx, len(data))
+            slab = self.sms.get(fid)
+            self._invoke(fid, len(data), "request")
+            if slab.store(ckey, data):
+                old = self.chunk_map.get(ckey)
+                with self._lock:
+                    self.chunk_map[ckey] = fid
+                if old is not None and old != fid and old in self.sms.slabs:
+                    self.sms.get(old).delete(ckey)
+                    self.placement.release(old, len(data))
+                log = self.logs[fid]
+                log.append([PutRecord(key=ckey, size=len(data), version=0)])
+                slab.term, slab.log_hash, slab.diff_rank = \
+                    log.term, log.last_hash, log.diff_rank
+                self.daemon_view[fid] = log.piggyback()
+                self.window.unmark(ckey)
+                self.stats.compactions += 1
+
+    def gc_tick(self) -> None:
+        """Run due GC + one compaction round + warmups. Call periodically
+        (the serving engine ticks this; tests drive the clock)."""
+        if self.window.due():
+            ev = self.window.run_gc()
+            # carry open FGs into the new bucket (Fig. 4c)
+            for fg_id in self.placement.carry_over_open_fgs():
+                for fid in self.placement.fgs[fg_id].fids:
+                    ev.new_bucket.add_function(fid, fg_id)
+            for fid in ev.released_functions:
+                slab = self.sms.slabs.get(fid)
+                if slab is not None:
+                    slab.reclaim()                    # provider reclaims
+        round_keys = self.window.take_compaction_round(self.rng)
+        if round_keys:
+            self._migrate_chunks(round_keys)
+        self._warmup_tick()
+        # provider-side reclamation of long-idle instances
+        self.sms.reclaim_idle(self.cfg.provider_idle_reclaim)
+
+    def _warmup_tick(self) -> None:
+        """No-op heartbeat per FMP: active buckets every active_warmup,
+        degraded every degraded_warmup (§5.3)."""
+        now = self.clock.now()
+        for fid, slab in self.sms.slabs.items():
+            period = self.window.warmup_period(fid)
+            if period is None or not slab.alive:
+                continue
+            if now - slab.last_invoked >= period:
+                slab.invoke(0.001)
+                self.ledger.invoke("warmup", gb=slab.capacity / 1024**3,
+                                   seconds=0.001)
+
+    # ------------------------------------------------------------------
+    # misc
+    # ------------------------------------------------------------------
+
+    def _track_queue(self, nbytes: int) -> None:
+        if nbytes <= self.cfg.small_request_bytes:
+            self.stats.small_requests += 1
+        else:
+            self.stats.large_requests += 1
+
+    def inject_failure(self, fid: int) -> None:
+        """Simulate provider reclaiming an instance (tests/benchmarks)."""
+        self.sms.get(fid).reclaim()
+
+    def num_functions(self, state: Optional[BucketState] = None) -> int:
+        if state is None:
+            return len(self.sms.slabs)
+        return sum(len(b.function_ids)
+                   for b in self.window.buckets(state))
+
+    def snapshot_metadata(self):
+        return {"mt": self.mt.snapshot(),
+                "chunk_map": dict(self.chunk_map)}
+
+
+class ConcurrentPutError(RuntimeError):
+    def __init__(self, key: str):
+        super().__init__(f"concurrent PUT in flight for {key!r}; retry")

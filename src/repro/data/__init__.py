@@ -1,0 +1,3 @@
+from repro.data.pipeline import TokenPipeline, make_batch  # noqa: F401
+from repro.data.traces import (azure_blob_trace, ibm_registry_trace,  # noqa: F401
+                               TraceEvent)

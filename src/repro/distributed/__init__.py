@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (  # noqa: F401
+    make_rules, sharding_for, tree_shardings)

@@ -1,0 +1,151 @@
+"""Logical-axis sharding rules (t5x-style), specialized per architecture.
+
+Model code annotates every param/cache leaf with logical axis names
+("embed", "heads", "vocab", ...). `make_rules(cfg, mesh)` maps those to
+mesh axes:
+
+  * embed        -> data   (FSDP/ZeRO: params, grads, optimizer state all
+                            sharded over the data axis; GSPMD inserts the
+                            per-layer all-gather / reduce-scatter)
+  * vocab/ff/heads/lru -> model  (tensor parallel)
+  * kv_heads     -> model only when num_kv_heads % tp == 0, else the kv
+                    heads are replicated and head_dim is sharded instead
+                    (DESIGN.md §4: GQA with K < TP)
+  * experts      -> model for "expert" sharding (EP), expert_ff for "ffn"
+  * batch        -> (pod, data) on the multi-pod mesh
+
+Uneven head counts (e.g. 40 q heads over tp=16) are allowed: GSPMD pads.
+The padding waste is measured, not hidden — see EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, *,
+               flash_decode: bool = False) -> Dict[str, Axis]:
+    """flash_decode: for GQA archs with K < TP, shard the KV cache over
+    the SEQUENCE/pages dim instead of head_dim (flash-decoding style) —
+    attention scores are computed per S-shard and merged with tiny
+    all-reduces instead of all-gathering the cache every layer."""
+    tp = tp_size(mesh)
+    kv_even = cfg.num_kv_heads % tp == 0
+    rules: Dict[str, Axis] = {
+        "batch": dp_axes(mesh),
+        "vocab": "model",
+        "embed": "data" if "data" in mesh.axis_names else None,
+        "ff": "model",
+        "heads": "model",
+        "heads_d": "model",          # rwkv fused (H*hs) output dim
+        "kv_heads": "model" if kv_even else None,
+        "head_dim": (None if kv_even or flash_decode else "model"),
+        "kv_seq": ("model" if flash_decode and not kv_even else None),
+        "lru": "model",
+        "lru_blocks": None,          # block-diag gate blocks stay replicated
+        "layers": None,
+        "experts": None,
+        "expert_ff": None,
+    }
+    if cfg.moe is not None:
+        if cfg.moe.expert_sharding == "expert":
+            rules["experts"] = "model"
+        else:
+            rules["expert_ff"] = "model"
+    return rules
+
+
+def spec_for(axes: Tuple, rules: Dict[str, Axis],
+             shape: Optional[Tuple[int, ...]] = None,
+             mesh: Optional[Mesh] = None) -> P:
+    """Logical axes -> PartitionSpec. If `shape` (+mesh) is given, mesh
+    axes that do not evenly divide the dim are dropped (replicated): jit
+    ARGUMENT shardings must divide evenly; intermediates may stay uneven
+    (GSPMD pads — the waste shows up in the roofline, by design)."""
+    parts = []
+    for i, ax in enumerate(axes):
+        r = None if ax is None else rules.get(ax, None)
+        if r is not None and shape is not None and mesh is not None:
+            names = (r,) if isinstance(r, str) else tuple(r)
+            total = 1
+            for nm in names:
+                total *= mesh.shape.get(nm, 1)
+            if total == 0 or shape[i] % total != 0:
+                r = None
+        parts.append(r)
+    return P(*parts)
+
+
+def sharding_for(axes: Tuple, mesh: Mesh, rules: Dict[str, Axis],
+                 shape: Optional[Tuple[int, ...]] = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, rules, shape, mesh))
+
+
+def _axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def tree_shardings(axes_tree: Any, mesh: Mesh, rules: Dict[str, Axis],
+                   shapes_tree: Any = None):
+    """Map a pytree of logical-axis tuples to NamedShardings. When
+    `shapes_tree` (matching pytree of ShapeDtypeStructs/arrays) is given,
+    non-dividing mesh axes are dropped per-leaf."""
+    if shapes_tree is None:
+        return jax.tree.map(lambda axes: sharding_for(axes, mesh, rules),
+                            axes_tree, is_leaf=_axes_leaf)
+    flat_axes, treedef = jax.tree.flatten(axes_tree, is_leaf=_axes_leaf)
+    flat_shapes = jax.tree.flatten(shapes_tree)[0]
+    if len(flat_axes) != len(flat_shapes):
+        raise ValueError(
+            f"axes tree ({len(flat_axes)} leaves) does not match shapes "
+            f"tree ({len(flat_shapes)} leaves)")
+    out = [sharding_for(a, mesh, rules, tuple(s.shape))
+           for a, s in zip(flat_axes, flat_shapes)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints
+# --------------------------------------------------------------------------
+# GSPMD alone resolves the embedding-gather conflict (batch over data vs
+# d_model over data) by REPLICATING the batch — measured 117 GiB/device on
+# qwen1.5-0.5b train_4k. Model code therefore pins activation shardings via
+# `constrain(x, logical_axes)`; the rules are installed process-globally by
+# build_cell()/the launchers before tracing, and `constrain` is a no-op when
+# no rules are installed (eager unit tests, single-device smoke runs).
+
+_RULES: Optional[Dict[str, Axis]] = None
+
+
+def set_global_rules(rules: Optional[Dict[str, Axis]]) -> None:
+    global _RULES
+    _RULES = rules
+
+
+def get_global_rules() -> Optional[Dict[str, Axis]]:
+    return _RULES
+
+
+def constrain(x, axes: Tuple):
+    if _RULES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec_for(axes, _RULES))

@@ -1,0 +1,26 @@
+"""Public op: paged decode attention with backend dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention_pallas
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, lens, *,
+                           backend: str = "auto"):
+    """Decode attention over an SMS-paged KV pool.
+
+    backend: "pallas" (compiled on TPU / interpret on CPU),
+             "interpret" (force interpret), "ref" (XLA gather fallback),
+             "auto" (pallas on TPU else ref).
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "pallas" or (backend == "auto" and on_tpu):
+        return paged_decode_attention_pallas(q, k_pool, v_pool, block_table,
+                                             lens, interpret=not on_tpu)
+    if backend == "interpret":
+        return paged_decode_attention_pallas(q, k_pool, v_pool, block_table,
+                                             lens, interpret=True)
+    return paged_decode_attention_ref(q, k_pool, v_pool, block_table,
+                                      lens).astype(q.dtype)

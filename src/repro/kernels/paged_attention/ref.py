@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Gathers the paged pool into logical order (the XLA fallback path the
+dry-run measures — it materializes a full cache copy) and runs masked
+decode attention. The Pallas kernel must match this bit-for-bit at f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_table, lens):
+    """q: (B, H, hd); k_pool/v_pool: (B, P, ps, K, hd);
+    block_table: (B, P) int32 logical->physical; lens: (B,) int32 number
+    of valid tokens. Returns (B, H, hd) f32."""
+    B, H, hd = q.shape
+    _, P, ps, K, hd2 = k_pool.shape
+    assert hd == hd2 and H % K == 0
+    idx = block_table[:, :, None, None, None]
+    k = jnp.take_along_axis(k_pool, idx, axis=1).reshape(B, P * ps, K, hd)
+    v = jnp.take_along_axis(v_pool, idx, axis=1).reshape(B, P * ps, K, hd)
+    G = H // K
+    qk = q.reshape(B, K, G, hd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bkgd,btkd->bkgt", qk, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(P * ps)
+    mask = pos[None, :] < lens[:, None]                  # (B, T)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd)

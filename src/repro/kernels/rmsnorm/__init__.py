@@ -1,0 +1,2 @@
+from repro.kernels.rmsnorm.ops import rms_norm_op  # noqa: F401
+from repro.kernels.rmsnorm.ref import rms_norm_ref  # noqa: F401

@@ -1,0 +1,16 @@
+"""Public op: fused RMSNorm with backend dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rms_norm_pallas
+from repro.kernels.rmsnorm.ref import rms_norm_ref
+
+
+def rms_norm_op(x, scale, eps: float = 1e-6, *, backend: str = "auto"):
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "pallas" or (backend == "auto" and on_tpu):
+        return rms_norm_pallas(x, scale, eps, interpret=not on_tpu)
+    if backend == "interpret":
+        return rms_norm_pallas(x, scale, eps, interpret=True)
+    return rms_norm_ref(x, scale, eps)

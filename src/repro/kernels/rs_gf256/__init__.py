@@ -1,0 +1,4 @@
+from repro.kernels.rs_gf256.ops import gf256_matmul  # noqa: F401
+from repro.kernels.rs_gf256.ref import (  # noqa: F401
+    EXP_TABLE, LOG_TABLE, gf256_matmul_ref, gf_inv_matrix_np,
+    gf_matmul_np, gf_mul_np)

@@ -1,0 +1,25 @@
+"""Public op: gf256_matmul with backend dispatch.
+
+On TPU the Pallas kernel runs compiled; everywhere else it runs in
+interpret mode (exercised by tests) or falls back to the jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rs_gf256.kernel import gf256_matmul_pallas
+from repro.kernels.rs_gf256.ref import gf256_matmul_ref
+
+
+def gf256_matmul(G, X, *, backend: str = "auto"):
+    """OUT = G @ X over GF(256). G: (m,k) uint8, X: (k,L) uint8.
+
+    backend: "pallas" (compiled on TPU, interpret elsewhere),
+             "ref" (jnp oracle), "auto" (pallas on TPU else ref).
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "pallas" or (backend == "auto" and on_tpu):
+        return gf256_matmul_pallas(G, X, interpret=not on_tpu)
+    if backend == "interpret":
+        return gf256_matmul_pallas(G, X, interpret=True)
+    return gf256_matmul_ref(G, X)

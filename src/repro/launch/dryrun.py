@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+# Multi-pod dry-run: lower + compile every (architecture × input shape)
+# cell on the production meshes and record memory / cost / collective
+# analysis for EXPERIMENTS.md §Dry-run and §Roofline.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --all
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+#       --shape train_4k --mesh both
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis.hlo import analyze_hlo, bf16_upcast_f32_bytes
+from repro.configs import (ARCH_NAMES, SHAPES_BY_NAME, get_config,
+                           shapes_for)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+DEFAULT_OUT = Path("experiments/dryrun.jsonl")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             kv_layout: str = "paged", attn_impl: str = "masked",
+             wkv_impl: str = "chunked", save_hlo: bool = False,
+             extra_tag: str = "", expert_sharding: str = "",
+             microbatches: int = 0, grad_compress: bool = False,
+             flash_decode: bool = False) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if expert_sharding and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, expert_sharding=expert_sharding))
+    shape = SHAPES_BY_NAME[shape_name]
+    if microbatches and shape.kind == "train":
+        from repro.launch import specs as specs_lib
+        specs_lib.TRAIN_MICROBATCHES[arch] = microbatches
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(mesh.size), "kind": shape.kind,
+        "kv_layout": kv_layout, "attn_impl": attn_impl,
+        "wkv_impl": wkv_impl, "tag": extra_tag,
+    }
+    t0 = time.time()
+    try:
+        cell = build_cell(cfg, shape, mesh, kv_layout=kv_layout,
+                          attn_impl=attn_impl, wkv_impl=wkv_impl,
+                          grad_compress=grad_compress,
+                          flash_decode=flash_decode)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(cell["fn"],
+                             in_shardings=cell["in_shardings"],
+                             out_shardings=cell["out_shardings"],
+                             donate_argnums=cell["donate_argnums"])
+            lowered = jitted.lower(*cell["args"])
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        rec["memory"]["total_bytes"] = (
+            rec["memory"]["argument_bytes"] + rec["memory"]["output_bytes"]
+            + rec["memory"]["temp_bytes"] - rec["memory"]["alias_bytes"])
+        txt = compiled.as_text()
+        upcast = bf16_upcast_f32_bytes(txt)
+        rec["memory"]["f32_upcast_bytes"] = upcast
+        rec["memory"]["tpu_corrected_bytes"] = max(
+            rec["memory"]["total_bytes"] - upcast,
+            rec["memory"]["argument_bytes"] + rec["memory"]["output_bytes"]
+            - rec["memory"]["alias_bytes"])
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost"] = {k: float(v) for k, v in ca.items()
+                           if isinstance(v, (int, float))
+                           and k in ("flops", "bytes accessed",
+                                     "transcendentals")}
+        rec["hlo_chars"] = len(txt)
+        analysis = analyze_hlo(txt, pod_stride=256 if multi_pod else 10**9)
+        rec["analysis"] = analysis.summary()
+        rec["collectives_by_op"] = {}
+        for c in analysis.collectives:
+            key = f"{c.opcode}{'_dcn' if c.dcn else ''}"
+            d = rec["collectives_by_op"].setdefault(
+                key, {"count": 0.0, "result_bytes": 0.0, "ring_bytes": 0.0})
+            d["count"] += c.count
+            d["result_bytes"] += c.result_bytes
+            d["ring_bytes"] += c.ring_bytes
+        rec["while_trips"] = analysis.while_trips[:50]
+        rec["param_count"] = int(cell["model"].param_count())
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        rec["ok"] = True
+        if save_hlo:
+            p = Path("experiments/hlo")
+            p.mkdir(parents=True, exist_ok=True)
+            (p / f"{arch}_{shape_name}_{rec['mesh']}{extra_tag}.txt"
+             ).write_text(txt)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        rec["elapsed_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def cells(arch_filter=None, shape_filter=None):
+    for arch in ARCH_NAMES:
+        if arch_filter and arch != arch_filter:
+            continue
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            if shape_filter and shape.name != shape_filter:
+                continue
+            yield arch, shape.name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--kv-layout", default="paged",
+                    choices=["paged", "contiguous"])
+    ap.add_argument("--attn-impl", default="masked", choices=["masked", "tri"])
+    ap.add_argument("--wkv-impl", default="chunked",
+                    choices=["chunked", "scan"])
+    ap.add_argument("--expert-sharding", default="",
+                    choices=["", "expert", "ffn"])
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="int8 error-feedback grad exchange over the pod "
+                         "(DCN) axis")
+    ap.add_argument("--flash-decode", action="store_true",
+                    help="shard the KV cache over sequence/pages when "
+                         "kv_heads < TP (flash-decoding style)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    done = set()
+    if args.skip_existing and out.exists():
+        for line in out.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if r.get("ok"):
+                    done.add((r["arch"], r["shape"], r["mesh"], r.get("tag", "")))
+            except json.JSONDecodeError:
+                pass
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    todo = list(cells(args.arch, args.shape))
+    if not todo:
+        raise SystemExit(f"no cells match arch={args.arch} shape={args.shape}")
+    n_ok = n_fail = 0
+    with out.open("a") as f:
+        for arch, shape_name in todo:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                if (arch, shape_name, mesh_name, args.tag) in done:
+                    print(f"[skip] {arch} {shape_name} {mesh_name}")
+                    continue
+                print(f"[run ] {arch} {shape_name} {mesh_name} ...",
+                      flush=True)
+                rec = run_cell(arch, shape_name, multi,
+                               kv_layout=args.kv_layout,
+                               attn_impl=args.attn_impl,
+                               wkv_impl=args.wkv_impl,
+                               expert_sharding=args.expert_sharding,
+                               microbatches=args.microbatches,
+                               grad_compress=args.grad_compress,
+                               flash_decode=args.flash_decode,
+                               save_hlo=args.save_hlo, extra_tag=args.tag)
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+                if rec["ok"]:
+                    n_ok += 1
+                    m = rec["memory"]["total_bytes"] / 2**30
+                    print(f"   ok: {m:.2f} GiB/dev, "
+                          f"flops/dev={rec['analysis']['flops']:.3e}, "
+                          f"compile={rec['compile_s']}s", flush=True)
+                else:
+                    n_fail += 1
+                    print(f"   FAIL: {rec['error'][:200]}", flush=True)
+    print(f"done: {n_ok} ok, {n_fail} failed -> {out}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

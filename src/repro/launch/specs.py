@@ -1,0 +1,119 @@
+"""Input specs (ShapeDtypeStruct stand-ins) for every (arch × shape) cell.
+
+Shardable, weak-type-correct, zero allocation — the dry-run lowers against
+these. Each spec comes with a logical-axis tree so launch code can derive
+in_shardings from the same rules as the params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PyTree = Any
+
+# Per-arch gradient-accumulation microbatch counts for train_4k, sized so
+# one microbatch's activations fit HBM next to the ZeRO-sharded state
+# (DESIGN.md §4; derivation in EXPERIMENTS.md §Dry-run).
+TRAIN_MICROBATCHES: Dict[str, int] = {
+    "qwen1.5-0.5b": 1,
+    "qwen3-1.7b": 2,
+    "qwen3-14b": 8,
+    "qwen1.5-110b": 16,
+    "internvl2-1b": 1,
+    "rwkv6-3b": 4,
+    "recurrentgemma-2b": 4,
+    "qwen2-moe-a2.7b": 4,
+    "granite-moe-1b-a400m": 2,
+    "musicgen-large": 4,
+}
+
+
+def num_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                     dp: int = 1) -> int:
+    """Gradient-accumulation depth, clamped so each microbatch's batch dim
+    stays divisible by the data-parallel degree."""
+    if shape.kind != "train":
+        return 1
+    n = TRAIN_MICROBATCHES.get(cfg.name, shape.num_microbatches)
+    n = max(1, min(n, shape.global_batch // max(dp, 1)))
+    while n > 1 and (shape.global_batch % n
+                     or (shape.global_batch // n) % max(dp, 1)):
+        n -= 1
+    return n
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, dp: int = 1
+                      ) -> Tuple[PyTree, PyTree]:
+    """Returns (specs, logical_axes). Leading dim = microbatches (scanned),
+    second dim = per-microbatch global batch (sharded over dp)."""
+    n = num_microbatches(cfg, shape, dp)
+    B = shape.global_batch // n
+    S = shape.seq_len
+    i32, bf16 = jnp.int32, jnp.dtype(cfg.dtype)
+    if cfg.frontend.kind == "audio":
+        C = cfg.frontend.num_codebooks
+        specs = {"frame_embeds": _sds((n, B, S, cfg.d_model), bf16),
+                 "labels": _sds((n, B, S, C), i32)}
+        axes = {"frame_embeds": (None, "batch", None, None),
+                "labels": (None, "batch", None, None)}
+    elif cfg.frontend.kind == "vlm":
+        Pn = cfg.frontend.num_prefix_embeds
+        St = S - Pn
+        specs = {"tokens": _sds((n, B, St), i32),
+                 "patch_embeds": _sds((n, B, Pn, cfg.frontend.patch_embed_dim),
+                                      bf16),
+                 "labels": _sds((n, B, St), i32)}
+        axes = {"tokens": (None, "batch", None),
+                "patch_embeds": (None, "batch", None, None),
+                "labels": (None, "batch", None)}
+    else:
+        specs = {"tokens": _sds((n, B, S), i32),
+                 "labels": _sds((n, B, S), i32)}
+        axes = {"tokens": (None, "batch", None),
+                "labels": (None, "batch", None)}
+    return specs, axes
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Tuple[PyTree, PyTree]:
+    B, S = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.dtype(cfg.dtype)
+    if cfg.frontend.kind == "audio":
+        return ({"frame_embeds": _sds((B, S, cfg.d_model), bf16)},
+                {"frame_embeds": ("batch", None, None)})
+    if cfg.frontend.kind == "vlm":
+        Pn = cfg.frontend.num_prefix_embeds
+        return ({"tokens": _sds((B, S - Pn), i32),
+                 "patch_embeds": _sds((B, Pn, cfg.frontend.patch_embed_dim),
+                                      bf16)},
+                {"tokens": ("batch", None),
+                 "patch_embeds": ("batch", None, None)})
+    return ({"tokens": _sds((B, S), i32)}, {"tokens": ("batch", None)})
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Tuple[PyTree, PyTree]:
+    B = shape.global_batch
+    i32, bf16 = jnp.int32, jnp.dtype(cfg.dtype)
+    if cfg.frontend.kind == "audio":
+        return ({"frame_embed": _sds((B, 1, cfg.d_model), bf16)},
+                {"frame_embed": ("batch", None, None)})
+    return ({"token": _sds((B, 1), i32)}, {"token": ("batch", None)})
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """The dry-run entry point: ShapeDtypeStruct stand-ins for every model
+    input of this cell (training batch, prefill prompt, or decode batch)."""
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    return decode_batch_specs(cfg, shape)

@@ -1,0 +1,1 @@
+from repro.models.registry import Model, build_model  # noqa: F401

@@ -1,0 +1,133 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+Tokens pick top-k experts; (token, expert) pairs are sorted by expert id
+and packed into a static (E, C, d) dispatch buffer (capacity
+C = ceil(T*k/E * capacity_factor)); overflow tokens are dropped (their
+residual path passes through unchanged, as in Switch/GShard). All shapes
+are static, so the same code lowers for the dry-run and runs eagerly for
+tests. `moe_ffn_dense` is the O(E)-FLOPs oracle used by property tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+
+def router_probs(cfg: ModelConfig, p: Dict[str, jax.Array], xf: jax.Array):
+    """xf: (T, d) -> (probs (T,E) f32, gate_vals (T,k), expert_ids (T,k))."""
+    m = cfg.moe
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = lax.top_k(probs, m.top_k)
+    if m.renorm_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+    return probs, gate_vals, expert_ids
+
+
+def aux_load_balance(probs: jax.Array, expert_ids: jax.Array,
+                     num_experts: int) -> jax.Array:
+    """Switch-style load-balance loss: E * sum_e f_e * P_e."""
+    T, k = expert_ids.shape
+    counts = jnp.zeros((num_experts,), jnp.float32).at[
+        expert_ids.reshape(-1)].add(1.0)
+    f = counts / (T * k)
+    P = probs.mean(axis=0)
+    return num_experts * jnp.sum(f * P)
+
+
+def capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    """Per-group expert capacity (groups = sequences; see moe_ffn)."""
+    m = cfg.moe
+    c = int(-(-group_tokens * m.top_k * m.capacity_factor // m.num_experts))
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def dispatch_indices(expert_ids: jax.Array, gate_vals: jax.Array,
+                     num_experts: int, cap: int):
+    """Sort (token, expert) pairs by expert and pack into (E*C,) slots.
+
+    Returns (disp, gate_slot): disp[(e*C + c)] = token index (or T if the
+    slot is empty / token dropped), gate_slot = the matching gate weight.
+    """
+    T, k = expert_ids.shape
+    flat_e = expert_ids.reshape(-1)                       # (T*k,)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(T * k) - first
+    valid = pos_in_e < cap
+    slot = jnp.where(valid, sorted_e * cap + pos_in_e,
+                     num_experts * cap)                   # OOB -> dropped
+    token_of = sort_idx // k
+    disp = jnp.full((num_experts * cap,), T, jnp.int32)
+    disp = disp.at[slot].set(token_of.astype(jnp.int32), mode="drop")
+    gate_flat = gate_vals.reshape(-1)[sort_idx]
+    gate_slot = jnp.zeros((num_experts * cap,), jnp.float32)
+    gate_slot = gate_slot.at[slot].set(gate_flat, mode="drop")
+    return disp, gate_slot
+
+
+def moe_ffn(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar).
+
+    GShard-style GROUP-LOCAL dispatch: each sequence is a dispatch group
+    with its own capacity C = ceil(S*k*cf/E), so sort/gather/scatter all
+    stay sharded over the batch axis. (A global sort produced an E*C =
+    5.2M-slot replicated gather — 40 GiB/device on prefill_32k; see
+    EXPERIMENTS.md §Perf.)
+    """
+    from repro.distributed.sharding import constrain
+    from repro.models.layers import activate
+    m = cfg.moe
+    B, S, d = x.shape
+    probs, gate_vals, expert_ids = router_probs(
+        cfg, p, x.reshape(B * S, d))
+    aux = aux_load_balance(probs, expert_ids, m.num_experts)
+    cap = capacity(cfg, S)
+    gate_g = gate_vals.reshape(B, S, m.top_k)
+    ids_g = expert_ids.reshape(B, S, m.top_k)
+    disp, gate_slot = jax.vmap(
+        lambda ids, g: dispatch_indices(ids, g, m.num_experts, cap)
+    )(ids_g, gate_g)                                     # (B, E*C) each
+    xpad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xd = jnp.take_along_axis(xpad, disp[..., None], axis=1)
+    xd = constrain(xd.reshape(B, m.num_experts, cap, d),
+                   ("batch", "experts", None, None))     # (B, E, C, d)
+    h = activate(jnp.einsum("becd,edf->becf", xd, p["we_gate"]), cfg.act)
+    h = h * jnp.einsum("becd,edf->becf", xd, p["we_up"])
+    y = jnp.einsum("becf,efd->becd", h, p["we_down"])    # (B, E, C, d)
+    y = (y.astype(jnp.float32)
+         * gate_slot.reshape(B, m.num_experts, cap, 1))
+    out = jnp.zeros((B, S + 1, d), jnp.float32)
+    out = out.at[jnp.arange(B)[:, None], disp].add(
+        y.reshape(B, m.num_experts * cap, d))
+    return constrain(out[:, :S].astype(x.dtype), ("batch", None, None)), aux
+
+
+def moe_ffn_dense(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """O(E) oracle: every expert computed for every token, combined with
+    the same top-k gates. No capacity, no drops — property tests compare
+    `moe_ffn` against this wherever no token exceeds capacity."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    probs, gate_vals, expert_ids = router_probs(cfg, p, xf)
+    aux = aux_load_balance(probs, expert_ids, m.num_experts)
+    from repro.models.layers import activate
+    h = activate(jnp.einsum("td,edf->etf", xf, p["we_gate"]), cfg.act)
+    h = h * jnp.einsum("td,edf->etf", xf, p["we_up"])
+    y = jnp.einsum("etf,efd->etd", h, p["we_down"])       # (E, T, d)
+    w = jnp.zeros((T, m.num_experts), jnp.float32)
+    w = jax.vmap(lambda wr, ids, g: wr.at[ids].add(g))(w, expert_ids,
+                                                       gate_vals)
+    out = jnp.einsum("etd,te->td", y.astype(jnp.float32), w)
+    return out.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,118 @@
+"""Uniform model API over the four implementation families.
+
+`build_model(cfg)` returns a `Model` whose methods take/return plain
+pytrees, so the launch/serving/checkpoint layers never branch on family.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rglru, rwkv6, transformer
+from repro.models.transformer import CacheSpec
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], PyTree]
+    abstract_params: Callable[[], PyTree]
+    logical_axes: Callable[[], PyTree]
+    loss_fn: Callable[..., Any]          # (params, batch) -> (loss, metrics)
+    forward: Callable[..., Any]          # (params, batch) -> (logits, aux)
+    prefill: Callable[..., Any]          # (params, batch) -> (logits, cache)
+    decode_step: Callable[..., Any]      # (params, batch, cache) -> (logits, cache)
+    init_cache: Callable[..., PyTree]    # (batch_size, max_len) -> cache
+    abstract_cache: Callable[..., PyTree]
+    cache_logical_axes: Callable[..., PyTree]
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+    def param_count(self, params: Optional[PyTree] = None) -> int:
+        tree = params if params is not None else self.abstract_params()
+        return sum(int(jnp.size(p)) if isinstance(p, jax.Array)
+                   else int(_prod(p.shape)) for p in jax.tree.leaves(tree))
+
+
+def _prod(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def build_model(cfg: ModelConfig, *, kv_layout: str = "paged",
+                page_size: int = 256, attn_impl: str = "masked",
+                wkv_impl: str = "chunked") -> Model:
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: rwkv6.init_params(cfg, key),
+            abstract_params=lambda: rwkv6.abstract_params(cfg),
+            logical_axes=lambda: rwkv6.logical_axes(cfg),
+            loss_fn=lambda p, b: rwkv6.loss_fn(cfg, p, b, wkv_impl=wkv_impl),
+            forward=lambda p, b: rwkv6.forward(cfg, p, b, wkv_impl=wkv_impl),
+            prefill=lambda p, b, max_len=None: rwkv6.prefill(
+                cfg, p, b, wkv_impl=wkv_impl),
+            decode_step=lambda p, b, c: rwkv6.decode_step(cfg, p, b, c),
+            init_cache=lambda bs, max_len: rwkv6.init_state(cfg, bs),
+            abstract_cache=lambda bs, max_len: rwkv6.abstract_state(cfg, bs),
+            cache_logical_axes=lambda max_len=0: rwkv6.state_logical_axes(cfg),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: rglru.init_params(cfg, key),
+            abstract_params=lambda: rglru.abstract_params(cfg),
+            logical_axes=lambda: rglru.logical_axes(cfg),
+            loss_fn=lambda p, b: rglru.loss_fn(cfg, p, b),
+            forward=lambda p, b: rglru.forward(cfg, p, b),
+            prefill=lambda p, b, max_len=None: rglru.prefill(cfg, p, b),
+            decode_step=lambda p, b, c: rglru.decode_step(cfg, p, b, c),
+            init_cache=lambda bs, max_len: rglru.init_state(cfg, bs),
+            abstract_cache=lambda bs, max_len: rglru.abstract_state(cfg, bs),
+            cache_logical_axes=lambda max_len=0: rglru.state_logical_axes(cfg),
+        )
+    # dense / moe / vlm / audio -> transformer
+
+    def spec(max_len):
+        return CacheSpec(layout=kv_layout, max_len=max_len,
+                         page_size=min(page_size, max_len))
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: transformer.init_params(cfg, key),
+        abstract_params=lambda: transformer.abstract_params(cfg),
+        logical_axes=lambda: transformer.logical_axes(cfg),
+        loss_fn=lambda p, b: transformer.loss_fn(cfg, p, b,
+                                                 attn_impl=attn_impl),
+        forward=lambda p, b: transformer.forward(cfg, p, b,
+                                                 attn_impl=attn_impl),
+        prefill=lambda p, b, max_len=None: transformer.prefill(
+            cfg, p, b, spec=spec(max_len if max_len else b["tokens"].shape[1]),
+            attn_impl=attn_impl),
+        decode_step=lambda p, b, c: transformer.decode_step(
+            cfg, p, b, c, spec=_infer_spec(cfg, c, kv_layout)),
+        init_cache=lambda bs, max_len: transformer.init_cache(
+            cfg, bs, spec(max_len)),
+        abstract_cache=lambda bs, max_len: transformer.abstract_cache(
+            cfg, bs, spec(max_len)),
+        cache_logical_axes=lambda max_len: transformer.cache_logical_axes(
+            cfg, spec(max_len)),
+    )
+
+
+def _infer_spec(cfg: ModelConfig, cache: PyTree, kv_layout: str) -> CacheSpec:
+    k = cache["k"]
+    if "block_table" in cache:
+        _, _, P, ps, _, _ = k.shape
+        return CacheSpec(layout="paged", max_len=P * ps, page_size=ps)
+    return CacheSpec(layout="contiguous", max_len=k.shape[2])

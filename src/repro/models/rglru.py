@@ -1,0 +1,399 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks
+interleaved with local (sliding-window) attention, 1 attention : 2 recurrent.
+
+Layers are grouped into scanned *superlayers* of one pattern unit
+(recurrent, recurrent, attention); `num_layers % 3` trailing blocks are
+unrolled. The RG-LRU recurrence runs as a `jax.lax.associative_scan`
+(O(log S) depth) for train/prefill and as a single fused update for decode.
+
+Sub-quadratic: prefill attention touches only O(S·window) pairs
+(`local_chunked_attention`), decode keeps a ring buffer of `window` kv —
+so long_500k lowers with O(window + lru_width) state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RGLRUConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+RG_C = 8.0  # Griffin's fixed `c` exponent scale
+
+
+def _cfg(cfg: ModelConfig) -> RGLRUConfig:
+    return cfg.rglru or RGLRUConfig()
+
+
+def _num_blocks(cfg):  # block-diagonal gate blocks
+    return cfg.num_heads
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+def _block_specs(cfg: ModelConfig, kind: str):
+    d, ff = cfg.d_model, cfg.d_ff
+    rg = _cfg(cfg)
+    W, nb = rg.lru_width, _num_blocks(cfg)
+    bw = W // nb
+    s = {
+        "ln1": ((d,), (None,)),
+        "ln2": ((d,), (None,)),
+        "w_gate": ((d, ff), ("embed", "ff")),
+        "w_up": ((d, ff), ("embed", "ff")),
+        "w_down": ((ff, d), ("ff", "embed")),
+    }
+    if kind == "recurrent":
+        s.update({
+            "wx": ((d, W), ("embed", "lru")),
+            "wg": ((d, W), ("embed", "lru")),
+            "wout": ((W, d), ("lru", "embed")),
+            "conv_w": ((rg.conv_width, W), (None, "lru")),
+            "conv_b": ((W,), ("lru",)),
+            "rg_a": ((nb, bw, bw), ("lru_blocks", None, None)),
+            "rg_a_b": ((W,), ("lru",)),
+            "rg_x": ((nb, bw, bw), ("lru_blocks", None, None)),
+            "rg_x_b": ((W,), ("lru",)),
+            "a_param": ((W,), ("lru",)),
+        })
+    else:  # attention
+        H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        s.update({
+            "wq": ((d, H, hd), ("embed", "heads", None)),
+            "wk": ((d, K, hd), ("embed", "kv_heads", "head_dim")),
+            "wv": ((d, K, hd), ("embed", "kv_heads", "head_dim")),
+            "wo": ((H, hd, d), ("heads", None, "embed")),
+        })
+    return s
+
+
+def layer_plan(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    """(num_superlayers, tail_kinds)."""
+    pat = _cfg(cfg).block_pattern
+    n_super = cfg.num_layers // len(pat)
+    tail = tuple(pat[: cfg.num_layers % len(pat)])
+    return n_super, tail
+
+
+def param_specs(cfg: ModelConfig):
+    from repro.configs.base import padded_vocab
+    d, V = cfg.d_model, padded_vocab(cfg.vocab_size)
+    pat = _cfg(cfg).block_pattern
+    n_super, tail = layer_plan(cfg)
+    s = {"embed": ((V, d), ("vocab", "embed")),
+         "final_norm": ((d,), (None,))}
+    if not cfg.tie_embeddings:
+        s["head"] = ((V, d), ("vocab", "embed"))
+    if n_super:
+        for bi, kind in enumerate(pat):
+            for name, (shape, axes) in _block_specs(cfg, kind).items():
+                s[f"super/{bi}/{name}"] = ((n_super,) + shape,
+                                           ("layers",) + axes)
+    for ti, kind in enumerate(tail):
+        for name, (shape, axes) in _block_specs(cfg, kind).items():
+            s[f"tail/{ti}/{name}"] = (shape, axes)
+    return s
+
+
+def logical_axes(cfg: ModelConfig):
+    return {k: v[1] for k, v in param_specs(cfg).items()}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    dt = jnp.dtype(cfg.dtype)
+    specs = param_specs(cfg)
+    params = {}
+    keys = jax.random.split(key, len(specs))
+    for (name, (shape, _)), k in zip(sorted(specs.items()), keys):
+        leaf = name.split("/")[-1]
+        if leaf in ("ln1", "ln2", "final_norm"):
+            params[name] = jnp.ones(shape, dt)
+        elif leaf in ("conv_b", "rg_a_b", "rg_x_b"):
+            params[name] = jnp.zeros(shape, dt)
+        elif leaf == "a_param":
+            # softplus(a_param) in ~(0.04, 0.6) -> per-channel decay spread
+            params[name] = jnp.linspace(-3.0, 0.0, math.prod(shape),
+                                        dtype=jnp.float32).reshape(shape).astype(jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params[name] = (jax.random.normal(k, shape, jnp.float32)
+                            / math.sqrt(max(fan_in, 1))).astype(dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    for kname, (shape, _) in param_specs(cfg).items():
+        leaf_dt = jnp.float32 if kname.endswith("a_param") else dt
+        out[kname] = jax.ShapeDtypeStruct(shape, leaf_dt)
+    return out
+
+
+# --------------------------------------------------------------------------
+# RG-LRU + conv
+# --------------------------------------------------------------------------
+
+def _block_diag(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """u: (B,S,W), w: (nb,bw,bw), b: (W,) -> (B,S,W)."""
+    B, S, W = u.shape
+    nb, bw, _ = w.shape
+    ub = u.reshape(B, S, nb, bw)
+    out = jnp.einsum("bsnw,nwv->bsnv", ub, w)
+    return out.reshape(B, S, W) + b
+
+
+def causal_conv1d(u: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array):
+    """Depthwise causal conv. u: (B,S,W), w: (cw,W), state: (B,cw-1,W).
+    Returns (out (B,S,W), new_state)."""
+    cw = w.shape[0]
+    full = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(cw))
+    new_state = full[:, -(cw - 1):] if cw > 1 else state
+    return out + b, new_state
+
+
+def rg_lru(u: jax.Array, p: Dict[str, jax.Array], h0: jax.Array):
+    """u: (B,S,W); h0: (B,W) f32. Returns (h_seq (B,S,W) f32, hT)."""
+    r = jax.nn.sigmoid(_block_diag(u, p["rg_a"], p["rg_a_b"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(u, p["rg_x"], p["rg_x_b"]).astype(jnp.float32))
+    log_a = -RG_C * r * jax.nn.softplus(p["a_param"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = i * u.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * gated
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = lax.associative_scan(combine, (a, b), axis=1)
+    h = b_cum + a_cum * h0[:, None, :]
+    return h, h[:, -1, :]
+
+
+def rg_lru_step(u: jax.Array, p: Dict[str, jax.Array], h0: jax.Array):
+    """Single-token RG-LRU update. u: (B,1,W)."""
+    h, hT = rg_lru(u, p, h0)
+    return h, hT
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def recurrent_block(cfg, p, x, st, *, decode: bool):
+    """st: {"h": (B,W) f32, "conv": (B,cw-1,W)}."""
+    u = constrain(x @ p["wx"], ("batch", None, "lru"))
+    u, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], st["conv"])
+    h, hT = rg_lru(u, p, st["h"])
+    gate = jax.nn.gelu(x @ p["wg"], approximate=True)
+    y = (gate * h.astype(x.dtype)) @ p["wout"]
+    return y, {"h": hT, "conv": conv_state.astype(st["conv"].dtype)}
+
+
+def _to_ring(k: jax.Array, window: int) -> jax.Array:
+    """(B, S, K, hd) -> ring buffer (B, window, K, hd), slot = pos % window."""
+    B, S = k.shape[:2]
+    if S >= window:
+        last = k[:, -window:]
+    else:
+        last = jnp.pad(k, ((0, 0), (window - S, 0), (0, 0), (0, 0)))
+    return jnp.roll(last, S % window, axis=1)
+
+
+def attention_block(cfg, p, x, st, *, decode: bool, pos=None):
+    """st: {"k": (B,window,K,hd), "v": ..., } ring buffer (decode only)."""
+    rg = _cfg(cfg)
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if decode:
+        positions = pos[None]
+        q = L.rope_for_seq(q, positions, cfg.rope_theta)
+        k = L.rope_for_seq(k, positions, cfg.rope_theta)
+        slot = pos % rg.attention_window
+        kc = lax.dynamic_update_slice_in_dim(st["k"], k.astype(st["k"].dtype),
+                                             slot, 1)
+        vc = lax.dynamic_update_slice_in_dim(st["v"], v.astype(st["v"].dtype),
+                                             slot, 1)
+        valid = jnp.minimum(pos + 1, rg.attention_window)
+        out = L.decode_attention(q, L.expand_kv(kc, H), L.expand_kv(vc, H),
+                                 valid)
+        new_st = {"k": kc, "v": vc}
+    else:
+        positions = jnp.arange(S)
+        q = L.rope_for_seq(q, positions, cfg.rope_theta)
+        k = L.rope_for_seq(k, positions, cfg.rope_theta)
+        out = L.local_chunked_attention(q, L.expand_kv(k, H),
+                                        L.expand_kv(v, H),
+                                        window=rg.attention_window)
+        # stash the last `window` kv as a ring buffer (slot = pos % window)
+        # so a subsequent decode phase can continue seamlessly
+        w = rg.attention_window
+        new_st = {"k": _to_ring(k, w).astype(st["k"].dtype),
+                  "v": _to_ring(v, w).astype(st["v"].dtype)}
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return out, new_st
+
+
+def _block(cfg, kind, p, x, st, *, decode=False, pos=None):
+    x = constrain(x, ("batch", None, None))
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    if kind == "recurrent":
+        out, st = recurrent_block(cfg, p, h, st, decode=decode)
+    else:
+        out, st = attention_block(cfg, p, h, st, decode=decode, pos=pos)
+    x = x + out
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    mlp = L.mlp_glu(h, p["w_gate"], p["w_up"], p["w_down"], cfg.act)
+    return constrain(x + mlp, ("batch", None, None)), st
+
+
+# --------------------------------------------------------------------------
+# State
+# --------------------------------------------------------------------------
+
+def _block_state(cfg: ModelConfig, kind: str, batch: int, lead=()):
+    rg = _cfg(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    if kind == "recurrent":
+        return {"h": jnp.zeros(lead + (batch, rg.lru_width), jnp.float32),
+                "conv": jnp.zeros(lead + (batch, rg.conv_width - 1,
+                                          rg.lru_width), dt)}
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros(lead + (batch, rg.attention_window, K, hd), dt),
+            "v": jnp.zeros(lead + (batch, rg.attention_window, K, hd), dt)}
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    pat = _cfg(cfg).block_pattern
+    n_super, tail = layer_plan(cfg)
+    st: Dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    if n_super:
+        for bi, kind in enumerate(pat):
+            st[f"super/{bi}"] = _block_state(cfg, kind, batch, (n_super,))
+    for ti, kind in enumerate(tail):
+        st[f"tail/{ti}"] = _block_state(cfg, kind, batch)
+    return st
+
+
+def abstract_state(cfg: ModelConfig, batch: int):
+    return jax.eval_shape(lambda: init_state(cfg, batch))
+
+
+def state_logical_axes(cfg: ModelConfig):
+    pat = _cfg(cfg).block_pattern
+    n_super, tail = layer_plan(cfg)
+
+    def ax(kind, lead):
+        if kind == "recurrent":
+            return {"h": lead + ("batch", "lru"),
+                    "conv": lead + ("batch", None, "lru")}
+        return {"k": lead + ("batch", None, "kv_heads", "head_dim"),
+                "v": lead + ("batch", None, "kv_heads", "head_dim")}
+
+    st: Dict[str, Any] = {"len": ()}
+    if n_super:
+        for bi, kind in enumerate(pat):
+            st[f"super/{bi}"] = ax(kind, ("layers",))
+    for ti, kind in enumerate(tail):
+        st[f"tail/{ti}"] = ax(kind, ())
+    return st
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def _split(params):
+    top, sup, tail = {}, {}, {}
+    for kname, v in params.items():
+        if kname.startswith("super/"):
+            _, bi, leaf = kname.split("/", 2)
+            sup.setdefault(int(bi), {})[leaf] = v
+        elif kname.startswith("tail/"):
+            _, ti, leaf = kname.split("/", 2)
+            tail.setdefault(int(ti), {})[leaf] = v
+        else:
+            top[kname] = v
+    return top, sup, tail
+
+
+def forward(cfg: ModelConfig, params, batch, *, state=None,
+            remat: bool = True, return_state: bool = False,
+            last_only: bool = False, decode: bool = False):
+    pat = _cfg(cfg).block_pattern
+    n_super, tail_kinds = layer_plan(cfg)
+    top, sup, tail = _split(params)
+    tok = batch["tokens"]
+    x = constrain(jnp.take(top["embed"], tok, axis=0), ("batch", None, None))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    B = x.shape[0]
+    st = state if state is not None else init_state(cfg, B)
+    pos = st["len"]
+
+    if n_super:
+        def body(x, xs):
+            lp_by_block, s_by_block = xs
+            new_s = {}
+            for bi, kind in enumerate(pat):
+                x, new_s[bi] = _block(cfg, kind, lp_by_block[bi], x,
+                                      s_by_block[bi], decode=decode, pos=pos)
+            return x, new_s
+
+        body_fn = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+        s_by_block = {bi: st[f"super/{bi}"] for bi in range(len(pat))}
+        x, new_sup = lax.scan(body_fn, x, (sup, s_by_block))
+    else:
+        new_sup = {}
+    new_tail = {}
+    for ti, kind in enumerate(tail_kinds):
+        x, new_tail[ti] = _block(cfg, kind, tail[ti], x, st[f"tail/{ti}"],
+                                 decode=decode, pos=pos)
+    x = L.rms_norm(x, top["final_norm"], cfg.rms_eps)
+    if last_only:
+        x = x[:, -1:]
+    w = top["embed"] if cfg.tie_embeddings else top["head"]
+    logits = constrain(jnp.einsum("bsd,vd->bsv", x, w),
+                       ("batch", None, "vocab"))
+    logits = L.soft_cap(logits, cfg.logit_softcap)
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    if return_state:
+        new_state: Dict[str, Any] = {"len": pos + tok.shape[1]}
+        for bi in new_sup:
+            new_state[f"super/{bi}"] = new_sup[bi]
+        for ti in new_tail:
+            new_state[f"tail/{ti}"] = new_tail[ti]
+        return logits, new_state
+    return logits, 0.0
+
+
+def loss_fn(cfg: ModelConfig, params, batch, **kw):
+    logits, _ = forward(cfg, params, batch, **kw)
+    loss = L.softmax_cross_entropy(logits, batch["labels"])
+    return loss, {"ce": loss, "aux": 0.0}
+
+
+def prefill(cfg: ModelConfig, params, batch, **kw):
+    return forward(cfg, params, batch, return_state=True, last_only=True,
+                   **kw)
+
+
+def decode_step(cfg: ModelConfig, params, batch, state):
+    return forward(cfg, params, {"tokens": batch["token"]}, state=state,
+                   remat=False, return_state=True, decode=True)

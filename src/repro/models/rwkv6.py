@@ -1,0 +1,352 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay.
+
+Two WKV implementations:
+  * ``wkv_scan``    — sequential `lax.scan` over time. The correctness
+                      oracle; O(S) steps, exact.
+  * ``wkv_chunked`` — chunk-parallel linear-attention form (log-domain
+                      stabilized). The production path for train/prefill:
+                      matmul-dominated, remat-friendly; validated against
+                      the oracle in tests/test_rwkv.py.
+
+State per layer: wkv state (B, H, hs, hs) + token-shift registers. decode
+is O(1) in context length — this is why rwkv6-3b runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RWKVConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    from repro.configs.base import padded_vocab
+    d, ff, V, nl = (cfg.d_model, cfg.d_ff, padded_vocab(cfg.vocab_size),
+                    cfg.num_layers)
+    rw = cfg.rwkv or RWKVConfig()
+    H = d // rw.head_size
+    s = {}
+    s["embed"] = ((V, d), ("vocab", "embed"))
+    s["embed_norm"] = ((d,), (None,))
+    if not cfg.tie_embeddings:
+        s["head"] = ((V, d), ("vocab", "embed"))
+    s["final_norm"] = ((d,), (None,))
+
+    def lyr(name, shape, axes):
+        s[f"layers/{name}"] = ((nl,) + shape, ("layers",) + axes)
+
+    lyr("ln1", (d,), (None,))
+    lyr("ln2", (d,), (None,))
+    # time-mix token-shift ddlerp
+    lyr("mu_x", (d,), (None,))
+    lyr("mu", (5, d), (None, None))                    # w,k,v,r,g bases
+    lyr("w_mix1", (d, 5 * rw.mix_lora), ("embed", None))
+    lyr("w_mix2", (5, rw.mix_lora, d), (None, None, "embed"))
+    # projections
+    for n in ("wr", "wk", "wv", "wg"):
+        lyr(n, (d, d), ("embed", "heads_d"))
+    lyr("wo", (d, d), ("heads_d", "embed"))
+    # data-dependent decay
+    lyr("w_base", (d,), (None,))
+    lyr("wd1", (d, rw.decay_lora), ("embed", None))
+    lyr("wd2", (rw.decay_lora, d), (None, "heads_d"))
+    lyr("u", (H, rw.head_size), ("heads", None))       # bonus
+    lyr("ln_x_scale", (d,), (None,))
+    lyr("ln_x_bias", (d,), (None,))
+    # channel-mix
+    lyr("c_mu_k", (d,), (None,))
+    lyr("c_mu_r", (d,), (None,))
+    lyr("wck", (d, ff), ("embed", "ff"))
+    lyr("wcv", (ff, d), ("ff", "embed"))
+    lyr("wcr", (d, d), ("embed", "heads_d"))
+    return s
+
+
+def logical_axes(cfg: ModelConfig):
+    return {k: v[1] for k, v in param_specs(cfg).items()}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    dt = jnp.dtype(cfg.dtype)
+    specs = param_specs(cfg)
+    params = {}
+    keys = jax.random.split(key, len(specs))
+    for (name, (shape, _)), k in zip(sorted(specs.items()), keys):
+        if "norm" in name or "ln" in name.split("/")[-1][:2] or name.endswith("ln_x_scale"):
+            params[name] = jnp.ones(shape, dt)
+        elif name.endswith(("mu_x", "mu", "c_mu_k", "c_mu_r", "ln_x_bias")):
+            params[name] = (jax.random.uniform(k, shape, jnp.float32)
+                            * 0.5).astype(dt)
+        elif name.endswith("w_base"):
+            # decay base: spread so w = exp(-exp(w_base)) covers (0, 1)
+            params[name] = jnp.linspace(-6.0, 1.0, math.prod(shape),
+                                        dtype=jnp.float32).reshape(shape).astype(dt)
+        elif name.endswith("u"):
+            params[name] = (jax.random.normal(k, shape, jnp.float32)
+                            * 0.1).astype(dt)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params[name] = (jax.random.normal(k, shape, jnp.float32)
+                            / math.sqrt(max(fan_in, 1))).astype(dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    return {k: jax.ShapeDtypeStruct(shape, dt)
+            for k, (shape, _) in param_specs(cfg).items()}
+
+
+# --------------------------------------------------------------------------
+# WKV kernels (pure JAX)
+# --------------------------------------------------------------------------
+
+def wkv_scan(r, k, v, w, u, state0):
+    """Oracle. r,k,v,w: (B, S, H, hs) (w = decay in (0,1), f32 math);
+    u: (H, hs); state0: (B, H, hs, hs) [key, value]. Returns (y, stateT)."""
+    B, S, H, hs = r.shape
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                     # (B, H, hs)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hs,hs)
+        y = jnp.einsum("bhi,bhij->bhj", rt, state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    stateT, ys = lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), stateT       # (B,S,H,hs), (B,H,hs,hs)
+
+
+def wkv_chunked(r, k, v, w, u, state0, *, chunk: int = 32):
+    """Chunk-parallel WKV (log-domain linear attention).
+
+    Within a chunk of length C:
+      y_t = r~_t·S_0 + sum_{s<t} (r~_t·k~_s) v_s + (r_t·(u∘k_t)) v_t
+      with r~_t = r_t∘P⁻_t, k~_s = k_s/P_s, P_t = prod_{s<=t} w_s.
+    S_{chunk end} = diag(P_C) S_0 + sum_t diag(P_C/P_t) k_t^T v_t.
+
+    All cross-chunk factors (P_C, P_C/P_t, P⁻_t) have exponents <= 0 and
+    the intra-chunk matrix uses exact per-pair exponents (also <= 0), so
+    the formulation is exact for arbitrarily heavy data-dependent decay.
+    Matches `wkv_scan` to fp32 tolerance (tests/test_rwkv.py).
+    """
+    B, S, H, hs = r.shape
+    C = min(chunk, S)
+    n = -(-S // C)
+    pad = n * C - S
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    f32 = jnp.float32
+    rc = r.reshape(B, n, C, H, hs).astype(f32)
+    kc = k.reshape(B, n, C, H, hs).astype(f32)
+    vc = v.reshape(B, n, C, H, hs).astype(f32)
+    wc = w.reshape(B, n, C, H, hs).astype(f32)
+    u = u.astype(f32)
+
+    def chunk_step(state, xs):
+        rt, kt, vt, wt = xs                     # (B, C, H, hs)
+        lw = jnp.log(jnp.clip(wt, 1e-12, 1.0))  # (B,C,H,hs) <= 0
+        cum = jnp.cumsum(lw, axis=1)            # log P_t (inclusive)
+        cum_ex = cum - lw                       # log P⁻_t (exclusive)
+        total = cum[:, -1:]                     # log P_C
+        # Intra-chunk: A_ij = sum_e r_ie k_je exp(cum_ex_ie - cum_je), j<i.
+        # The exponent is <= 0 for every valid pair, so computing it
+        # PER-PAIR is exact for arbitrarily heavy decay (a factored form
+        # around a single reference overflows once the chunk spans >80
+        # nats — see tests/test_rwkv.py). Cost: a (C, C, hs) elementwise
+        # exp per chunk, same order as the matmul at C<=32.
+        expo = cum_ex[:, :, None] - cum[:, None, :]     # (B, Ci, Cj, H, hs)
+        ii = jnp.arange(C)
+        causal = (ii[None, :] < ii[:, None])            # strict lower tri
+        expo = jnp.where(causal[None, :, :, None, None], expo, -jnp.inf)
+        A = jnp.einsum("bihe,bjhe,bijhe->bhij", rt, kt,
+                       jnp.exp(expo), preferred_element_type=f32)
+        intra = jnp.einsum("bhij,bjhe->bihe", A, vt)
+        diag = jnp.einsum("bihe,bihe->bih", rt, u[None, None] * kt)
+        intra = intra + diag[..., None] * vt
+        inter = jnp.einsum("bihe,bhef->bihf", rt * jnp.exp(cum_ex), state)
+        y = inter + intra
+        decay_out = jnp.exp(total - cum)        # P_C / P_t  (<= 1)
+        state = (jnp.exp(total)[:, 0, :, :, None] * state
+                 + jnp.einsum("bihe,bihf->bhef", kt * decay_out, vt))
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rc, kc, vc, wc))
+    stateT, ys = lax.scan(chunk_step, state0.astype(f32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n * C, H, hs)[:, :S]
+    return y, stateT
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def _token_shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """x: (B,S,d); last: (B,d) = final token of the previous segment.
+    Returns the 1-step-shifted sequence."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    B, S, d = x.shape
+    mlora = p["w_mix1"].shape[1] // 5
+    base = x + xx * p["mu_x"]
+    s = jnp.tanh(base @ p["w_mix1"]).reshape(B, S, 5, mlora)
+    offs = jnp.einsum("bsfm,fmd->bsfd", s, p["w_mix2"])   # (B,S,5,d)
+    mix = p["mu"][None, None] + offs                      # (B,S,5,d)
+    xi = x[:, :, None, :] + xx[:, :, None, :] * mix       # (B,S,5,d)
+    return tuple(xi[:, :, i] for i in range(5))           # w,k,v,r,g
+
+
+def time_mix(cfg: ModelConfig, p, x, tm_state, wkv_state, *,
+             wkv_impl: str = "chunked"):
+    """x: (B,S,d). tm_state: (B,d) shift register; wkv_state: (B,H,hs,hs).
+    Returns (out, new_tm_state, new_wkv_state)."""
+    rw = cfg.rwkv or RWKVConfig()
+    B, S, d = x.shape
+    H, hs = d // rw.head_size, rw.head_size
+    xx = _token_shift(x, tm_state) - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xx)
+    r = constrain((xr @ p["wr"]).reshape(B, S, H, hs),
+                  ("batch", None, "heads", None))
+    k = constrain((xk @ p["wk"]).reshape(B, S, H, hs),
+                  ("batch", None, "heads", None))
+    v = constrain((xv @ p["wv"]).reshape(B, S, H, hs),
+                  ("batch", None, "heads", None))
+    g = jax.nn.silu(xg @ p["wg"])
+    dlog = (p["w_base"].astype(jnp.float32)
+            + (jnp.tanh(xw @ p["wd1"]) @ p["wd2"]).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dlog)).reshape(B, S, H, hs)      # decay in (0,1)
+    fn = wkv_chunked if wkv_impl == "chunked" else wkv_scan
+    y, wkv_state = fn(r, k, v, w, p["u"], wkv_state)
+    y = y.reshape(B, S, d)
+    y = L.group_norm(y, p["ln_x_scale"], p["ln_x_bias"], num_groups=H)
+    out = (y * g).astype(x.dtype) @ p["wo"]
+    return out, x[:, -1, :], wkv_state
+
+
+def channel_mix(cfg: ModelConfig, p, x, cm_state):
+    xx = _token_shift(x, cm_state) - x
+    xk = x + xx * p["c_mu_k"]
+    xr = x + xx * p["c_mu_r"]
+    kk = jax.nn.relu(xk @ p["wck"])
+    kk = kk * kk
+    out = jax.nn.sigmoid(xr @ p["wcr"]) * (kk @ p["wcv"])
+    return out, x[:, -1, :]
+
+
+def _layer(cfg, lp, x, st, *, wkv_impl):
+    """st = {"tm": (B,d), "cm": (B,d), "wkv": (B,H,hs,hs)}."""
+    x = constrain(x, ("batch", None, None))
+    h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+    out, tm, wkv = time_mix(cfg, lp, h, st["tm"], st["wkv"],
+                            wkv_impl=wkv_impl)
+    x = x + out
+    h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+    out, cm = channel_mix(cfg, lp, h, st["cm"])
+    return constrain(x + out, ("batch", None, None)), \
+        {"tm": tm, "cm": cm, "wkv": wkv}
+
+
+def _split(params):
+    lyr = {k[len("layers/"):]: v for k, v in params.items()
+           if k.startswith("layers/")}
+    top = {k: v for k, v in params.items() if not k.startswith("layers/")}
+    return top, lyr
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    rw = cfg.rwkv or RWKVConfig()
+    d, nl = cfg.d_model, cfg.num_layers
+    H, hs = d // rw.head_size, rw.head_size
+    dt = jnp.dtype(cfg.dtype)
+    return {"tm": jnp.zeros((nl, batch, d), dt),
+            "cm": jnp.zeros((nl, batch, d), dt),
+            "wkv": jnp.zeros((nl, batch, H, hs, hs), jnp.float32),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def abstract_state(cfg: ModelConfig, batch: int):
+    return jax.eval_shape(lambda: init_state(cfg, batch))
+
+
+def state_logical_axes(cfg: ModelConfig):
+    return {"tm": ("layers", "batch", None),
+            "cm": ("layers", "batch", None),
+            "wkv": ("layers", "batch", "heads", None, None),
+            "len": ()}
+
+
+def forward(cfg: ModelConfig, params, batch, *, state=None,
+            wkv_impl: str = "chunked", remat: bool = True,
+            return_state: bool = False, last_only: bool = False):
+    """Training/scoring/prefill forward. batch: {"tokens": (B,S)}."""
+    top, lyr = _split(params)
+    tok = batch["tokens"]
+    x = jnp.take(top["embed"], tok, axis=0)
+    x = constrain(x, ("batch", None, None))
+    x = L.rms_norm(x, top["embed_norm"], cfg.rms_eps)
+    B = x.shape[0]
+    st = state if state is not None else init_state(cfg, B)
+
+    def body(x, xs):
+        lp, s = xs
+        x, s_new = _layer(cfg, lp, x, s, wkv_impl=wkv_impl)
+        return x, s_new
+
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    layer_state = {k: st[k] for k in ("tm", "cm", "wkv")}
+    x, new_state = lax.scan(body_fn, x, (lyr, layer_state))
+    x = L.rms_norm(x, top["final_norm"], cfg.rms_eps)
+    if last_only:
+        x = x[:, -1:]
+    w = top["embed"] if cfg.tie_embeddings else top["head"]
+    logits = constrain(jnp.einsum("bsd,vd->bsv", x, w),
+                       ("batch", None, "vocab"))
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    if return_state:
+        new_state["len"] = st["len"] + tok.shape[1]
+        return logits, new_state
+    return logits, 0.0
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, wkv_impl: str = "chunked"):
+    logits, _ = forward(cfg, params, batch, wkv_impl=wkv_impl)
+    loss = L.softmax_cross_entropy(logits, batch["labels"])
+    return loss, {"ce": loss, "aux": 0.0}
+
+
+def prefill(cfg: ModelConfig, params, batch, **kw):
+    logits, state = forward(cfg, params, batch, return_state=True,
+                            last_only=True, **kw)
+    return logits, state
+
+
+def decode_step(cfg: ModelConfig, params, batch, state):
+    """One-token decode: O(1) in context length."""
+    logits, new_state = forward(cfg, params, {"tokens": batch["token"]},
+                                state=state, wkv_impl="scan",
+                                remat=False, return_state=True)
+    return logits, new_state
+

@@ -1,0 +1,456 @@
+"""Decoder-only transformer covering the dense / moe / vlm / audio families.
+
+Layers are stacked on a leading L axis and driven by `lax.scan` (+remat) so
+the HLO stays O(1) in depth; the same layer function serves train, prefill,
+and decode (with a paged or contiguous KV cache).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# Parameter construction
+# --------------------------------------------------------------------------
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Tuple[Tuple[int, ...], Tuple]]:
+    """name -> (shape, logical_axes). Layer params carry a leading L dim.
+    Vocab dims are padded (configs.base.padded_vocab); pad logits are
+    masked in output_logits."""
+    from repro.configs.base import padded_vocab
+    d, H, K, hd, ff, V, nl = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                              cfg.head_dim, cfg.d_ff,
+                              padded_vocab(cfg.vocab_size), cfg.num_layers)
+    s: Dict[str, Tuple[Tuple[int, ...], Tuple]] = {}
+    s["embed"] = ((V, d), ("vocab", "embed"))
+    if not cfg.tie_embeddings:
+        if cfg.frontend.kind == "audio" and cfg.frontend.num_codebooks > 1:
+            s["head"] = ((cfg.frontend.num_codebooks, V, d),
+                         (None, "vocab", "embed"))
+        else:
+            s["head"] = ((V, d), ("vocab", "embed"))
+    s["final_norm"] = ((d,), (None,))
+    if cfg.frontend.kind == "vlm":
+        s["patch_proj"] = ((cfg.frontend.patch_embed_dim, d),
+                           (None, "embed"))
+
+    def lyr(name, shape, axes):
+        s[f"layers/{name}"] = ((nl,) + shape, ("layers",) + axes)
+
+    lyr("ln1", (d,), (None,))
+    lyr("ln2", (d,), (None,))
+    lyr("wq", (d, H, hd), ("embed", "heads", None))
+    lyr("wk", (d, K, hd), ("embed", "kv_heads", "head_dim"))
+    lyr("wv", (d, K, hd), ("embed", "kv_heads", "head_dim"))
+    lyr("wo", (H, hd, d), ("heads", None, "embed"))
+    if cfg.qkv_bias:
+        lyr("bq", (H, hd), ("heads", None))
+        lyr("bk", (K, hd), ("kv_heads", "head_dim"))
+        lyr("bv", (K, hd), ("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        lyr("q_norm", (hd,), (None,))
+        lyr("k_norm", (hd,), (None,))
+    if cfg.moe is None:
+        if cfg.mlp_glu:
+            lyr("w_gate", (d, ff), ("embed", "ff"))
+        lyr("w_up", (d, ff), ("embed", "ff"))
+        lyr("w_down", (ff, d), ("ff", "embed"))
+    else:
+        m = cfg.moe
+        lyr("router", (d, m.num_experts), ("embed", "experts"))
+        lyr("we_gate", (m.num_experts, d, m.d_expert),
+            ("experts", "embed", "expert_ff"))
+        lyr("we_up", (m.num_experts, d, m.d_expert),
+            ("experts", "embed", "expert_ff"))
+        lyr("we_down", (m.num_experts, m.d_expert, d),
+            ("experts", "expert_ff", "embed"))
+        if m.num_shared_experts:
+            lyr("ws_gate", (d, m.d_shared), ("embed", "ff"))
+            lyr("ws_up", (d, m.d_shared), ("embed", "ff"))
+            lyr("ws_down", (m.d_shared, d), ("ff", "embed"))
+            lyr("shared_gate", (d,), ("embed",))
+    return s
+
+
+def logical_axes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    return {k: v[1] for k, v in param_specs(cfg).items()}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    specs = param_specs(cfg)
+    dt = _dtype(cfg)
+    params = {}
+    keys = jax.random.split(key, len(specs))
+    for (name, (shape, _)), k in zip(sorted(specs.items()), keys):
+        if "norm" in name or name.endswith(("ln1", "ln2")):
+            params[name] = jnp.ones(shape, dt)
+        elif name.endswith(("bq", "bk", "bv", "shared_gate")):
+            params[name] = jnp.zeros(shape, dt)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            params[name] = (jax.random.normal(k, shape, jnp.float32)
+                            * std).astype(dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct tree for the dry-run (no allocation)."""
+    dt = _dtype(cfg)
+    return {k: jax.ShapeDtypeStruct(shape, dt)
+            for k, (shape, _) in param_specs(cfg).items()}
+
+
+def param_count_tree(params: PyTree) -> int:
+    return sum(int(jnp.size(p)) if isinstance(p, jax.Array)
+               else int(math.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------
+# Layer
+# --------------------------------------------------------------------------
+
+def _attn(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+          positions: jax.Array, *, mode: str,
+          kv_in: Optional[Tuple[jax.Array, jax.Array]] = None,
+          cache_len=None, attn_impl: str = "masked",
+          window: Optional[int] = None):
+    """Self-attention. Returns (out, (k, v)) where k/v are this segment's
+    keys/values (train/prefill) or None (decode uses kv_in as full cache)."""
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.rms_eps)
+    q = L.rope_for_seq(q, positions, cfg.rope_theta)
+    k = L.rope_for_seq(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", None, "kv_heads", "head_dim"))
+
+    if mode == "decode":
+        k_cache, v_cache = kv_in              # (B, Smax, K, hd), new kv written
+        ke = L.expand_kv(k_cache, H)
+        ve = L.expand_kv(v_cache, H)
+        out = L.decode_attention(q, ke, ve, cache_len, window=window)
+        new_kv = (k, v)                       # single-position kv to store
+    else:
+        ke, ve = L.expand_kv(k, H), L.expand_kv(v, H)
+        if window is not None:
+            out = L.local_chunked_attention(q, ke, ve, window=window)
+        else:
+            out = L.chunked_attention(q, ke, ve, causal=True, impl=attn_impl)
+        new_kv = (k, v)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return out, new_kv
+
+
+def _ffn(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array):
+    """Dense or MoE FFN. Returns (out, aux_loss)."""
+    if cfg.moe is None:
+        if cfg.mlp_glu:
+            return L.mlp_glu(x, p["w_gate"], p["w_up"], p["w_down"],
+                             cfg.act), 0.0
+        return L.mlp_classic(x, p["w_up"], p["w_down"], cfg.act), 0.0
+    out, aux = moe_lib.moe_ffn(cfg, p, x)
+    if cfg.moe.num_shared_experts:
+        shared = L.mlp_glu(x, p["ws_gate"], p["ws_up"], p["ws_down"], cfg.act)
+        gate = jax.nn.sigmoid(
+            jnp.einsum("bsd,d->bs", x.astype(jnp.float32),
+                       p["shared_gate"].astype(jnp.float32)))[..., None]
+        out = out + (gate * shared.astype(jnp.float32)).astype(out.dtype)
+    return out, aux
+
+
+def _layer(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+           positions, *, mode: str, kv_in=None, cache_len=None,
+           attn_impl: str = "masked"):
+    x = constrain(x, ("batch", None, None))
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    attn_out, kv = _attn(cfg, p, h, positions, mode=mode, kv_in=kv_in,
+                         cache_len=cache_len, attn_impl=attn_impl)
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    ffn_out, aux = _ffn(cfg, p, h)
+    return constrain(x + ffn_out, ("batch", None, None)), kv, aux
+
+
+def _split_layers(params: Dict[str, jax.Array]):
+    lyr = {k[len("layers/"):]: v for k, v in params.items()
+           if k.startswith("layers/")}
+    top = {k: v for k, v in params.items() if not k.startswith("layers/")}
+    return top, lyr
+
+
+# --------------------------------------------------------------------------
+# Input embedding / output head (family hooks)
+# --------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    """Returns (x, positions, label_mask_prefix_len)."""
+    top, _ = _split_layers(params)
+    if cfg.frontend.kind == "audio":
+        # stub frontend supplies precomputed frame embeddings (B, S, d)
+        x = batch["frame_embeds"].astype(_dtype(cfg))
+        Spos = x.shape[1]
+        pos = jnp.arange(Spos)
+        x = x + L.sinusoidal_pos_embed(pos, cfg.d_model).astype(x.dtype)[None]
+        return constrain(x, ("batch", None, None)), pos, 0
+    tok = batch["tokens"]
+    x = jnp.take(top["embed"], tok, axis=0)
+    prefix = 0
+    if cfg.frontend.kind == "vlm":
+        patches = batch["patch_embeds"].astype(_dtype(cfg))
+        px = patches @ top["patch_proj"]
+        x = jnp.concatenate([px, x], axis=1)
+        prefix = px.shape[1]
+    pos = jnp.arange(x.shape[1])
+    return constrain(x, ("batch", None, None)), pos, prefix
+
+
+def output_logits(cfg: ModelConfig, params, h: jax.Array) -> jax.Array:
+    top, _ = _split_layers(params)
+    w = top["embed"] if cfg.tie_embeddings else top["head"]
+    if cfg.frontend.kind == "audio" and cfg.frontend.num_codebooks > 1:
+        logits = constrain(jnp.einsum("bsd,cvd->bscv", h, w),
+                           ("batch", None, None, "vocab"))
+    else:
+        logits = constrain(jnp.einsum("bsd,vd->bsv", h, w),
+                           ("batch", None, "vocab"))
+    return L.mask_pad_logits(logits, cfg.vocab_size)
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, batch, *, attn_impl: str = "masked",
+            remat: bool = True):
+    """Training/scoring forward: returns (logits, aux_loss)."""
+    top, lyr = _split_layers(params)
+    x, positions, prefix = embed_inputs(cfg, params, batch)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _, a = _layer(cfg, lp, x, positions, mode="train",
+                         attn_impl=attn_impl)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    (x, aux), _ = lax.scan(body_fn, (x, 0.0), lyr)
+    x = L.rms_norm(x, top["final_norm"], cfg.rms_eps)
+    logits = output_logits(cfg, params, x)
+    if prefix:
+        logits = logits[:, prefix:]
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, attn_impl: str = "masked"):
+    logits, aux = forward(cfg, params, batch, attn_impl=attn_impl)
+    labels = batch["labels"]
+    if cfg.frontend.kind == "audio" and cfg.frontend.num_codebooks > 1:
+        loss = L.softmax_cross_entropy(logits, labels)   # (B,S,C) labels
+    else:
+        loss = L.softmax_cross_entropy(logits, labels)
+    coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    return loss + coef * aux, {"ce": loss, "aux": aux}
+
+
+# ---- KV cache ------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CacheSpec:
+    layout: str            # "contiguous" | "paged"
+    max_len: int
+    page_size: int = 256
+
+    @property
+    def num_pages(self) -> int:
+        return -(-self.max_len // self.page_size)
+
+
+def init_cache(cfg: ModelConfig, batch: int, spec: CacheSpec):
+    K, hd, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    dt = _dtype(cfg)
+    if spec.layout == "contiguous":
+        kv = jnp.zeros((nl, batch, spec.max_len, K, hd), dt)
+        return {"k": kv, "v": kv, "len": jnp.zeros((), jnp.int32)}
+    P, ps = spec.num_pages, spec.page_size
+    kv = jnp.zeros((nl, batch, P, ps, K, hd), dt)
+    table = jnp.tile(jnp.arange(P, dtype=jnp.int32)[None], (batch, 1))
+    return {"k": kv, "v": kv, "block_table": table,
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, spec: CacheSpec):
+    # eval_shape: NEVER materialize the cache here (a 32k-context cache is
+    # hundreds of GB; the dry-run must stay allocation-free)
+    return jax.eval_shape(lambda: init_cache(cfg, batch, spec))
+
+
+def cache_logical_axes(cfg: ModelConfig, spec: CacheSpec):
+    if spec.layout == "contiguous":
+        kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        return {"k": kv, "v": kv, "len": ()}
+    kv = ("layers", "batch", "kv_seq", None, "kv_heads", "head_dim")
+    return {"k": kv, "v": kv, "block_table": ("batch", None), "len": ()}
+
+
+def _gather_pages(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """pool: (B, P, ps, K, hd); table: (B, P) logical->physical page ids.
+
+    Returns the logically-ordered contiguous view (B, P*ps, K, hd). This is
+    the XLA-level paged read; the Pallas `paged_attention` kernel performs
+    the same access without materializing the copy (see kernels/).
+    """
+    B, P, ps, K, hd = pool.shape
+    idx = table[:, :, None, None, None]
+    g = jnp.take_along_axis(pool, idx, axis=1)
+    return g.reshape(B, P * ps, K, hd)
+
+
+def _scatter_token(pool: jax.Array, table: jax.Array, pos: jax.Array,
+                   val: jax.Array) -> jax.Array:
+    """Write val (B, K, hd) at logical position pos into the paged pool."""
+    B, P, ps, K, hd = pool.shape
+    page, off = pos // ps, pos % ps
+    phys = table[jnp.arange(B), page]          # (B,)
+    return pool.at[jnp.arange(B), phys, off].set(val.astype(pool.dtype))
+
+
+def decode_step(cfg: ModelConfig, params, batch, cache, *,
+                spec: CacheSpec):
+    """One token of autoregressive decode against the KV cache.
+
+    batch: {"token": (B,1) int} (or {"frame_embed": (B,1,d)} for audio).
+    Returns (logits_last, new_cache).
+    """
+    top, lyr = _split_layers(params)
+    pos = cache["len"]                          # scalar current length
+    if cfg.frontend.kind == "audio":
+        x = batch["frame_embed"].astype(_dtype(cfg))
+        x = x + L.sinusoidal_pos_embed(pos[None], cfg.d_model).astype(x.dtype)[None]
+    else:
+        x = jnp.take(top["embed"], batch["token"], axis=0)
+    positions = pos[None]                       # (1,)
+
+    paged = spec.layout == "paged"
+
+    x = constrain(x, ("batch", None, None))
+
+    def layer_compute(lp, x, kc, vc):
+        """One decode layer on per-layer cache slices (B, ...)."""
+        h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        if cfg.qk_norm:
+            q = L.rms_norm(q, lp["q_norm"], cfg.rms_eps)
+            k = L.rms_norm(k, lp["k_norm"], cfg.rms_eps)
+        q = L.rope_for_seq(q, positions, cfg.rope_theta)
+        k = L.rope_for_seq(k, positions, cfg.rope_theta)
+        if paged:
+            kc = _scatter_token(kc, cache["block_table"], pos, k[:, 0])
+            vc = _scatter_token(vc, cache["block_table"], pos, v[:, 0])
+            kfull = _gather_pages(kc, cache["block_table"])
+            vfull = _gather_pages(vc, cache["block_table"])
+        else:
+            kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
+            vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
+            kfull, vfull = kc, vc
+        kfull = constrain(kfull, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        vfull = constrain(vfull, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        from repro.distributed.sharding import get_global_rules
+        rules = get_global_rules() or {}
+        if rules.get("kv_seq"):
+            # flash-decoding: per-S-shard scores need the (tiny) q on
+            # every model shard; replicating q beats gathering the cache
+            q = constrain(q, ("batch", None, None, None))
+        # grouped GQA: no (B,S,H,D) kv expansion — works with hd- OR
+        # sequence-sharded (flash-decoding) caches
+        out = L.decode_attention_grouped(q, kfull, vfull, pos + 1)
+        out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), lp["wo"])
+        x = x + out
+        h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        ffn_out, _ = _ffn(cfg, lp, h)
+        return constrain(x + ffn_out, ("batch", None, None)), kc, vc
+
+    # fori_loop (NOT scan): the caches live in the loop CARRY and are
+    # updated in place per layer, so XLA aliases one cache buffer end to
+    # end (scan xs->ys would double-buffer the full cache; with donation
+    # this path holds exactly one copy).
+    def body(l, carry):
+        x, kc_all, vc_all = carry
+        lp = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, l, 0, keepdims=False), lyr)
+        kc = lax.dynamic_index_in_dim(kc_all, l, 0, keepdims=False)
+        vc = lax.dynamic_index_in_dim(vc_all, l, 0, keepdims=False)
+        x, kc, vc = layer_compute(lp, x, kc, vc)
+        kc_all = lax.dynamic_update_index_in_dim(kc_all, kc, l, 0)
+        vc_all = lax.dynamic_update_index_in_dim(vc_all, vc, l, 0)
+        return (x, kc_all, vc_all)
+
+    x, k_new, v_new = lax.fori_loop(0, cfg.num_layers, body,
+                                    (x, cache["k"], cache["v"]))
+    x = L.rms_norm(x, top["final_norm"], cfg.rms_eps)
+    logits = output_logits(cfg, params, x)
+    new_cache = dict(cache, k=k_new, v=v_new, len=pos + 1)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch, *, spec: CacheSpec,
+            attn_impl: str = "masked"):
+    """Prefill: run the full prompt, return (last_logits, cache)."""
+    top, lyr = _split_layers(params)
+    x, positions, prefix = embed_inputs(cfg, params, batch)
+    B, S = x.shape[:2]
+
+    def body(x, lp):
+        x, (k, v), _ = _layer(cfg, lp, x, positions, mode="prefill",
+                              attn_impl=attn_impl)
+        return x, (k, v)
+
+    x, (ks, vs) = lax.scan(body, x, lyr)        # ks: (L, B, S, K, hd)
+    x = L.rms_norm(x, top["final_norm"], cfg.rms_eps)
+    logits = output_logits(cfg, params, x[:, -1:])
+    pad = spec.max_len - S if spec.layout == "contiguous" else \
+        spec.num_pages * spec.page_size - S
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    if spec.layout == "paged":
+        P, ps = spec.num_pages, spec.page_size
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        ks = ks.reshape(cfg.num_layers, B, P, ps, K, hd)
+        vs = vs.reshape(cfg.num_layers, B, P, ps, K, hd)
+        table = jnp.tile(jnp.arange(P, dtype=jnp.int32)[None], (B, 1))
+        cache = {"k": ks, "v": vs, "block_table": table,
+                 "len": jnp.asarray(S, jnp.int32)}
+    else:
+        cache = {"k": ks, "v": vs, "len": jnp.asarray(S, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,98 @@
+"""AdamW with fp32 master weights, ZeRO-sharded via the logical-axis rules.
+
+The optimizer state mirrors the parameter tree, so the same sharding rules
+apply: every 2D+ matrix is sharded over (data, model) — classic ZeRO —
+without any bespoke partitioning code. Gradient clipping is global-norm.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def adamw_init(params: PyTree) -> Dict[str, PyTree]:
+    # NOTE: jnp.zeros would hand mu and nu the SAME cached constant buffer,
+    # which breaks donate_argnums ("donate the same buffer twice"); route
+    # through numpy so every leaf owns distinct storage.
+    import numpy as np
+    f32 = lambda p: jax.device_put(np.zeros(p.shape, np.float32))
+    # copy=True: astype(f32) on f32 params would ALIAS them (double-donate)
+    master = jax.tree.map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    return {
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+        "master": master,
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_params: PyTree) -> Dict[str, PyTree]:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(f32, abstract_params),
+        "nu": jax.tree.map(f32, abstract_params),
+        "master": jax.tree.map(f32, abstract_params),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def opt_logical_axes(param_axes: PyTree) -> Dict[str, PyTree]:
+    def is_leaf(x):
+        return isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)
+    ident = jax.tree.map(lambda a: a, param_axes, is_leaf=is_leaf)
+    return {"mu": ident, "nu": ident, "master": ident, "count": ()}
+
+
+def _schedule(cfg: AdamWConfig, count):
+    warm = jnp.minimum(count.astype(jnp.float32) / max(cfg.warmup_steps, 1),
+                       1.0)
+    return cfg.lr * warm
+
+
+def adamw_update(cfg: AdamWConfig, grads: PyTree, state: Dict[str, PyTree],
+                 params: PyTree) -> Tuple[PyTree, Dict[str, PyTree], Dict]:
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(g32)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+    count = state["count"] + 1
+    lr = _schedule(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, mu, nu, master):
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        step = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * master
+        master = master - lr * step
+        return mu, nu, master
+
+    out = jax.tree.map(upd, g32, state["mu"], state["nu"], state["master"])
+    mu = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)
+    new_state = {"mu": mu, "nu": nu, "master": master, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

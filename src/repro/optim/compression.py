@@ -1,0 +1,89 @@
+"""Cross-pod gradient compression (beyond-paper distributed optimization).
+
+On the multi-pod mesh the gradient all-reduce crosses the slow DCN
+(§Roofline: the pod-spanning all-reduce dominates the collective term for
+several train cells). This module reduces DCN traffic 4x by exchanging
+int8-quantized gradients with per-leaf scales and *error feedback* (the
+quantization residual is carried into the next step, so compression error
+doesn't accumulate — Seide et al. 2014 / Karimireddy et al. 2019).
+
+Mechanics: batch is sharded over ("pod", "data"). The train step computes
+the loss over the *local pod's* half of the batch inside a
+`shard_map(..., axis_names={"pod"})` region (data/model stay Auto), so
+autodiff produces per-pod partial gradients; those are quantized and
+`psum`-med over "pod" as int32, then dequantized. The intra-pod (ICI)
+reductions remain full-precision — only the slow link is compressed.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Round-trip quantization; returns (xhat, residual)."""
+    q, s = quantize_int8(x)
+    xhat = dequantize(q, s)
+    return xhat, x - xhat
+
+
+def psum_compressed(grads: PyTree, axis_name: str,
+                    errors: PyTree) -> Tuple[PyTree, PyTree]:
+    """Error-feedback compressed mean over `axis_name` (call inside
+    shard_map). Exchanges int8 payloads + one f32 scale per leaf.
+
+    Returns (mean_grads, new_errors)."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e            # error feedback
+        q, s = quantize_int8(g)
+        new_e = g - dequantize(q, s)
+        # wire exchange is INT8: all-gather the payloads (+ one f32 scale
+        # each) and reduce locally — per-pod scales make a direct int
+        # psum impossible, and all-gather(int8) is what actually crosses
+        # the DCN (visible as an s8 all-gather in the compiled HLO)
+        qs = jax.lax.all_gather(q, axis_name)            # (n, ...) s8
+        ss = jax.lax.all_gather(s, axis_name)            # (n,) f32
+        total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=(0, 0))
+        return total / n, new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    mean = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_err = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return mean, new_err
+
+
+def dcn_bytes_per_step(params: PyTree, *, compressed: bool) -> int:
+    """Analytic per-step cross-pod traffic (for EXPERIMENTS.md napkin
+    math): f32 grads vs int8+scale."""
+    total = sum(int(jnp.size(p)) if isinstance(p, jax.Array)
+                else int(_prod(p.shape)) for p in jax.tree.leaves(params))
+    return total + 4 * len(jax.tree.leaves(params)) if compressed \
+        else 4 * total
+
+
+def _prod(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out

@@ -1,0 +1,2 @@
+from repro.serving.engine import ServeEngine, ServeConfig  # noqa: F401
+from repro.serving.kv_cache import SMSPagedKV  # noqa: F401

@@ -1,0 +1,213 @@
+"""SMS-managed paged KV cache (the paper's technique applied to LLM
+serving; DESIGN.md §2.1).
+
+KV pages are InfiniStore chunks: `PlaceChunk` assigns each page to a slab
+(HBM capacity unit), the sliding GC window ages pages (active sequences
+keep their pages hot; finished sequences' pages cool and are RELEASED),
+and released pages' device slots are freed for reuse. Page payloads stay
+on device (`sms.Ref` entries); a host-side COS copy enables eviction +
+on-demand restore when an evicted sequence resumes — the paper's
+on-demand migration.
+
+The device pool uses the same layout the dry-run lowers:
+k/v (L, B, P, ps, K, hd) with per-sequence block tables (B, P) mapping
+logical page -> physical slot within the sequence's region.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.clock import Clock
+from repro.core.cos import COS
+from repro.core.gc_window import BucketState, GCConfig, SlidingWindow
+from repro.core.placement import PlacementManager
+from repro.core.sms import SMS, Ref
+
+
+@dataclass
+class KVStats:
+    pages_allocated: int = 0
+    pages_released: int = 0
+    pages_evicted_to_cos: int = 0
+    pages_restored: int = 0
+    compactions: int = 0
+
+
+class SMSPagedKV:
+    """Host control plane for one device-resident paged KV pool."""
+
+    def __init__(self, cfg: ModelConfig, *, batch_slots: int,
+                 max_len: int, page_size: int = 64,
+                 gc: Optional[GCConfig] = None,
+                 pages_per_slab: int = 64,
+                 clock: Optional[Clock] = None):
+        self.cfg = cfg
+        self.B = batch_slots
+        self.ps = page_size
+        self.P = -(-max_len // page_size)
+        self.clock = clock or Clock()
+        self.cos = COS(self.clock)
+        self.sms = SMS(self.clock)
+        gc = gc or GCConfig(gc_interval=60.0, active_intervals=2,
+                            degraded_intervals=2)
+        self.window = SlidingWindow(gc, self.clock)
+        K, hd, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+        self.page_bytes = L * page_size * K * hd * 2 * 2   # k+v bf16
+        self.placement = PlacementManager(
+            1, self.page_bytes * pages_per_slab,
+            new_function_cb=self._on_new_slab)
+        dt = jnp.dtype(cfg.dtype)
+        self.k_pool = jnp.zeros((L, self.B, self.P, page_size, K, hd), dt)
+        self.v_pool = jnp.zeros((L, self.B, self.P, page_size, K, hd), dt)
+        self.table = np.tile(np.arange(self.P, dtype=np.int32)[None],
+                             (self.B, 1))
+        # free physical slots per sequence region
+        self._free: List[Set[int]] = [set(range(self.P))
+                                      for _ in range(self.B)]
+        # chunk key ("kv/<seq>/p<j>") -> (slot b, logical j, phys, fid)
+        self.pages: Dict[str, Tuple[int, int, int, int]] = {}
+        self.seq_of_slot: Dict[int, str] = {}
+        self.stats = KVStats()
+        self.rng = np.random.default_rng(0)
+
+    def _on_new_slab(self, fid: int, fg_id: int, capacity: int) -> None:
+        self.sms.add(fid, capacity)
+        self.window.latest.add_function(fid, fg_id)
+
+    # ---- page lifecycle ---------------------------------------------------
+
+    def _key(self, seq_id: str, j: int) -> str:
+        return f"kv/{seq_id}/p{j}"
+
+    def alloc_page(self, b: int, seq_id: str, j: int) -> int:
+        """Allocate logical page j for the sequence in slot b; returns the
+        physical slot. PlaceChunk picks the slab (capacity accounting +
+        auto-scaling); the physical slot comes from the slot's region."""
+        key = self._key(seq_id, j)
+        if key in self.pages:
+            return self.pages[key][2]
+        if not self._free[b]:
+            self._reclaim_released(b)
+        if not self._free[b]:
+            raise MemoryError(f"no free KV page slots in region {b}")
+        phys = min(self._free[b])
+        self._free[b].discard(phys)
+        fid = self.placement.place_chunk(0, self.page_bytes)
+        self.sms.get(fid).store(key, Ref(self.page_bytes))
+        self.pages[key] = (b, j, phys, fid)
+        self.table[b, j] = phys
+        self.stats.pages_allocated += 1
+        return phys
+
+    def touch_sequence(self, seq_id: str, num_pages: int) -> None:
+        """Decode touched all pages of this sequence: mark hot."""
+        for j in range(num_pages):
+            key = self._key(seq_id, j)
+            if key in self.pages:
+                self.window.mark(key)
+                fid = self.pages[key][3]
+                slab = self.sms.slabs.get(fid)
+                if slab is not None:
+                    slab.invoke(0.0)
+
+    def evict_page_to_cos(self, key: str) -> None:
+        """Copy the page to host (COS) and free its device slot."""
+        b, j, phys, fid = self.pages[key]
+        kp = np.asarray(self.k_pool[:, b, phys])
+        vp = np.asarray(self.v_pool[:, b, phys])
+        self.cos.put(key, kp.tobytes() + vp.tobytes())
+        self._free[b].add(phys)
+        slab = self.sms.slabs.get(fid)
+        if slab is not None:
+            slab.delete(key)
+        del self.pages[key]
+        self.stats.pages_evicted_to_cos += 1
+
+    def restore_page(self, b: int, seq_id: str, j: int) -> int:
+        """On-demand migration: bring an evicted page back from COS into
+        a free slot of region b (paper §5.3.3)."""
+        key = self._key(seq_id, j)
+        raw = self.cos.get(key)
+        if raw is None:
+            raise KeyError(f"page {key} not in COS")
+        L, _, _, ps, K, hd = self.k_pool.shape
+        half = len(raw) // 2
+        dt = self.k_pool.dtype
+        kp = np.frombuffer(raw[:half], dtype=np.uint16 if dt == jnp.bfloat16
+                           else dt).reshape(L, ps, K, hd)
+        vp = np.frombuffer(raw[half:], dtype=np.uint16 if dt == jnp.bfloat16
+                           else dt).reshape(L, ps, K, hd)
+        if dt == jnp.bfloat16:
+            kp = kp.view(jnp.bfloat16)
+            vp = vp.view(jnp.bfloat16)
+        phys = self.alloc_page(b, seq_id, j)
+        self.k_pool = self.k_pool.at[:, b, phys].set(jnp.asarray(kp))
+        self.v_pool = self.v_pool.at[:, b, phys].set(jnp.asarray(vp))
+        self.stats.pages_restored += 1
+        return phys
+
+    def _reclaim_released(self, b: int) -> None:
+        """Free device slots whose pages' buckets were RELEASED (their
+        content persists in COS)."""
+        for key, (bb, j, phys, fid) in list(self.pages.items()):
+            if bb != b:
+                continue
+            state = self.window.state_of_function(fid)
+            if state in (None, BucketState.RELEASED) \
+                    or not self.sms.slabs.get(fid, None) \
+                    or not self.sms.get(fid).alive:
+                self.evict_page_to_cos(key)
+                self.stats.pages_released += 1
+
+    # ---- GC tick -----------------------------------------------------------
+
+    def gc_tick(self) -> None:
+        if self.window.due():
+            ev = self.window.run_gc()
+            for fg_id in self.placement.carry_over_open_fgs():
+                for fid in self.placement.fgs[fg_id].fids:
+                    ev.new_bucket.add_function(fid, fg_id)
+            for fid in ev.released_functions:
+                slab = self.sms.slabs.get(fid)
+                if slab is not None:
+                    # persist + free every page on the released slab
+                    for key in list(slab.keys()):
+                        if key in self.pages:
+                            self.evict_page_to_cos(key)
+                            self.stats.pages_released += 1
+                    slab.reclaim()
+        # compaction round: re-place marked-hot pages into the latest
+        # bucket's slabs (control-plane move; device slot unchanged)
+        for key in self.window.take_compaction_round(self.rng):
+            if key not in self.pages:
+                continue
+            b, j, phys, old_fid = self.pages[key]
+            state = self.window.state_of_function(old_fid)
+            if state in (BucketState.ACTIVE, None):
+                continue
+            new_fid = self.placement.place_chunk(0, self.page_bytes)
+            self.sms.get(new_fid).store(key, Ref(self.page_bytes))
+            old = self.sms.slabs.get(old_fid)
+            if old is not None:
+                old.delete(key)
+            self.pages[key] = (b, j, phys, new_fid)
+            self.stats.compactions += 1
+
+    # ---- views ------------------------------------------------------------
+
+    def device_cache(self, length: int):
+        """Cache pytree for transformer.decode_step."""
+        return {"k": self.k_pool, "v": self.v_pool,
+                "block_table": jnp.asarray(self.table),
+                "len": jnp.asarray(length, jnp.int32)}
+
+    def absorb(self, cache) -> None:
+        """Write back updated pools after a decode step."""
+        self.k_pool = cache["k"]
+        self.v_pool = cache["v"]

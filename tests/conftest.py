@@ -1,0 +1,37 @@
+import os
+import sys
+
+# tests must see the default (single) CPU device — the 512-device flag is
+# set ONLY inside launch/dryrun.py
+os.environ.pop("XLA_FLAGS", None)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses  # noqa: E402
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def tiny_store():
+    """Small-geometry InfiniStore on a logical clock."""
+    from repro.core import Clock, InfiniStore, StoreConfig
+    from repro.core.ec import ECConfig
+    from repro.core.gc_window import GCConfig
+    MB = 1024 * 1024
+    cfg = StoreConfig(
+        ec=ECConfig(k=4, p=2),
+        function_capacity=4 * MB,
+        fragment_bytes=1 * MB,
+        gc=GCConfig(gc_interval=10.0, active_intervals=2,
+                    degraded_intervals=2, active_warmup=5.0,
+                    degraded_warmup=20.0),
+        num_recovery_functions=4,
+    )
+    clock = Clock()
+    return InfiniStore(cfg, clock=clock), clock
+
+
+def reduced_f32(name: str, **kw):
+    from repro.configs import get_config, reduced
+    cfg = reduced(get_config(name), **kw)
+    return dataclasses.replace(cfg, dtype="float32")

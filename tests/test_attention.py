@@ -1,0 +1,80 @@
+"""Chunked/flash attention vs naive reference; window + tri variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def naive(q, k, v, *, causal=True, window=None):
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _qkv(seed, B, S, H, D, K=None):
+    K = K or H
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    return q, L.expand_kv(k, H), L.expand_kv(v, H)
+
+
+@pytest.mark.parametrize("S,bq,bk", [(16, 4, 4), (37, 8, 16), (64, 64, 64),
+                                     (100, 32, 8)])
+def test_chunked_matches_naive(S, bq, bk):
+    q, k, v = _qkv(S, 2, S, 4, 16)
+    want = naive(q, k, v)
+    got = L.chunked_attention(q, k, v, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_tri_matches_masked():
+    q, k, v = _qkv(7, 2, 64, 4, 16)
+    a = L.chunked_attention(q, k, v, block_q=16, block_k=16, impl="masked")
+    b = L.chunked_attention(q, k, v, block_q=16, block_k=16, impl="tri")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("S,w", [(64, 16), (100, 32), (32, 64)])
+def test_local_window_matches_naive(S, w):
+    q, k, v = _qkv(S + w, 2, S, 4, 16)
+    want = naive(q, k, v, window=w)
+    got = L.local_chunked_attention(q, k, v, window=w, block_q=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_matches_last_row():
+    B, S, H, D = 2, 24, 4, 16
+    q, k, v = _qkv(3, B, S, H, D)
+    want = naive(q, k, v)[:, -1:]
+    got = L.decode_attention(q[:, -1:], k, v, S)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_gqa_expand_kv_grouping():
+    """expand_kv must repeat each kv head H/K times in order."""
+    k = jnp.arange(2 * 3 * 2 * 4).reshape(2, 3, 2, 4).astype(jnp.float32)
+    e = L.expand_kv(k, 6)
+    assert e.shape == (2, 3, 6, 4)
+    for g in range(3):
+        np.testing.assert_array_equal(np.asarray(e[:, :, g]),
+                                      np.asarray(k[:, :, 0]))
+        np.testing.assert_array_equal(np.asarray(e[:, :, 3 + g]),
+                                      np.asarray(k[:, :, 1]))

@@ -1,0 +1,43 @@
+"""Pay-per-access cost ledger (paper §6.1.1 accounting)."""
+from repro.core.costmodel import (CostLedger, LAMBDA_GBS, LAMBDA_INVOKE,
+                                  S3_GET, S3_PUT, elasticache_cost)
+
+
+def test_invocation_billing():
+    led = CostLedger()
+    led.invoke("request", gb=1.5, seconds=2.0)
+    d = led.dollars()
+    assert abs(d["request"] - (1.5 * 2.0 * LAMBDA_GBS + LAMBDA_INVOKE)) < 1e-12
+
+
+def test_categories_are_separate():
+    led = CostLedger()
+    led.invoke("request", gb=1.5, seconds=1.0)
+    led.invoke("warmup", gb=1.5, seconds=0.001)
+    led.invoke("recovery", gb=3.0, seconds=5.0)
+    d = led.dollars()
+    assert d["recovery"] > d["request"] > d["warmup"] > 0
+
+
+def test_pay_per_access_overhead_metric():
+    led = CostLedger()
+    led.invoke("request", gb=1.5, seconds=10.0)
+    led.cos_op("put", 100)
+    led.invoke("warmup", gb=1.5, seconds=1.0)
+    led.invoke("recovery", gb=1.5, seconds=1.5)
+    d = led.dollars()
+    want = (d["recovery"] + d["warmup"]) / (d["request"] + d["cos"])
+    assert abs(led.pay_per_access_overhead() - want) < 1e-12
+
+
+def test_cos_costs():
+    led = CostLedger()
+    led.cos_op("put", 1000)
+    led.cos_op("get", 1000)
+    d = led.dollars()
+    assert abs(d["cos"] - (1000 * S3_PUT + 1000 * S3_GET)) < 1e-12
+
+
+def test_static_baseline():
+    # ElastiCache storage-cluster cost (paper: 36.30x InfiniStore)
+    assert elasticache_cost(0.821, 12, 50) == 0.821 * 12 * 50

@@ -1,0 +1,61 @@
+"""Reed-Solomon codec: roundtrip under any <= p erasures (property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ec import ECConfig, RSCodec
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(2, 10),
+    p=st.integers(1, 4),
+    size=st.integers(0, 5000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_with_erasures(k, p, size, seed):
+    rng = np.random.default_rng(seed)
+    codec = RSCodec(ECConfig(k=k, p=p))
+    payload = rng.integers(0, 256, size).astype(np.uint8).tobytes()
+    chunks = codec.encode(payload)
+    assert len(chunks) == k + p
+    assert len({len(c) for c in chunks}) == 1        # equal-size chunks
+    lost = rng.choice(k + p, size=rng.integers(0, p + 1), replace=False)
+    surviving = {i: c for i, c in enumerate(chunks) if i not in lost}
+    assert codec.decode(surviving) == payload
+
+
+def test_too_few_chunks_raises():
+    codec = RSCodec(ECConfig(k=4, p=2))
+    chunks = codec.encode(b"hello world")
+    with pytest.raises(ValueError):
+        codec.decode({0: chunks[0], 1: chunks[1], 2: chunks[2]})
+
+
+def test_parity_only_decode():
+    """All data chunks lost, k survivors include all parity."""
+    codec = RSCodec(ECConfig(k=3, p=2))
+    payload = bytes(range(256)) * 7
+    chunks = codec.encode(payload)
+    surviving = {0: chunks[0], 3: chunks[3], 4: chunks[4]}
+    assert codec.decode(surviving) == payload
+
+
+def test_paper_config_10_2():
+    codec = RSCodec(ECConfig(k=10, p=2))
+    payload = np.random.default_rng(1).integers(
+        0, 256, 1_000_000).astype(np.uint8).tobytes()
+    chunks = codec.encode(payload)
+    surviving = {i: c for i, c in enumerate(chunks) if i not in (2, 11)}
+    assert codec.decode(surviving) == payload
+
+
+def test_pallas_backend_matches_numpy():
+    payload = np.random.default_rng(2).integers(
+        0, 256, 10000).astype(np.uint8).tobytes()
+    c_np = RSCodec(ECConfig(k=4, p=2), backend="numpy")
+    c_pl = RSCodec(ECConfig(k=4, p=2), backend="pallas")
+    assert c_np.encode(payload) == c_pl.encode(payload)
+    chunks = dict(enumerate(c_np.encode(payload)))
+    del chunks[1], chunks[4]
+    assert c_pl.decode(chunks) == payload

@@ -1,0 +1,87 @@
+"""Sliding-window GC-bucket lifecycle (paper §5.3, Fig. 4)."""
+import numpy as np
+
+from repro.core.clock import Clock
+from repro.core.gc_window import BucketState, GCConfig, SlidingWindow
+
+
+def make_window(M=2, N=3, interval=10.0):
+    clock = Clock()
+    cfg = GCConfig(gc_interval=interval, active_intervals=M,
+                   degraded_intervals=N)
+    return SlidingWindow(cfg, clock), clock
+
+
+def test_horizon():
+    w, _ = make_window(M=6, N=12, interval=600.0)
+    assert w.cfg.horizon == 18 * 600.0   # paper IBM config: H = 3 hours
+
+
+def test_bucket_aging_active_degraded_released():
+    w, clock = make_window(M=2, N=3, interval=10.0)
+    b0 = w.latest
+    # after M intervals the bucket becomes degraded
+    for _ in range(2):
+        clock.advance(10.0)
+        w.run_gc()
+    assert b0.state == BucketState.DEGRADED
+    # after M+N intervals it is released
+    for _ in range(3):
+        clock.advance(10.0)
+        w.run_gc()
+    assert b0.state == BucketState.RELEASED
+
+
+def test_released_functions_reported():
+    w, clock = make_window(M=1, N=1, interval=10.0)
+    w.latest.add_function(7, 0)
+    released = set()
+    for _ in range(3):
+        clock.advance(10.0)
+        ev = w.run_gc()
+        released |= ev.released_functions
+    assert 7 in released
+
+
+def test_new_bucket_every_gc():
+    w, clock = make_window()
+    seen = {w.latest.index}
+    for _ in range(5):
+        clock.advance(10.0)
+        w.run_gc()
+        assert w.latest.index not in seen
+        seen.add(w.latest.index)
+
+
+def test_mark_and_compaction_round():
+    w, _ = make_window()
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        w.mark(f"c{i}")
+    picked = w.take_compaction_round(rng)
+    assert len(picked) == 5                    # 50% per round
+    assert set(picked) <= {f"c{i}" for i in range(10)}
+    rest = w.take_compaction_round(rng)
+    assert set(rest).isdisjoint(picked)
+
+
+def test_warmup_period_by_state():
+    w, clock = make_window(M=1, N=1, interval=10.0)
+    w.latest.add_function(1, 0)
+    assert w.warmup_period(1) == w.cfg.active_warmup
+    clock.advance(10.0)
+    w.run_gc()
+    assert w.warmup_period(1) == w.cfg.degraded_warmup
+    clock.advance(10.0)
+    w.run_gc()
+    assert w.warmup_period(1) is None          # released
+
+
+def test_state_of_function_latest_wins():
+    w, clock = make_window()
+    w.latest.add_function(3, 0)
+    clock.advance(10.0)
+    ev = w.run_gc()
+    # function carried over into the new bucket => state ACTIVE again
+    ev.new_bucket.add_function(3, 0)
+    assert w.state_of_function(3) == BucketState.ACTIVE

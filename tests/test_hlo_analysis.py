@@ -1,0 +1,78 @@
+"""The HLO analyzer: scan multipliers, collective parsing, trip counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.analysis.hlo import analyze_hlo, parse_hlo
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return lax.scan(body, x, None, length=10)[0]
+
+    x = jnp.ones((128, 128))
+    w = jnp.ones((128, 128))
+    txt = jax.jit(scanned).lower(x, w).compile().as_text()
+    a = analyze_hlo(txt)
+    assert a.while_trips == [10]
+    np.testing.assert_allclose(a.flops, 10 * 2 * 128**3, rtol=0.01)
+
+
+def test_trip_count_ignores_clamp_constants():
+    """Index-clamping constants (e.g. 32767) inside the loop body must not
+    inflate the trip count — only the compare bound counts."""
+    def f(x, big):
+        def body(c, i):
+            j = jnp.clip(i * 3, 0, 32767)       # clamp constant in body
+            return c + lax.dynamic_index_in_dim(big, j % 8, 0, False), None
+        out, _ = lax.scan(body, x, jnp.arange(5))
+        return out
+
+    x = jnp.ones((16,))
+    big = jnp.ones((8, 16))
+    txt = jax.jit(f).lower(x, big).compile().as_text()
+    a = analyze_hlo(txt)
+    assert a.while_trips == [5], a.while_trips
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = lax.scan(inner, c, None, length=3)
+            return ci, None
+        return lax.scan(outer, x, None, length=4)[0]
+
+    x = jnp.ones((64, 64))
+    w = jnp.ones((64, 64))
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    a = analyze_hlo(txt)
+    np.testing.assert_allclose(a.flops, 12 * 2 * 64**3, rtol=0.01)
+
+
+def test_parse_finds_entry_and_instructions():
+    def f(x):
+        return jnp.tanh(x).sum()
+    txt = jax.jit(f).lower(jnp.ones((8, 8))).compile().as_text()
+    comps, entry = parse_hlo(txt)
+    assert entry is not None and entry in comps
+    assert len(comps[entry].instrs) > 0
+
+
+def test_collective_ring_bytes_model():
+    from repro.analysis.hlo import CollectiveStat, Instr, _collective_stat
+    line = ("%all-gather.1 = bf16[16,1024]{1,0} all-gather(%x), "
+            "replica_groups={{0,1,2,3}}, dimensions={0}")
+    instr = Instr(name="all-gather.1", opcode="all-gather",
+                  shapes=[("bf16", (16, 1024))], operands=["x"],
+                  attrs="", line=line)
+    st = _collective_stat(instr, 2.0, pod_stride=256)
+    assert st.group_size == 4 and st.count == 2.0
+    assert st.result_bytes == 2 * 16 * 1024 * 2
+    np.testing.assert_allclose(st.ring_bytes,
+                               2 * (16 * 1024 * 2) * 3 / 4)
+    assert not st.dcn

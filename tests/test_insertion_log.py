@@ -1,0 +1,55 @@
+"""Insertion logs: terms, hash chain, snapshots, manifests (§5.5.1)."""
+from repro.core.clock import Clock
+from repro.core.cos import COS
+from repro.core.insertion_log import InsertionLog, PutRecord
+
+
+def make_log(snapshot_every=3):
+    cos = COS(Clock())
+    return InsertionLog(1, cos, snapshot_every=snapshot_every), cos
+
+
+def test_terms_monotonic_and_hash_chained():
+    log, _ = make_log()
+    n1 = log.append([PutRecord("a", 10, 1)])
+    n2 = log.append([PutRecord("b", 20, 1)])
+    assert (n1.term, n2.term) == (1, 2)
+    assert n2.prev_hash == n1.hash
+    assert log.last_hash == n2.hash
+
+
+def test_diff_rank_counts_all_records_including_deletes():
+    log, _ = make_log()
+    log.append([PutRecord("a", 10, 1), PutRecord("b", 10, 1)])
+    log.append([PutRecord("a", 0, 1, delete=True)])
+    assert log.diff_rank == 3
+    assert log.live_keys() == {"b"}
+
+
+def test_manifest_replays_snapshot_plus_tail():
+    log, cos = make_log(snapshot_every=2)
+    log.append([PutRecord("a", 1, 1)])
+    log.append([PutRecord("b", 1, 1)])          # snapshot at term 2
+    assert log.snapshot_term == 2
+    log.append([PutRecord("c", 1, 1)])
+    log.append([PutRecord("a", 0, 1, delete=True)])  # snapshot at term 4
+    log.append([PutRecord("d", 1, 1)])
+    assert log.manifest() == ["b", "c", "d"]
+
+
+def test_manifest_readable_by_fresh_instance():
+    """A recovering instance reconstructs the manifest purely from COS."""
+    log, cos = make_log(snapshot_every=100)     # no snapshot
+    log.append([PutRecord("x", 1, 1)])
+    log.append([PutRecord("y", 1, 1)])
+    fresh = InsertionLog(1, cos)
+    assert fresh.manifest() == ["x", "y"]
+
+
+def test_piggyback_fields():
+    log, _ = make_log()
+    log.append([PutRecord("a", 5, 1)])
+    pb = log.piggyback()
+    assert pb.term == 1 and pb.diff_rank == 1
+    assert pb.hash == log.last_hash
+    assert pb.last_node_size > 0

@@ -1,0 +1,124 @@
+"""Per-arch REDUCED-config smoke tests: one forward/train step on CPU,
+asserting output shapes + no NaNs; plus decode consistency. The FULL
+configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, reduced
+from repro.models import build_model
+
+REDUCED_LAYERS = {"recurrentgemma-2b": 3}   # needs a full (rec,rec,attn) unit
+
+
+def tiny(name):
+    cfg = reduced(get_config(name), layers=REDUCED_LAYERS.get(name, 2))
+    if cfg.moe is not None:
+        # drop-free capacity so decode == teacher forcing exactly
+        # (capacity-drop behaviour is covered separately in test_moe.py)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+def make_train_batch(cfg, B=2, S=16):
+    rng = np.random.default_rng(0)
+    if cfg.frontend.kind == "audio":
+        C = cfg.frontend.num_codebooks
+        return {"frame_embeds": jnp.asarray(
+                    rng.standard_normal((B, S, cfg.d_model)), jnp.float32),
+                "labels": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (B, S, C)), jnp.int32)}
+    if cfg.frontend.kind == "vlm":
+        Pn = cfg.frontend.num_prefix_embeds
+        return {"tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (B, S - Pn)), jnp.int32),
+                "patch_embeds": jnp.asarray(rng.standard_normal(
+                    (B, Pn, cfg.frontend.patch_embed_dim)), jnp.float32),
+                "labels": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (B, S - Pn)), jnp.int32)}
+    return {"tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_and_loss_no_nan(name):
+    cfg = tiny(name)
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    batch = make_train_batch(cfg)
+    loss, metrics = m.loss_fn(params, batch)
+    assert jnp.isfinite(loss), name
+    logits, _ = m.forward(params, batch)
+    assert not jnp.any(jnp.isnan(logits)), name
+    if cfg.frontend.kind == "audio":
+        assert logits.shape[-1] >= cfg.vocab_size
+        assert logits.shape[2] == cfg.frontend.num_codebooks
+    else:
+        assert logits.shape[-1] >= cfg.vocab_size   # padded vocab
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_one_train_step_updates_params(name):
+    from repro.launch.steps import make_train_step
+    from repro.optim import adamw
+    cfg = tiny(name)
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    opt = adamw.adamw_init(params)
+    batch = make_train_batch(cfg)
+    batch = jax.tree.map(lambda x: x[None], batch)     # 1 microbatch
+    step = make_train_step(m, adamw.AdamWConfig(lr=1e-3, warmup_steps=1))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert jnp.isfinite(metrics["loss"]) and jnp.isfinite(
+        metrics["grad_norm"]), name
+    delta = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(new_params)))
+    assert delta > 0, f"{name}: params unchanged"
+    assert not any(bool(jnp.any(jnp.isnan(p)))
+                   for p in jax.tree.leaves(new_params)), name
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_teacher_forcing(name):
+    cfg = tiny(name)
+    m = build_model(cfg, kv_layout="paged", page_size=4, wkv_impl="scan")
+    params = m.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    rng = np.random.default_rng(1)
+    if cfg.frontend.kind == "audio":
+        emb = jnp.asarray(rng.standard_normal((B, S + 1, cfg.d_model)),
+                          jnp.float32)
+        full, _ = m.forward(params, {"frame_embeds": emb,
+                                     "labels": jnp.zeros(
+                                         (B, S + 1, 4), jnp.int32)})
+        _, cache = m.prefill(params, {"frame_embeds": emb[:, :S]},
+                             max_len=16)
+        lg, _ = m.decode_step(params, {"frame_embed": emb[:, S:S + 1]},
+                              cache)
+    elif cfg.frontend.kind == "vlm":
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)),
+                           jnp.int32)
+        pe = jnp.asarray(rng.standard_normal(
+            (B, cfg.frontend.num_prefix_embeds,
+             cfg.frontend.patch_embed_dim)), jnp.float32)
+        full, _ = m.forward(params, {"tokens": toks, "patch_embeds": pe,
+                                     "labels": jnp.zeros_like(toks)})
+        _, cache = m.prefill(params, {"tokens": toks[:, :S],
+                                      "patch_embeds": pe}, max_len=32)
+        lg, _ = m.decode_step(params, {"token": toks[:, S:S + 1]}, cache)
+    else:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)),
+                           jnp.int32)
+        full, _ = m.forward(params, {"tokens": toks,
+                                     "labels": jnp.zeros_like(toks)})
+        _, cache = m.prefill(params, {"tokens": toks[:, :S]}, max_len=16)
+        lg, _ = m.decode_step(params, {"token": toks[:, S:S + 1]}, cache)
+    err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, -1])))
+    assert err < 5e-4, f"{name}: decode mismatch {err}"

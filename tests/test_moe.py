@@ -1,0 +1,84 @@
+"""MoE: group-local capacity dispatch vs dense oracle + conservation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models import moe as M
+from repro.models.transformer import _split_layers, init_params
+
+
+def tiny_moe(cap_factor=8.0, name="granite-moe-1b-a400m"):
+    cfg = dataclasses.replace(reduced(get_config(name)), dtype="float32")
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cap_factor))
+
+
+def layer_params(cfg, seed=0):
+    p = init_params(cfg, jax.random.PRNGKey(seed))
+    _, lyr = _split_layers(p)
+    return {k: v[0] for k, v in lyr.items()}
+
+
+def test_matches_dense_oracle_no_drops():
+    cfg = tiny_moe(8.0)
+    lp = layer_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, cfg.d_model))
+    y1, a1 = M.moe_ffn(cfg, lp, x)
+    y2, a2 = M.moe_ffn_dense(cfg, lp, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    assert abs(float(a1 - a2)) < 1e-6
+
+
+def test_shared_expert_arch_matches_oracle():
+    cfg = tiny_moe(8.0, "qwen2-moe-a2.7b")
+    lp = layer_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, cfg.d_model))
+    y1, _ = M.moe_ffn(cfg, lp, x)
+    y2, _ = M.moe_ffn_dense(cfg, lp, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 50), S=st.integers(4, 24))
+def test_dispatch_conservation(seed, S):
+    """Every (token, expert) pair is either placed in exactly one slot with
+    its gate weight, or dropped by capacity — never duplicated."""
+    cfg = tiny_moe(1.0)
+    m = cfg.moe
+    rng = jax.random.PRNGKey(seed)
+    probs = jax.nn.softmax(jax.random.normal(rng, (S, m.num_experts)))
+    gate_vals, ids = jax.lax.top_k(probs, m.top_k)
+    cap = M.capacity(cfg, S)
+    disp, gate_slot = M.dispatch_indices(ids, gate_vals, m.num_experts, cap)
+    disp = np.asarray(disp)
+    gate_slot = np.asarray(gate_slot)
+    placed = disp[disp < S]
+    # each placed (slot) corresponds to a unique (token, expert) pair
+    pairs = set()
+    for slot, tok in enumerate(disp):
+        if tok >= S:
+            continue
+        e = slot // cap
+        assert (tok, e) not in pairs, "duplicate dispatch"
+        pairs.add((tok, e))
+        assert gate_slot[slot] > 0
+    # capacity respected
+    for e in range(m.num_experts):
+        assert (disp[e * cap:(e + 1) * cap] < S).sum() <= cap
+
+
+def test_capacity_drops_are_graceful():
+    """With capacity factor << 1, output degrades but never NaNs."""
+    cfg = tiny_moe(0.1)
+    lp = layer_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model))
+    y, aux = M.moe_ffn(cfg, lp, x)
+    assert not bool(jnp.any(jnp.isnan(y)))
+    assert jnp.isfinite(aux)

@@ -1,0 +1,73 @@
+"""PlaceChunk (paper Fig. 5) invariants — property-based."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import PlacementManager
+
+
+def make_pm(fg_size=6, cap=1000):
+    return PlacementManager(fg_size, cap)
+
+
+def test_distinct_functions_per_object():
+    pm = make_pm(fg_size=6)
+    fids = [pm.place_chunk(i, 100) for i in range(6)]
+    assert len(set(fids)) == 6
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    fg_size=st.integers(2, 12),
+    objects=st.lists(st.integers(50, 400), min_size=1, max_size=40),
+)
+def test_no_two_chunks_share_function(fg_size, objects):
+    """The paper's guarantee: PlaceChunk never places two chunks of one
+    object on the same function (probe stride == fg_size)."""
+    pm = make_pm(fg_size=fg_size, cap=1000)
+    for size in objects:
+        fids = [pm.place_chunk(i, size) for i in range(fg_size)]
+        assert len(set(fids)) == fg_size
+
+
+@settings(max_examples=30, deadline=None)
+@given(fg_size=st.integers(2, 8), n=st.integers(1, 60))
+def test_slot_alignment(fg_size, n):
+    """Chunk i always lands on slot i of some FG."""
+    pm = make_pm(fg_size=fg_size, cap=500)
+    for _ in range(n):
+        for i in range(fg_size):
+            fid = pm.place_chunk(i, 120)
+            assert pm.functions[fid].slot == i
+
+
+def test_seal_on_hardcap_seals_whole_fg():
+    pm = make_pm(fg_size=3, cap=100)
+    fid = pm.place_chunk(0, 100)     # exactly at capacity -> sealed
+    fg = pm.functions[fid].fg_id
+    assert pm.fgs[fg].sealed
+    assert all(pm.functions[f].sealed for f in pm.fgs[fg].fids)
+    # next placement must scale out a new FG
+    fid2 = pm.place_chunk(0, 50)
+    assert pm.functions[fid2].fg_id != fg
+
+
+def test_greedy_oldest_open_fg_first():
+    pm = make_pm(fg_size=2, cap=300)
+    first = pm.place_chunk(0, 100)
+    pm.scale_out()                    # a second, newer FG exists
+    nxt = pm.place_chunk(0, 100)
+    assert pm.functions[nxt].fg_id == pm.functions[first].fg_id
+
+
+def test_get_open_funcs_scales_fg_at_a_time():
+    pm = make_pm(fg_size=4)
+    funcs = pm.get_open_funcs(9)      # needs >= 10 slots -> 3 FGs
+    assert len(funcs) >= 10
+    assert len(funcs) % 4 == 0
+    assert pm.stats.scale_outs == 3
+
+
+def test_chunk_id_out_of_range():
+    pm = make_pm(fg_size=4)
+    with pytest.raises(ValueError):
+        pm.place_chunk(4, 10)

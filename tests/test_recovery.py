@@ -1,0 +1,89 @@
+"""Failure detection + local/parallel recovery (paper §5.5, Figs. 19-21)."""
+import numpy as np
+
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+from repro.core.recovery import _chunk_shard
+
+
+def big_store(num_recovery=4):
+    cfg = StoreConfig(ec=ECConfig(k=4, p=2),
+                      function_capacity=64 * 1024 * 1024,
+                      gc=GCConfig(gc_interval=1e9),
+                      num_recovery_functions=num_recovery)
+    return InfiniStore(cfg, clock=Clock())
+
+
+def test_detection_on_term_mismatch(tiny_store):
+    st, _ = tiny_store
+    st.put("a", b"x" * 50_000)
+    fid = st.chunk_map["a|1/f0#0"]
+    st.inject_failure(fid)
+    before = st.recovery.stats.detections
+    assert st.get("a") == b"x" * 50_000
+    assert st.recovery.stats.detections > before
+
+
+def test_local_recovery_when_few_chunks(tiny_store):
+    st, _ = tiny_store
+    st.put("a", b"y" * 10_000)
+    fid = st.chunk_map["a|1/f0#1"]
+    st.inject_failure(fid)
+    st.get("a")
+    assert st.recovery.stats.local_recoveries >= 1
+    assert st.recovery.stats.parallel_recoveries == 0
+
+
+def test_parallel_recovery_when_many_chunks():
+    st = big_store(num_recovery=4)
+    rng = np.random.default_rng(0)
+    payloads = {}
+    for i in range(40):
+        payloads[f"o{i}"] = rng.bytes(20_000)
+        st.put(f"o{i}", payloads[f"o{i}"])
+    # every object's chunk 0 lands on slot-0 functions; kill one with many
+    fid = st.chunk_map["o0|1/f0#0"]
+    n_chunks = len(st.sms.get(fid).storage)
+    assert n_chunks > st.cfg.num_recovery_functions
+    st.inject_failure(fid)
+    assert st.get("o0") == payloads["o0"]
+    assert st.recovery.stats.parallel_recoveries >= 1
+    # the failed function's full content was restored
+    assert len(st.sms.get(fid).storage) == n_chunks
+
+
+def test_hash_partition_covers_all_chunks():
+    keys = [f"k{i}" for i in range(100)]
+    R = 7
+    shards = {k: _chunk_shard(k, R) for k in keys}
+    assert set(shards.values()) <= set(range(R))
+    # partition: every key in exactly one shard; roughly balanced
+    counts = np.bincount(list(shards.values()), minlength=R)
+    assert counts.sum() == 100
+    assert counts.max() <= 3 * counts.mean()
+
+
+def test_ec_masks_unrecovered_chunk(tiny_store):
+    """GETs tolerate p in-flight losses without the recovered data (the
+    paper: EC 'greatly reduces the possibility that instance reclamation
+    impacts GET latency')."""
+    st, _ = tiny_store
+    data = b"z" * 200_000
+    st.put("a", data)
+    # drop BOTH parity-slot functions' entries for this object
+    for idx in (4, 5):
+        fid = st.chunk_map[f"a|1/f0#{idx}"]
+        st.sms.get(fid).delete(f"a|1/f0#{idx}")
+    assert st.get("a") == data           # decoded from k=4 data chunks
+
+
+def test_recovered_data_served_during_recovery():
+    st = big_store(num_recovery=2)
+    rng = np.random.default_rng(1)
+    for i in range(30):
+        st.put(f"o{i}", rng.bytes(10_000))
+    fid = st.chunk_map["o5|1/f0#2"]
+    st.inject_failure(fid)
+    st.get("o5")
+    assert st.recovery.stats.chunks_recovered > 0

@@ -1,0 +1,59 @@
+"""Whole-store linearizability-ish property test: random op sequences
+(put / get / provider failure / clock advance / gc) against a dict model.
+The store must never return stale or corrupt data."""
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+
+KEYS = ["a", "b", "c"]
+
+op = st.one_of(
+    st.tuples(st.just("put"), st.sampled_from(KEYS),
+              st.integers(1, 40_000)),
+    st.tuples(st.just("get"), st.sampled_from(KEYS), st.just(0)),
+    st.tuples(st.just("fail"), st.integers(0, 10), st.just(0)),
+    st.tuples(st.just("tick"), st.integers(1, 30), st.just(0)),
+)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=st.lists(op, min_size=1, max_size=30),
+       seed=st.integers(0, 1000))
+def test_store_matches_model(ops, seed):
+    clock = Clock()
+    cfg = StoreConfig(ec=ECConfig(k=2, p=1),
+                      function_capacity=2 * 1024 * 1024,
+                      gc=GCConfig(gc_interval=20.0, active_intervals=2,
+                                  degraded_intervals=2),
+                      num_recovery_functions=2)
+    store = InfiniStore(cfg, clock=clock, seed=seed)
+    model = {}
+    rng = np.random.default_rng(seed)
+    for kind, a, b in ops:
+        if kind == "put":
+            data = rng.bytes(b)
+            ver = store.put(a, data)
+            assert ver == len([k for k in model if k == a]) \
+                or ver >= 1            # version monotonic
+            model[a] = data
+        elif kind == "get":
+            got = store.get(a)
+            want = model.get(a)
+            assert got == want, (
+                f"stale/corrupt read for {a}: "
+                f"got {None if got is None else len(got)}B, "
+                f"want {None if want is None else len(want)}B")
+        elif kind == "fail":
+            fids = sorted(store.sms.slabs)
+            if fids:
+                store.inject_failure(fids[a % len(fids)])
+        else:  # tick
+            clock.advance(float(a))
+            store.gc_tick()
+    # closing sweep: every object still readable despite failures + GC
+    for k, want in model.items():
+        assert store.get(k) == want

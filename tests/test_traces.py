@@ -1,0 +1,37 @@
+"""Workload synthesizers must match the paper's §2 characterization."""
+from repro.data.traces import (azure_blob_trace, ibm_registry_trace,
+                               trace_stats)
+
+
+def test_ibm_trace_shape():
+    ev = ibm_registry_trace(num_objects=200, num_requests=2000,
+                            duration=3600.0, seed=0)
+    s = trace_stats(ev)
+    assert s["num_events"] == 2000
+    # heavy tail: a sizeable fraction of events touch >10MB objects
+    assert 0.1 < s["frac_large"] < 0.7
+    # bursty: most multi-access objects have CoV > 1 (paper Fig. 1d)
+    assert s["frac_cov_gt1"] > 0.5
+    # strong temporal reuse: p80 reuse well under the trace duration
+    assert s["reuse_p80"] < 3600.0 / 3
+
+
+def test_azure_trace_shorter_reuse():
+    ibm = trace_stats(ibm_registry_trace(seed=1))
+    az = trace_stats(azure_blob_trace(seed=1))
+    assert az["reuse_p50"] < ibm["reuse_p50"]
+
+
+def test_events_sorted_and_valid():
+    ev = azure_blob_trace(num_objects=50, num_requests=500, seed=2)
+    assert all(e.op in ("get", "put") and e.size > 0 for e in ev)
+    assert all(ev[i].t <= ev[i + 1].t for i in range(len(ev) - 1))
+
+
+def test_first_touch_is_put():
+    ev = ibm_registry_trace(num_objects=100, num_requests=1000, seed=3)
+    seen = set()
+    for e in ev:
+        if e.key not in seen:
+            assert e.op == "put", "first access must create the object"
+            seen.add(e.key)

@@ -1,0 +1,98 @@
+"""Versioning + persistent buffer (paper Appendix A) semantics."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import Clock, ConcurrentPutError, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+from repro.core.versioning import MetadataTable, MetaStatus, PersistentBuffer
+
+
+def test_cas_versions_monotonic():
+    mt = MetadataTable()
+    c1 = mt.prepare("k")
+    m, ok = mt.cas("k", c1)
+    assert ok and m.ver == 1
+    c1.done(True)
+    c2 = mt.prepare("k")
+    m, ok = mt.cas("k", c2)
+    assert not ok                      # must revise to ver 2 first
+    c2.revise(m.ver + 1)
+    m, ok = mt.cas("k", c2)
+    assert ok and m.ver == 2 and m.prev_ver == 1
+
+
+def test_pending_blocks_new_cas():
+    mt = MetadataTable()
+    c1 = mt.prepare("k")
+    mt.cas("k", c1)                    # still PENDING
+    c2 = mt.prepare("k")
+    m, ok = mt.cas("k", c2)
+    assert not ok and m is c1 and not m.is_done()
+
+
+def test_persistent_buffer_read_after_write():
+    pb = PersistentBuffer()
+    pb.create("k|1", b"payload")
+    assert pb.load("k|1") == b"payload"
+    pb.release("k|1")
+    assert pb.load("k|1") is None
+    assert pb.hits == 1
+
+
+def test_store_updates_create_versions(tiny_store):
+    st, _ = tiny_store
+    assert st.put("x", b"v1" * 100) == 1
+    assert st.put("x", b"v2" * 100) == 2
+    assert st.get("x") == b"v2" * 100
+
+
+def test_concurrent_put_raises_retry(tiny_store):
+    st, _ = tiny_store
+    st.put("x", b"base")
+    # simulate an in-flight PUT by inserting a PENDING head
+    c = st.mt.prepare("x", 1)
+    c.revise(2)
+    st.mt.cas("x", c)
+
+    def finish():
+        c.done(True)
+
+    t = threading.Timer(0.05, finish)
+    t.start()
+    with pytest.raises(ConcurrentPutError):
+        st.put("x", b"conflict")
+    t.join()
+
+
+def test_consistency_increasing_cos_read():
+    """The SCFS-style retry loop must mask COS visibility lag."""
+    clock = Clock()
+    cfg = StoreConfig(ec=ECConfig(k=2, p=1),
+                      function_capacity=4 * 1024 * 1024,
+                      gc=GCConfig(gc_interval=10.0),
+                      cos_visibility_lag=5.0)
+    st = InfiniStore(cfg, clock=clock)
+    st.cos.put("chunk/z", b"lagged")
+    assert st.cos.get("chunk/z") is None          # not yet visible
+    assert st._cos_read_consistent("chunk/z") == b"lagged"
+
+
+def test_get_after_total_reclaim_with_lag():
+    """Everything reclaimed + laggy COS: GET still returns the payload
+    (recovery replays insertion logs through the consistency loop)."""
+    clock = Clock()
+    cfg = StoreConfig(ec=ECConfig(k=2, p=1),
+                      function_capacity=4 * 1024 * 1024,
+                      gc=GCConfig(gc_interval=10.0, active_intervals=1,
+                                  degraded_intervals=1),
+                      cos_visibility_lag=5.0)
+    st = InfiniStore(cfg, clock=clock)
+    payload = np.random.default_rng(0).bytes(5000)
+    st.put("y", payload)
+    clock.advance(6.0)                            # COS writes visible
+    for slab in st.sms.slabs.values():
+        slab.reclaim()
+    assert st.get("y") == payload
