@@ -1,0 +1,187 @@
+"""End-to-end erasure-coding path benchmark (paper §5.2–§5.3).
+
+Measures encode / decode / degraded-read throughput (MB/s) of the RS
+codec at 1 / 10 / 100 MB object sizes, comparing the seed's per-fragment
+path (framed concat + exp/log matmul + fresh Gauss-Jordan inversion per
+degraded fragment) against the batched data path (`encode_many` /
+`decode_many`: one stacked table-matmul per batch + LRU-cached decode
+matrices). Full runs write ``BENCH_ec.json`` at the repo root so later
+PRs have a perf trajectory; ``--smoke`` runs write
+``BENCH_ec_smoke.json`` so CI never clobbers it.
+
+Usage: PYTHONPATH=src python benchmarks/ec_path.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                      # direct-script invocation
+    _HERE = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, os.path.join(_HERE, ".."))
+    sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+
+import numpy as np
+
+from repro.core.ec import _HEADER, ECConfig, RSCodec
+from repro.kernels.rs_gf256.ref import gf_inv_matrix_np, gf_matmul_np
+
+MB = 1024 * 1024
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+
+# ---------------------------------------------------------------------------
+# per-fragment baseline: the seed implementation, kept verbatim-in-spirit
+# ---------------------------------------------------------------------------
+
+def _encode_baseline(codec: RSCodec, frag: bytes) -> list:
+    """Seed encode: `framed` bytes concat, exp/log matmul, row tobytes."""
+    k, p = codec.cfg.k, codec.cfg.p
+    framed = _HEADER.pack(len(frag)) + frag
+    clen = -(-len(framed) // k)
+    buf = np.zeros((k, clen), np.uint8)
+    flat = np.frombuffer(framed, np.uint8)
+    buf.reshape(-1)[:len(flat)] = flat
+    parity = gf_matmul_np(codec._parity, buf)
+    return [buf[i].tobytes() for i in range(k)] + \
+           [parity[i].tobytes() for i in range(p)]
+
+
+def _decode_baseline(codec: RSCodec, chunks: dict) -> bytes:
+    """Seed decode: fresh O(k^3) inversion + exp/log matmul per fragment."""
+    k = codec.cfg.k
+    idx = sorted(chunks)[:k]
+    if idx == list(range(k)):
+        data_rows = np.stack(
+            [np.frombuffer(chunks[i], np.uint8) for i in idx])
+    else:
+        sub = codec._gen[idx]
+        surv = np.stack([np.frombuffer(chunks[i], np.uint8) for i in idx])
+        data_rows = gf_matmul_np(gf_inv_matrix_np(sub), surv)
+    framed = data_rows.reshape(-1).tobytes()
+    (orig_len,) = _HEADER.unpack(framed[:_HEADER.size])
+    return framed[_HEADER.size:_HEADER.size + orig_len]
+
+
+def _best(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_point(size: int, frag_bytes: int, *, k: int = 10, p: int = 2,
+                repeats: int = 2) -> dict:
+    rng = np.random.default_rng(size)
+    payload = rng.bytes(size)
+    fragments = [payload[i:i + frag_bytes]
+                 for i in range(0, size, frag_bytes)]
+    codec = RSCodec(ECConfig(k=k, p=p))
+    mb = size / MB
+
+    # ---- encode ----
+    t_enc_base = _best(
+        lambda: [_encode_baseline(codec, f) for f in fragments], repeats)
+    t_enc_batch = _best(lambda: codec.encode_many(fragments), repeats)
+    chunk_lists = codec.encode_many(fragments)
+    assert [c for c in chunk_lists] == \
+        [_encode_baseline(codec, f) for f in fragments], "encode mismatch"
+
+    # ---- degraded read: two data chunks lost per fragment ----
+    lost = (1, min(3, k - 1))
+    cmaps = [{i: ch[i] for i in range(k + p) if i not in lost}
+             for ch in chunk_lists]
+    t_dec_base = _best(
+        lambda: [_decode_baseline(codec, cm) for cm in cmaps], repeats)
+    t_dec_batch = _best(lambda: codec.decode_many(cmaps), repeats)
+    assert b"".join(codec.decode_many(cmaps)) == payload, "decode mismatch"
+
+    # ---- healthy read (all data rows survive — no matmul either way) ----
+    healthy = [{i: ch[i] for i in range(k)} for ch in chunk_lists]
+    t_dec_healthy = _best(lambda: codec.decode_many(healthy), repeats)
+
+    info = codec.cache_info()
+    return {
+        "object_mb": mb, "fragments": len(fragments), "k": k, "p": p,
+        "encode_base_MBps": round(mb / t_enc_base, 1),
+        "encode_batched_MBps": round(mb / t_enc_batch, 1),
+        "encode_speedup": round(t_enc_base / t_enc_batch, 2),
+        "degraded_base_MBps": round(mb / t_dec_base, 1),
+        "degraded_batched_MBps": round(mb / t_dec_batch, 1),
+        "degraded_speedup": round(t_dec_base / t_dec_batch, 2),
+        "healthy_MBps": round(mb / t_dec_healthy, 1),
+        "decode_inversions": info["inversions"],
+        "decode_cache_hits": info["hits"],
+    }
+
+
+def run_bench(smoke: bool) -> dict:
+    if smoke:
+        points = [bench_point(1 * MB, 128 * 1024, repeats=2)]
+    else:
+        points = [bench_point(1 * MB, 128 * 1024, repeats=3),
+                  bench_point(10 * MB, 1 * MB, repeats=2),
+                  bench_point(100 * MB, 10 * MB, repeats=1)]
+    return {"bench": "ec_path", "smoke": smoke,
+            "ec": {"k": 10, "p": 2}, "points": points}
+
+
+def _default_out(smoke: bool) -> str:
+    # smoke results go to a scratch file so CI never clobbers the
+    # committed full-run perf trajectory in BENCH_ec.json
+    name = "BENCH_ec_smoke.json" if smoke else "BENCH_ec.json"
+    return os.path.join(ROOT, name)
+
+
+def run() -> list:
+    """benchmarks.run entry point (smoke sizes, CSV rows)."""
+    result = run_bench(smoke=True)
+    _write(result, _default_out(smoke=True))
+    rows = []
+    for pt in result["points"]:
+        tag = f"{pt['object_mb']:g}MB"
+        rows.append(f"ec_encode_batched_{tag},"
+                    f"{pt['encode_batched_MBps']:.2f},"
+                    f"MB/s speedup={pt['encode_speedup']}x")
+        rows.append(f"ec_degraded_batched_{tag},"
+                    f"{pt['degraded_batched_MBps']:.2f},"
+                    f"MB/s speedup={pt['degraded_speedup']}x "
+                    f"inversions={pt['decode_inversions']}")
+    return rows
+
+
+def _write(result: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 MB point only (CI sanity); writes "
+                         "BENCH_ec_smoke.json unless --out is given")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    result = run_bench(args.smoke)
+    out = args.out or _default_out(args.smoke)
+    _write(result, out)
+    for pt in result["points"]:
+        print(f"{pt['object_mb']:>6g} MB | "
+              f"encode {pt['encode_base_MBps']:>8.1f} -> "
+              f"{pt['encode_batched_MBps']:>8.1f} MB/s "
+              f"({pt['encode_speedup']}x) | "
+              f"degraded {pt['degraded_base_MBps']:>7.1f} -> "
+              f"{pt['degraded_batched_MBps']:>7.1f} MB/s "
+              f"({pt['degraded_speedup']}x) | "
+              f"inversions={pt['decode_inversions']}")
+    print(f"wrote {os.path.relpath(out)}")
+
+
+if __name__ == "__main__":
+    main()

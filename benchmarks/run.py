@@ -21,6 +21,7 @@ MODULES = [
     ("scaleout", "Figs 16/17 scale-out"),
     ("recovery", "Figs 18-21 parallel recovery"),
     ("factor_analysis", "Figs 22/23 factor analysis"),
+    ("ec_path", "EC encode/decode throughput (writes BENCH_ec.json)"),
     ("kernels", "kernel microbenchmarks"),
     ("roofline", "§Roofline summary (reads experiments/dryrun.jsonl)"),
 ]

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# One reproducible tier-1 gate: dev deps (best effort — the hypothesis
+# fallback shim keeps tests runnable offline), the tier-1 pytest command
+# from ROADMAP.md, and an EC-path benchmark sanity run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt 2>/dev/null \
+    || echo "ci.sh: pip install failed (offline?); using preinstalled deps"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q
+python benchmarks/ec_path.py --smoke

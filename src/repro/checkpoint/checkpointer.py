@@ -71,6 +71,12 @@ class Checkpointer:
     def save(self, step: int, state: PyTree) -> None:
         leaves = _leaf_paths(state)
         manifest = {"step": step, "leaves": []}
+        # shards ride batched PUTs, flushed in bounded sub-batches so
+        # peak host memory stays O(limit) (encode_many materializes
+        # ~(k+p)/k x the sub-batch bytes) while keeping the per-function
+        # invoke/log amortization within each sub-batch
+        limit = max(4 * self.cfg.leaf_shard_bytes, 64 * 1024 * 1024)
+        sub, sub_bytes = [], 0
         for name, leaf in leaves:
             arr = np.asarray(leaf)
             if arr.dtype == jax.numpy.bfloat16:
@@ -85,11 +91,17 @@ class Checkpointer:
             for si in range(nshards):
                 lo = si * self.cfg.leaf_shard_bytes
                 hi = min(len(data), lo + self.cfg.leaf_shard_bytes)
-                self.store.put(self._leaf_key(step, name, si), data[lo:hi])
+                sub.append((self._leaf_key(step, name, si), data[lo:hi]))
+                sub_bytes += hi - lo
+                if sub_bytes >= limit:
+                    self.store.put_many(sub)
+                    sub, sub_bytes = [], 0
             manifest["leaves"].append(
                 {"name": name, "dtype": payload_dtype,
                  "shape": list(arr.shape), "nshards": nshards,
                  "nbytes": len(data)})
+        if sub:
+            self.store.put_many(sub)
         self.store.put(self._manifest_key(step),
                        json.dumps(manifest).encode())
         with self._lock:
@@ -122,11 +134,21 @@ class Checkpointer:
         if mb is None:
             raise FileNotFoundError(f"no checkpoint manifest for {step}")
         manifest = json.loads(mb.decode())
+        shard_keys = [self._leaf_key(step, entry["name"], si)
+                      for entry in manifest["leaves"]
+                      for si in range(entry["nshards"])]
+        # batched decode in bounded sub-batches, mirroring save(): one
+        # unbounded get_many would hold ~3-4x the checkpoint in host RAM
+        limit = max(4 * self.cfg.leaf_shard_bytes, 64 * 1024 * 1024)
+        per_batch = max(1, limit // self.cfg.leaf_shard_bytes)
+        shards: Dict[str, Optional[bytes]] = {}
+        for i in range(0, len(shard_keys), per_batch):
+            shards.update(self.store.get_many(shard_keys[i:i + per_batch]))
         leaves: Dict[str, np.ndarray] = {}
         for entry in manifest["leaves"]:
             parts = []
             for si in range(entry["nshards"]):
-                b = self.store.get(self._leaf_key(step, entry["name"], si))
+                b = shards.get(self._leaf_key(step, entry["name"], si))
                 if b is None:
                     raise IOError(
                         f"checkpoint shard lost: {entry['name']}/s{si}")

@@ -1,20 +1,32 @@
 """Reed-Solomon erasure-coding codec facade (paper: RS(10+2) by default).
 
 Splits a byte payload into k data chunks + p parity chunks; any k of the
-k+p chunks reconstruct the payload. Host math is numpy (table-based);
-`backend="pallas"` routes the GF(256) matmul through the TPU kernel
-(interpret mode on CPU) — bit-identical by tests/test_kernels_rs.py.
+k+p chunks reconstruct the payload. Host math is numpy via the full
+256x256 product table (one gather + one XOR per coefficient);
+`backend="pallas"` routes the GF(256) matmul through the bit-sliced TPU
+kernel (compiled on TPU, interpret mode on CPU) — bit-identical by
+tests/test_kernels_rs.py.
+
+Batched data path: `encode_many` / `decode_many` stack every fragment of
+a request column-wise into ONE (k, sum L) GF(256) matmul instead of one
+dispatch per fragment, and decode matrices are LRU-cached by survivor
+index tuple so repeated degraded reads with the same survivor set pay
+for exactly one O(k^3) Gauss-Jordan inversion (`cache_info()` exposes
+hit accounting). Encode writes the framed payload straight into one
+preallocated stacked buffer — no intermediate `header + payload` concat.
 """
 from __future__ import annotations
 
 import struct
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.kernels.rs_gf256.ref import (cauchy_parity_matrix,
-                                        gf_inv_matrix_np, gf_matmul_np)
+                                        gf_inv_matrix_np, gf_matmul_table)
 
 _HEADER = struct.Struct("<I")    # original length prefix
 
@@ -30,56 +42,149 @@ class ECConfig:
 
 
 class RSCodec:
-    def __init__(self, cfg: ECConfig = ECConfig(), *, backend: str = "numpy"):
+    def __init__(self, cfg: ECConfig = ECConfig(), *, backend: str = "numpy",
+                 inv_cache_size: int = 64):
         self.cfg = cfg
         self.backend = backend
         self._parity = cauchy_parity_matrix(cfg.k, cfg.p)
         self._gen = np.concatenate(
             [np.eye(cfg.k, dtype=np.uint8), self._parity], axis=0)
+        # decode-matrix LRU: survivor index tuple -> inverted (k, k) matrix
+        self._inv_cache: "OrderedDict[Tuple[int, ...], np.ndarray]" = \
+            OrderedDict()
+        self._inv_cache_size = inv_cache_size
+        self._inv_lock = threading.Lock()    # store serves concurrent GETs
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._inversions = 0
 
     def _matmul(self, G: np.ndarray, X: np.ndarray) -> np.ndarray:
         if self.backend == "pallas":
             from repro.kernels.rs_gf256.ops import gf256_matmul
-            return np.asarray(gf256_matmul(G, X, backend="interpret"))
-        return gf_matmul_np(G, X)
+            # compiled on TPU, interpret elsewhere (ops.py dispatch)
+            return np.asarray(gf256_matmul(G, X, backend="pallas"))
+        return gf_matmul_table(G, X)
 
     # ---- encode -------------------------------------------------------------
 
     def encode(self, payload: bytes) -> List[bytes]:
         """payload -> k+p chunk payloads (equal length)."""
+        return self.encode_many([payload])[0]
+
+    def encode_many(self, payloads: Sequence[bytes]) -> List[List[bytes]]:
+        """Batch encode: all payloads' data blocks are stacked column-wise
+        into one (k, sum clen) buffer and the parity rows come from a
+        single GF(256) matmul."""
+        if not payloads:
+            return []
         k, p = self.cfg.k, self.cfg.p
-        framed = _HEADER.pack(len(payload)) + payload
-        clen = -(-len(framed) // k)
-        buf = np.zeros((k, clen), np.uint8)
-        flat = np.frombuffer(framed, np.uint8)
-        buf.reshape(-1)[:len(flat)] = flat
-        parity = self._matmul(self._parity, buf)
-        return [buf[i].tobytes() for i in range(k)] + \
-               [parity[i].tobytes() for i in range(p)]
+        clens = [self.chunk_len(len(pl)) for pl in payloads]
+        data = np.zeros((k, int(sum(clens))), np.uint8)
+        off = 0
+        for pl, clen in zip(payloads, clens):
+            self._fill_framed(data[:, off:off + clen], pl)
+            off += clen
+        parity = self._matmul(self._parity, data)
+        out: List[List[bytes]] = []
+        off = 0
+        for clen in clens:
+            sl = slice(off, off + clen)
+            out.append([data[i, sl].tobytes() for i in range(k)] +
+                       [parity[i, sl].tobytes() for i in range(p)])
+            off += clen
+        return out
+
+    @staticmethod
+    def _fill_framed(block: np.ndarray, payload: bytes) -> None:
+        """Write the framed payload (length header + payload) row-major
+        into `block` — a (k, clen) column-slice view of the stacked
+        buffer — via direct per-row memcpys."""
+        k, clen = block.shape
+        hdr = np.frombuffer(_HEADER.pack(len(payload)), np.uint8)
+        flat = np.frombuffer(payload, np.uint8)
+        H, end = hdr.size, hdr.size + flat.size
+        for i in range(k):
+            s = i * clen
+            if s >= end:
+                break
+            e = min(s + clen, end)
+            dst = block[i]
+            if s < H:                          # row overlaps the header
+                hn = min(H, e) - s
+                dst[:hn] = hdr[s:s + hn]
+                if e > H:
+                    dst[hn:e - s] = flat[:e - H]
+            else:
+                dst[:e - s] = flat[s - H:e - H]
 
     # ---- decode -------------------------------------------------------------
 
     def decode(self, chunks: Dict[int, bytes]) -> bytes:
         """chunks: {chunk_index: payload} with >= k entries. Returns the
         original payload (any k of the k+p indices suffice)."""
+        return self.decode_many([chunks])[0]
+
+    def decode_many(self, chunk_maps: Sequence[Dict[int, bytes]]
+                    ) -> List[bytes]:
+        """Batch decode: fragments sharing a survivor set are stacked
+        column-wise and reconstructed by one cached-inverse matmul."""
         k = self.cfg.k
-        if len(chunks) < k:
-            raise ValueError(
-                f"need >= {k} chunks to decode, got {len(chunks)}")
-        idx = sorted(chunks)[:k]
-        clen = len(chunks[idx[0]])
-        data_rows = np.zeros((k, clen), np.uint8)
-        if all(i < k for i in idx) and idx == list(range(k)):
-            for i in idx:
-                data_rows[i] = np.frombuffer(chunks[i], np.uint8)
-        else:
-            sub = self._gen[idx]                         # (k, k)
-            surv = np.stack([np.frombuffer(chunks[i], np.uint8)
-                             for i in idx])
-            data_rows = self._matmul(gf_inv_matrix_np(sub), surv)
-        framed = data_rows.reshape(-1).tobytes()
-        (orig_len,) = _HEADER.unpack(framed[:_HEADER.size])
+        ident = tuple(range(k))
+        results: List[bytes] = [b""] * len(chunk_maps)
+        groups: Dict[Tuple[int, ...], List[int]] = {}
+        for pos, chunks in enumerate(chunk_maps):
+            if len(chunks) < k:
+                raise ValueError(
+                    f"need >= {k} chunks to decode, got {len(chunks)}")
+            idx = tuple(sorted(chunks)[:k])
+            if idx == ident:                   # all data rows survive
+                results[pos] = self._unframe(
+                    b"".join(chunks[i] for i in ident))
+            else:
+                groups.setdefault(idx, []).append(pos)
+        for idx, positions in groups.items():
+            inv = self._decode_matrix(idx)
+            clens = [len(chunk_maps[pos][idx[0]]) for pos in positions]
+            surv = np.empty((k, int(sum(clens))), np.uint8)
+            off = 0
+            for pos, clen in zip(positions, clens):
+                cm = chunk_maps[pos]
+                for r, i in enumerate(idx):
+                    surv[r, off:off + clen] = np.frombuffer(cm[i], np.uint8)
+                off += clen
+            dec = self._matmul(inv, surv)
+            off = 0
+            for pos, clen in zip(positions, clens):
+                results[pos] = self._unframe(dec[:, off:off + clen].tobytes())
+                off += clen
+        return results
+
+    def _decode_matrix(self, idx: Tuple[int, ...]) -> np.ndarray:
+        with self._inv_lock:
+            inv = self._inv_cache.get(idx)
+            if inv is not None:
+                self._inv_cache.move_to_end(idx)
+                self._cache_hits += 1
+                return inv
+            self._cache_misses += 1
+            self._inversions += 1
+        inv = gf_inv_matrix_np(self._gen[list(idx)])   # outside the lock
+        with self._inv_lock:
+            self._inv_cache[idx] = inv
+            if len(self._inv_cache) > self._inv_cache_size:
+                self._inv_cache.popitem(last=False)
+        return inv
+
+    @staticmethod
+    def _unframe(framed: bytes) -> bytes:
+        (orig_len,) = _HEADER.unpack_from(framed)
         return framed[_HEADER.size:_HEADER.size + orig_len]
+
+    def cache_info(self) -> Dict[str, int]:
+        """Decode-matrix LRU accounting (hits/misses/inversions/size)."""
+        return {"hits": self._cache_hits, "misses": self._cache_misses,
+                "inversions": self._inversions,
+                "size": len(self._inv_cache)}
 
     def chunk_len(self, payload_len: int) -> int:
         return -(-(payload_len + _HEADER.size) // self.cfg.k)

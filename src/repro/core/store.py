@@ -69,10 +69,13 @@ class StoreStats:
 
 
 class InfiniStore:
-    def __init__(self, cfg: StoreConfig = StoreConfig(), *,
+    def __init__(self, cfg: Optional[StoreConfig] = None, *,
                  clock: Optional[Clock] = None,
                  cos_root: Optional[str] = None, seed: int = 0):
-        self.cfg = cfg
+        # NOTE: cfg default must be constructed per-instance — a dataclass
+        # default in the signature would be shared (and cross-mutated)
+        # between every default-constructed store.
+        self.cfg = cfg = cfg if cfg is not None else StoreConfig()
         self.clock = clock or Clock()
         self.cos = COS(self.clock, visibility_lag=cfg.cos_visibility_lag,
                        root=cos_root)
@@ -154,38 +157,89 @@ class InfiniStore:
 
     def put(self, key: str, value: bytes) -> int:
         """Strongly-consistent versioned PUT. Returns the version."""
-        self.stats.puts += 1
-        self._track_queue(len(value))
-        c = self.mt.prepare(key, 1)
-        while True:
-            m, ok = self.mt.cas(key, c)
-            if ok:
-                break
-            if not m.is_done():
-                m.wait(timeout=5.0)
-                raise ConcurrentPutError(key)
-            c.revise(m.ver + 1)
-        ver = c.ver
-        self.mt.store(f"{key}|{ver}", c)
-        fragments = [value[i:i + self.cfg.fragment_bytes]
-                     for i in range(0, max(len(value), 1),
-                                    self.cfg.fragment_bytes)]
-        c.num_fragments = len(fragments)
-        c.size = len(value)
-        ok_all = True
-        for fi, frag in enumerate(fragments):
-            fkey = f"{key}|{ver}/f{fi}"
-            self.pb.create(fkey, frag)              # persistent buffer
-            ok_all &= self._put_fragment(fkey, frag)
-        # PUT returns after SMS insertion; COS persistence is async and
-        # retried from the persistent buffer (§5.3.2). Here the insertion
-        # log append IS the durable point, then buffers release.
-        for fi in range(len(fragments)):
-            self.pb.release(f"{key}|{ver}/f{fi}")
-        ok = c.done(ok_all)
-        if ok and c.prev_ver > 0:
-            self._gc_old_version(key, c.prev_ver)
-        return ver if ok else -1
+        return self.put_many([(key, value)], raise_on_conflict=True)[key]
+
+    def put_many(self, items, *, raise_on_conflict: bool = False
+                 ) -> Dict[str, int]:
+        """Batch PUT: one CAS per key, but ALL fragments of ALL objects go
+        through a single `encode_many` codec call and chunk writes are
+        grouped per function (one invoke + one insertion-log append each).
+        items: dict or iterable of (key, value). Returns {key: version}
+        (-1 on failure), matching `put` per key. A CAS conflict on one key
+        fails only that key (-1) unless raise_on_conflict (the single-key
+        `put` contract: raise so the caller retries)."""
+        items = list(items.items()) if isinstance(items, dict) \
+            else list(items)
+        if len({k for k, _ in items}) != len(items):
+            # a duplicate key would CAS against its own in-flight version
+            raise ValueError("duplicate keys in put_many batch")
+        conflicted: List[str] = []
+        metas: List[Tuple[str, object, int, List[str]]] = []
+        frags: List[Tuple[str, bytes]] = []
+        try:
+            for key, value in items:
+                self.stats.puts += 1
+                self._track_queue(len(value))
+                c = self.mt.prepare(key, 1)
+                try:
+                    while True:
+                        m, ok = self.mt.cas(key, c)
+                        if ok:
+                            break
+                        if not m.is_done():
+                            m.wait(timeout=5.0)
+                            raise ConcurrentPutError(key)
+                        c.revise(m.ver + 1)
+                except ConcurrentPutError:
+                    # candidate never installed -> nothing to clean up;
+                    # other keys in the batch proceed independently
+                    if raise_on_conflict:
+                        raise
+                    conflicted.append(key)
+                    continue
+                ver = c.ver
+                self.mt.store(f"{key}|{ver}", c)
+                # register for cleanup BEFORE fragmenting: once the CAS
+                # installed c as the head, any failure below must still
+                # finalize this key (fkeys is mutated in place)
+                fkeys: List[str] = []
+                metas.append((key, c, ver, fkeys))
+                fragments = [value[i:i + self.cfg.fragment_bytes]
+                             for i in range(0, max(len(value), 1),
+                                            self.cfg.fragment_bytes)]
+                c.num_fragments = len(fragments)
+                c.size = len(value)
+                for fi, frag in enumerate(fragments):
+                    fkey = f"{key}|{ver}/f{fi}"
+                    self.pb.create(fkey, frag)      # persistent buffer
+                    fkeys.append(fkey)
+                    frags.append((fkey, frag))
+            failed = self._put_fragments(frags)
+            # PUT returns after SMS insertion; COS persistence is async
+            # and retried from the persistent buffer (§5.3.2). Here the
+            # insertion log append IS the durable point, buffers release.
+            out: Dict[str, int] = {}
+            for key, c, ver, fkeys in metas:
+                for fkey in fkeys:
+                    self.pb.release(fkey)
+                ok = c.done(not any(fk in failed for fk in fkeys))
+                if ok and c.prev_ver > 0:
+                    self._gc_old_version(key, c.prev_ver)
+                out[key] = ver if ok else -1
+        except BaseException:
+            # finalize every CAS-installed key that hasn't completed as
+            # failed so no metadata head stays PENDING forever (readers
+            # would block and later puts would raise on every attempt) —
+            # covers CAS conflicts, encode/placement errors, MemoryError
+            for _, c, _, fkeys in metas:
+                if not c.is_done():
+                    for fkey in fkeys:
+                        self.pb.release(fkey)
+                    c.done(False)
+            raise
+        for key in conflicted:
+            out[key] = -1
+        return out
 
     def _gc_old_version(self, key: str, ver: int) -> None:
         """Free the superseded version's SMS chunks (COS retains them for
@@ -214,40 +268,131 @@ class InfiniStore:
                 return fid
             self.placement.seal_fg(self.placement.functions[fid].fg_id)
 
-    def _put_fragment(self, fkey: str, frag: bytes) -> bool:
-        chunks = self.codec.encode(frag)
-        per_fid_records: Dict[int, List[PutRecord]] = {}
-        for idx, chunk in enumerate(chunks):
-            ckey = f"{fkey}#{idx}"
-            fid = self._place_chunk(idx, len(chunk))
+    def _put_fragments(self, frags: List[Tuple[str, bytes]]) -> Set[str]:
+        """Encode ALL fragments in one `encode_many` call, place every
+        chunk, then drain the writes grouped by target function: one
+        `_invoke` covering the function's whole byte share (amortizing the
+        per-request busy-time base of the billing model, §5.2) and one
+        insertion-log append per function (§5.5.1). Returns the set of
+        fragment keys whose chunks failed to store."""
+        if not frags:
+            return set()
+        all_chunks = self.codec.encode_many([frag for _, frag in frags])
+        groups: Dict[int, List[Tuple[str, str, bytes]]] = {}
+        for (fkey, _), chunks in zip(frags, all_chunks):
+            for idx, chunk in enumerate(chunks):
+                ckey = f"{fkey}#{idx}"
+                fid = self._place_chunk(idx, len(chunk))
+                groups.setdefault(fid, []).append((fkey, ckey, chunk))
+        # phase 1: slab writes only, so a fragment can still fail before
+        # anything about it becomes durable
+        failed: Set[str] = set()
+        written: Dict[int, List[Tuple[str, str, bytes]]] = {}
+        for fid, items in groups.items():
             slab = self.sms.get(fid)
-            self._invoke(fid, len(chunk), "request")
-            if not slab.store(ckey, chunk):
-                return False
-            with self._lock:
-                self.chunk_map[ckey] = fid
-            # function writes its chunk to COS before returning (§5.2)
-            self.cos.put(f"chunk/{ckey}", chunk)
-            self.ledger.cos_op("put")
-            per_fid_records.setdefault(fid, []).append(
-                PutRecord(key=ckey, size=len(chunk), version=0))
-        # consolidate this window's records into insertion nodes (§5.5.1)
-        for fid, records in per_fid_records.items():
-            log = self.logs[fid]
-            log.append(records)
+            self._invoke(fid, sum(len(c) for _, _, c in items), "request")
+            for fkey, ckey, chunk in items:
+                tfid = fid
+                stored = slab.store(ckey, chunk)
+                if not stored:
+                    # the slab refused what the ledger allowed: batch
+                    # placement ran before any write, so _place_chunk's
+                    # slab-authority resync (§5.3.1) never saw the bytes
+                    # this batch already stored here. Release and
+                    # re-place now that slab.used is live.
+                    self.placement.release(tfid, len(chunk))
+                    idx = int(ckey.rsplit("#", 1)[1])
+                    for _ in range(3):
+                        tfid = self._place_chunk(idx, len(chunk))
+                        tslab = self.sms.get(tfid)
+                        self._invoke(tfid, len(chunk), "request")
+                        if tslab.store(ckey, chunk):
+                            stored = True
+                            break
+                        self.placement.release(tfid, len(chunk))
+                if stored:
+                    written.setdefault(tfid, []).append((fkey, ckey, chunk))
+                else:
+                    failed.add(fkey)
+        # phase 2: failed fragments roll their stored chunks back out of
+        # the slabs; surviving fragments become visible (chunk_map), hit
+        # COS (§5.2), and land in the insertion log — the durable point
+        for fid, items in written.items():
             slab = self.sms.get(fid)
-            slab.term = log.term
-            slab.log_hash = log.last_hash
-            slab.diff_rank = log.diff_rank
-            self.daemon_view[fid] = log.piggyback()
-        return True
+            records: List[PutRecord] = []
+            for fkey, ckey, chunk in items:
+                if fkey in failed:
+                    if slab.delete(ckey):
+                        self.placement.release(fid, len(chunk))
+                    continue
+                with self._lock:
+                    self.chunk_map[ckey] = fid
+                self.cos.put(f"chunk/{ckey}", chunk)
+                self.ledger.cos_op("put")
+                records.append(PutRecord(key=ckey, size=len(chunk),
+                                         version=0))
+            # consolidate this window's records into insertion nodes
+            if records:
+                log = self.logs[fid]
+                log.append(records)
+                slab.term = log.term
+                slab.log_hash = log.last_hash
+                slab.diff_rank = log.diff_rank
+                self.daemon_view[fid] = log.piggyback()
+        return failed
 
     # ------------------------------------------------------------------
     # GET (Appendix A right + §5.3.3)
     # ------------------------------------------------------------------
 
     def get(self, key: str) -> Optional[bytes]:
-        self.stats.gets += 1
+        return self.get_many([key])[key]
+
+    def get_many(self, keys) -> Dict[str, Optional[bytes]]:
+        """Batch GET: chunk reads happen per fragment, but ALL fragments
+        needing EC reconstruction across the whole batch are decoded by a
+        single `decode_many` call (shared survivor sets stack into one
+        cached-inverse matmul). Returns {key: value-or-None}."""
+        out: Dict[str, Optional[bytes]] = {}
+        plans: List[Tuple[str, object, List[object]]] = []
+        batch: List[Dict[int, bytes]] = []
+        for key in dict.fromkeys(keys):    # dedup, keep first-seen order
+            self.stats.gets += 1
+            m = self._resolve_meta(key)
+            if m is None:
+                out[key] = None
+                continue
+            parts: List[object] = []     # bytes, or int index into `batch`
+            local: List[Dict[int, bytes]] = []
+            for fi in range(m.num_fragments):
+                fkey = f"{key}|{m.ver}/f{fi}"
+                buf = self.pb.load(fkey)             # read-after-write
+                if buf is not None:
+                    self.stats.buffer_hits += 1
+                    parts.append(buf)
+                    continue
+                chunks = self._gather_fragment_chunks(fkey)
+                if chunks is None:
+                    out[key] = None
+                    parts = None
+                    break
+                parts.append(len(batch) + len(local))
+                local.append(chunks)
+            if parts is not None:
+                # only successful keys reach the decode batch; a failed
+                # key's already-gathered fragments are dropped here
+                batch.extend(local)
+                plans.append((key, m, parts))
+        decoded = self.codec.decode_many(batch) if batch else []
+        for key, m, parts in plans:
+            val = b"".join(p if isinstance(p, bytes) else decoded[p]
+                           for p in parts)
+            self._track_queue(len(val))
+            out[key] = val[:m.size] if m.size else val
+        return out
+
+    def _resolve_meta(self, key: str):
+        """Follow the version chain to the newest done-ok metadata."""
         m = self.mt.load(key)
         attempts = 0
         while m is not None and not m.is_done_ok() and attempts < 8:
@@ -261,24 +406,9 @@ class InfiniStore:
             attempts += 1
         if m is None or not m.is_done_ok():
             return None
-        ver = m.ver
-        frags: List[bytes] = []
-        for fi in range(m.num_fragments):
-            fkey = f"{key}|{ver}/f{fi}"
-            buf = self.pb.load(fkey)                 # read-after-write
-            if buf is not None:
-                self.stats.buffer_hits += 1
-                frags.append(buf)
-                continue
-            frag = self._get_fragment(fkey)
-            if frag is None:
-                return None
-            frags.append(frag)
-        out = b"".join(frags)
-        self._track_queue(len(out))
-        return out[:m.size] if m.size else out
+        return m
 
-    def _get_fragment(self, fkey: str) -> Optional[bytes]:
+    def _gather_fragment_chunks(self, fkey: str) -> Optional[Dict[int, bytes]]:
         n, k = self.cfg.ec.n, self.cfg.ec.k
         have: Dict[int, bytes] = {}
         missing: List[int] = []
@@ -307,7 +437,7 @@ class InfiniStore:
                     break
         if len(have) < k:
             return None
-        return self.codec.decode(have)
+        return have
 
     def _read_chunk(self, ckey: str, fid: int) -> Optional[bytes]:
         slab = self.sms.slabs.get(fid)

@@ -1,14 +1,38 @@
-"""Pallas TPU kernel: GF(256) matrix multiply for Reed-Solomon coding.
+"""Pallas TPU kernels: GF(256) matrix multiply for Reed-Solomon coding.
 
 Computes OUT = G ∘ X over GF(2^8): OUT[i, :] = XOR_j gfmul(G[i,j], X[j, :]).
 Used for both EC encode (G = Cauchy parity rows) and decode (G = inverted
 reconstruction matrix).
 
-TPU adaptation (DESIGN.md §8): GPU RS codecs use shared-memory log/exp
-tables; TPU VMEM has no efficient gather, so the per-coefficient multiply
-is a branch-free 8-step xtime ladder over int32 lanes — pure VPU ops
-(shift/and/xor/select), one (k, TILE) stripe per grid step resident in
-VMEM. Validated in interpret mode on CPU; compiled path targets TPU.
+DESIGN (bit-sliced kernel, the production path)
+-----------------------------------------------
+GPU RS codecs use shared-memory log/exp tables; TPU VMEM has no efficient
+gather, so the multiply must decompose into vector ALU ops. Multiplication
+by a *constant* c is GF(2)-linear in the bits of x, i.e. an 8x8 bit matrix
+(the companion-matrix representation of c). We exploit that in three ways:
+
+1. **Host-side bit-plane expansion** — each coefficient G[i,j] expands to
+   8 bytes ``plane[b] = gfmul(G[i,j], 2^b)`` (`gf_coeff_planes` in ref.py):
+   the image of input bit b. The inner loop is then pure mask/XOR
+   accumulation:  ``out ^= spread(bit_b(x)) & plane[b]``  with NO per-bit
+   selects and no data-dependent control flow — unlike the xtime ladder,
+   which needs a `where` per coefficient bit *and* a carry-fixup `where`
+   per shift.
+2. **4 bytes per int32 lane** — X is bitcast to uint32 so every VPU lane
+   carries 4 payload bytes. ``bits = (x >> b) & 0x01010101`` grabs bit b
+   of all four bytes at once and ``(bits << 8) - bits`` spreads each 0/1
+   byte to 0x00/0xFF (byte-local borrow, no cross-byte carries), giving
+   4x the per-op throughput of the byte-per-lane ladder.
+3. **2-D grid (stripe, output row)** — the ladder kernel unrolled a
+   Python loop over output rows inside one grid step; here rows are a
+   grid dimension, so large (m, L) problems tile instead of unrolling,
+   and the X stripe stays resident in VMEM across the row sweep (stripe
+   is the slow-moving grid axis).
+
+The legacy per-coefficient xtime-ladder kernel is kept as
+`gf256_matmul_pallas_ladder` for A/B benchmarking (benchmarks/kernels.py).
+Both are validated bit-identical to the numpy/jnp oracles in interpret
+mode on CPU; the compiled path targets TPU.
 """
 from __future__ import annotations
 
@@ -16,10 +40,80 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-TILE = 1024          # lane-aligned (8 sublanes x 128 lanes) byte tile
+from repro.kernels.rs_gf256.ref import gf_coeff_planes
 
+TILE = 1024          # ladder kernel: byte tile (8 sublanes x 128 lanes)
+TILE_W = 1024        # bit-sliced kernel: uint32 words per stripe (4 KB)
+
+_LOW_BITS = 0x01010101   # bit 0 of each packed byte
+
+
+# ---------------------------------------------------------------------------
+# bit-sliced kernel (production path)
+# ---------------------------------------------------------------------------
+
+def _rs_bitsliced_kernel(g_ref, x_ref, o_ref, *, k: int):
+    """One output-row stripe: g_ref (1, k, 8) uint32 coefficient planes
+    (each plane byte replicated into all 4 byte lanes), x_ref (k, TILE_W)
+    uint32 packed data, o_ref (1, TILE_W) uint32."""
+    x = x_ref[...]
+    acc = jnp.zeros((x.shape[1],), jnp.uint32)
+    low = jnp.uint32(_LOW_BITS)
+    for j in range(k):
+        xj = x[j]
+        for b in range(8):
+            bits = (xj >> b) & low
+            mask = (bits << 8) - bits          # 0x00/0xFF per payload byte
+            acc = acc ^ (mask & g_ref[0, j, b])
+    o_ref[0, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _call_bitsliced(GW: jax.Array, Xp: jax.Array, *, interpret: bool = True):
+    m = GW.shape[0]
+    k, W = Xp.shape
+    assert W % TILE_W == 0
+    grid = (W // TILE_W, m)                   # stripe slow, row fast
+    return pl.pallas_call(
+        functools.partial(_rs_bitsliced_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k, 8), lambda w, i: (i, 0, 0)),   # planes
+            pl.BlockSpec((k, TILE_W), lambda w, i: (0, w)),        # stripe
+        ],
+        out_specs=pl.BlockSpec((1, TILE_W), lambda w, i: (i, w)),
+        out_shape=jax.ShapeDtypeStruct((m, W), jnp.uint32),
+        interpret=interpret,
+    )(GW, Xp)
+
+
+def gf256_matmul_bitsliced(G, X, *, interpret: bool = True):
+    """Bit-sliced GF(256) matmul. G: (m,k) uint8, X: (k,L) uint8.
+
+    Expands G host-side into companion-matrix bit-planes, packs X 4 bytes
+    per uint32 lane (padding L to 4*TILE_W), and XOR-accumulates on the
+    VPU. Bit-identical to `gf_matmul_np` / `gf256_matmul_ref`."""
+    Gh = np.asarray(G, np.uint8)
+    m, k = Gh.shape
+    planes = gf_coeff_planes(Gh).astype(np.uint32)          # (m, k, 8)
+    GW = jnp.asarray(planes * np.uint32(_LOW_BITS))         # byte-replicated
+    X = jnp.asarray(X, jnp.uint8)
+    L = X.shape[1]
+    pad = (-L) % (4 * TILE_W)
+    if pad:
+        X = jnp.pad(X, ((0, 0), (0, pad)))
+    Xp = jax.lax.bitcast_convert_type(X.reshape(k, -1, 4), jnp.uint32)
+    out = _call_bitsliced(GW, Xp, interpret=interpret)      # (m, W) uint32
+    out8 = jax.lax.bitcast_convert_type(out, jnp.uint8).reshape(m, -1)
+    return out8[:, :L]
+
+
+# ---------------------------------------------------------------------------
+# legacy xtime-ladder kernel (kept for A/B benchmarks)
+# ---------------------------------------------------------------------------
 
 def _gf_mul_const(vec: jax.Array, coeff: jax.Array) -> jax.Array:
     """vec: int32 array of bytes; coeff: int32 scalar byte. GF(256) product
@@ -34,7 +128,7 @@ def _gf_mul_const(vec: jax.Array, coeff: jax.Array) -> jax.Array:
     return res
 
 
-def _rs_kernel(g_ref, x_ref, o_ref, *, m: int, k: int):
+def _rs_ladder_kernel(g_ref, x_ref, o_ref, *, m: int, k: int):
     x = x_ref[...].astype(jnp.int32)             # (k, TILE)
     for i in range(m):
         acc = jnp.zeros((x.shape[1],), jnp.int32)
@@ -45,13 +139,13 @@ def _rs_kernel(g_ref, x_ref, o_ref, *, m: int, k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _call(G: jax.Array, X: jax.Array, *, interpret: bool = True):
+def _call_ladder(G: jax.Array, X: jax.Array, *, interpret: bool = True):
     m, k = G.shape
     k2, L = X.shape
     assert k == k2 and L % TILE == 0
     grid = (L // TILE,)
     return pl.pallas_call(
-        functools.partial(_rs_kernel, m=m, k=k),
+        functools.partial(_rs_ladder_kernel, m=m, k=k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, k), lambda i: (0, 0)),       # coefficients
@@ -63,13 +157,19 @@ def _call(G: jax.Array, X: jax.Array, *, interpret: bool = True):
     )(G, X)
 
 
-def gf256_matmul_pallas(G, X, *, interpret: bool = True):
-    """G: (m,k) uint8 coefficients; X: (k, L) uint8 data. Pads L to TILE."""
+def gf256_matmul_pallas_ladder(G, X, *, interpret: bool = True):
+    """Legacy ladder kernel. G: (m,k) uint8; X: (k, L) uint8. Pads L."""
     G = jnp.asarray(G, jnp.uint8)
     X = jnp.asarray(X, jnp.uint8)
     L = X.shape[1]
     pad = (-L) % TILE
     if pad:
         X = jnp.pad(X, ((0, 0), (0, pad)))
-    out = _call(G, X, interpret=interpret)
+    out = _call_ladder(G, X, interpret=interpret)
     return out[:, :L]
+
+
+def gf256_matmul_pallas(G, X, *, interpret: bool = True):
+    """G: (m,k) uint8 coefficients; X: (k, L) uint8 data. Bit-sliced
+    production kernel (see module docstring)."""
+    return gf256_matmul_bitsliced(G, X, interpret=interpret)

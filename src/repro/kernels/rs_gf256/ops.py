@@ -1,25 +1,32 @@
 """Public op: gf256_matmul with backend dispatch.
 
-On TPU the Pallas kernel runs compiled; everywhere else it runs in
-interpret mode (exercised by tests) or falls back to the jnp oracle.
+On TPU the bit-sliced Pallas kernel runs compiled; everywhere else it
+runs in interpret mode (exercised by tests) or falls back to the jnp
+oracle. The legacy xtime-ladder kernel stays reachable as
+backend="ladder" for A/B benchmarking.
 """
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.rs_gf256.kernel import gf256_matmul_pallas
+from repro.kernels.rs_gf256.kernel import (gf256_matmul_bitsliced,
+                                           gf256_matmul_pallas_ladder)
 from repro.kernels.rs_gf256.ref import gf256_matmul_ref
 
 
 def gf256_matmul(G, X, *, backend: str = "auto"):
     """OUT = G @ X over GF(256). G: (m,k) uint8, X: (k,L) uint8.
 
-    backend: "pallas" (compiled on TPU, interpret elsewhere),
+    backend: "pallas" (bit-sliced; compiled on TPU, interpret elsewhere),
+             "interpret" (bit-sliced, forced interpret mode),
+             "ladder" (legacy xtime-ladder kernel, interpret off-TPU),
              "ref" (jnp oracle), "auto" (pallas on TPU else ref).
     """
     on_tpu = jax.default_backend() == "tpu"
     if backend == "pallas" or (backend == "auto" and on_tpu):
-        return gf256_matmul_pallas(G, X, interpret=not on_tpu)
+        return gf256_matmul_bitsliced(G, X, interpret=not on_tpu)
     if backend == "interpret":
-        return gf256_matmul_pallas(G, X, interpret=True)
+        return gf256_matmul_bitsliced(G, X, interpret=True)
+    if backend == "ladder":
+        return gf256_matmul_pallas_ladder(G, X, interpret=not on_tpu)
     return gf256_matmul_ref(G, X)

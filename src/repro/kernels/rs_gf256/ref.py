@@ -60,6 +60,47 @@ def gf_matmul_np(A: np.ndarray, X: np.ndarray) -> np.ndarray:
     return out
 
 
+def _build_mul_table() -> np.ndarray:
+    """Full 256x256 GF(256) product table (64 KB): MUL[a, b] = a*b."""
+    a = np.arange(256, dtype=np.uint8)
+    return gf_mul_np(a[:, None], a[None, :])
+
+
+GF_MUL_TABLE = _build_mul_table()
+
+
+def gf_matmul_table(A: np.ndarray, X: np.ndarray) -> np.ndarray:
+    """Fast-path (m,k) @ (k,L) over GF(256): one gather + one XOR per
+    coefficient via the full product table, instead of the exp/log path's
+    two gathers + add + mod + exp gather + zero masking. The codec's hot
+    host matmul; `gf_matmul_np` stays as the independent oracle."""
+    A = np.asarray(A, np.uint8)
+    X = np.asarray(X, np.uint8)
+    m, k = A.shape
+    out = np.zeros((m, X.shape[1]), np.uint8)
+    for i in range(m):
+        row = out[i]
+        for j in range(k):
+            c = A[i, j]
+            if c:
+                row ^= GF_MUL_TABLE[c, X[j]]
+    return out
+
+
+def gf_coeff_planes(A: np.ndarray) -> np.ndarray:
+    """(m,k) uint8 -> (m,k,8) uint8 companion-matrix bit-planes.
+
+    plane[..., b] = A * 2^b over GF(256) — the image of input bit b under
+    multiplication by each coefficient (column b of the coefficient's 8x8
+    GF(2) companion matrix, packed as a byte). With these, a GF(256)
+    constant multiply is 8 mask-and-XOR steps with no per-bit selects:
+    out = XOR_b spread(bit_b(x)) & plane[b]."""
+    planes = [np.asarray(A, np.uint8)]
+    for _ in range(7):
+        planes.append(gf_mul_np(planes[-1], np.uint8(2)))
+    return np.stack(planes, axis=-1)
+
+
 def gf_inv_matrix_np(M: np.ndarray) -> np.ndarray:
     """Gauss-Jordan inversion over GF(256)."""
     M = np.asarray(M, np.uint8)

@@ -10,22 +10,46 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: pass axis_types=Auto where the
+    API exists (jax >= 0.5); older jax has no AxisType and treats every
+    axis as Auto already."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def compat_shard_map(f, *, mesh, in_specs, out_specs, axis_names):
+    """shard_map across jax versions: `jax.shard_map(..., axis_names=...,
+    check_vma=False)` on new jax; on old jax, the experimental shard_map
+    with `auto=` carrying the non-manual axes so only `axis_names` go
+    manual (same partial-manual semantics as the new API). axis_names is
+    required — a default would mean opposite things in the two branches
+    (new jax: all axes manual; old jax: none)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  axis_names=axis_names, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_old
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False, auto=auto)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1, *, pod: int = 0):
     """Small mesh for CPU tests (fits in however many devices exist)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat_make_mesh((pod, data, model),
+                                ("pod", "data", "model"))
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e hardware model used by the roofline analysis (per chip).

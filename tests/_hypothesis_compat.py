@@ -1,0 +1,97 @@
+"""Import-or-fallback shim for `hypothesis`.
+
+`hypothesis` is a dev-only dependency (requirements-dev.txt). When it is
+installed, this module re-exports the real API unchanged. When it is NOT
+installed, test collection must still succeed and the property tests must
+still run as deterministic example-based tests — so a minimal stand-in of
+`given` / `settings` / `strategies` / `HealthCheck` is provided that
+draws a fixed, seeded set of examples (seeded by test name, so runs are
+reproducible). Shrinking, the database, and health checks are not
+emulated; the fallback trades search power for zero dependencies.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import HealthCheck, given, settings  # noqa: F401
+    from hypothesis import strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                      # pragma: no cover
+    import functools
+    import inspect
+    import random
+    import types
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_MAX_EXAMPLES = 10      # cap: deterministic CI stays fast
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+    def _just(value):
+        return _Strategy(lambda r: value)
+
+    def _tuples(*ss):
+        return _Strategy(lambda r: tuple(s._draw(r) for s in ss))
+
+    def _one_of(*ss):
+        return _Strategy(lambda r: ss[r.randrange(len(ss))]._draw(r))
+
+    def _lists(elements, min_size=0, max_size=None):
+        hi = min_size + 10 if max_size is None else max_size
+        return _Strategy(
+            lambda r: [elements._draw(r)
+                       for _ in range(r.randint(min_size, hi))])
+
+    def _booleans():
+        return _Strategy(lambda r: bool(r.randrange(2)))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    strategies = types.SimpleNamespace(
+        integers=_integers, sampled_from=_sampled_from, just=_just,
+        tuples=_tuples, one_of=_one_of, lists=_lists, booleans=_booleans,
+        floats=_floats)
+
+    class HealthCheck:
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
+
+    def given(*args, **strategy_kwargs):
+        if args:
+            raise TypeError(
+                "fallback @given supports keyword strategies only")
+
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*wargs, **wkwargs):
+                rnd = random.Random(fn.__qualname__)   # deterministic
+                n = min(getattr(wrapper, "_shim_max_examples",
+                                _FALLBACK_MAX_EXAMPLES),
+                        _FALLBACK_MAX_EXAMPLES)
+                for _ in range(n):
+                    drawn = {name: s._draw(rnd)
+                             for name, s in strategy_kwargs.items()}
+                    fn(*wargs, **dict(wkwargs, **drawn))
+            wrapper.hypothesis_fallback = True
+            # hide the drawn parameters from pytest's fixture resolution
+            # (functools.wraps exposes the wrapped signature otherwise)
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return decorate
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, **_ignored):
+        def decorate(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return decorate

@@ -5,6 +5,8 @@ import sys
 # set ONLY inside launch/dryrun.py
 os.environ.pop("XLA_FLAGS", None)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests import the _hypothesis_compat shim as a top-level module
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 import dataclasses  # noqa: E402
 

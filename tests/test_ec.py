@@ -1,7 +1,7 @@
 """Reed-Solomon codec: roundtrip under any <= p erasures (property)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.ec import ECConfig, RSCodec
 

@@ -1,6 +1,6 @@
 """PlaceChunk (paper Fig. 5) invariants — property-based."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.placement import PlacementManager
 

@@ -2,7 +2,8 @@
 (put / get / provider failure / clock advance / gc) against a dict model.
 The store must never return stale or corrupt data."""
 import numpy as np
-from hypothesis import HealthCheck, given, settings, strategies as st
+from _hypothesis_compat import (HealthCheck, given, settings,
+                                strategies as st)
 
 from repro.core import Clock, InfiniStore, StoreConfig
 from repro.core.ec import ECConfig
