@@ -1,0 +1,161 @@
+"""PUT ack-latency benchmark: sync vs async COS writeback (§5.3.2).
+
+Measures the PUT acknowledgement latency of `InfiniStore.put` at
+1 / 10 / 100 MB with COS persistence ON the ack path
+(`async_writeback=False`, the seed behaviour) vs OFF it (the writeback
+queue drains in the background), plus GET latency with the grouped
+per-function gather and the invoke amortization it buys.
+
+COS latency is modelled S3-like (per-op base + bandwidth, wall-clock
+sleep) so the comparison captures what the paper's persistent-buffer
+path actually removes from the critical path: the slowest layer.
+Numbers use a logical clock for the store and wall time for latency.
+
+Full runs write ``BENCH_put_async.json`` at the repo root so later PRs
+have a perf trajectory; ``--smoke`` runs write
+``BENCH_put_async_smoke.json`` so CI never clobbers it.
+
+Usage: PYTHONPATH=src python benchmarks/put_latency.py [--smoke] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                      # direct-script invocation
+    _HERE = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, os.path.join(_HERE, ".."))
+    sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+
+import numpy as np
+
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+
+MB = 1024 * 1024
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+# S3-like COS PUT model: ~15 ms per op + ~100 MB/s single-stream
+# (typical per-connection S3 throughput; the client daemon writes
+# chunks from one stream)
+COS_PUT_BASE_S = 0.015
+COS_PUT_PER_BYTE_S = 1.0 / (100 * MB)
+
+
+def make_store(*, async_writeback: bool) -> InfiniStore:
+    cfg = StoreConfig(
+        ec=ECConfig(k=10, p=2),
+        function_capacity=512 * MB,
+        fragment_bytes=64 * MB,
+        gc=GCConfig(gc_interval=1e12),
+        num_recovery_functions=4,
+        async_writeback=async_writeback,
+        writeback_depth=4096,
+    )
+    st = InfiniStore(cfg, clock=Clock())
+    st.cos.put_delay_base_s = COS_PUT_BASE_S
+    st.cos.put_delay_per_byte_s = COS_PUT_PER_BYTE_S
+    return st
+
+
+def bench_point(size: int, repeats: int) -> dict:
+    rng = np.random.default_rng(size)
+    mb = size / MB
+    out = {"object_mb": mb}
+    for mode in ("sync", "async"):
+        st = make_store(async_writeback=(mode == "async"))
+        acks, get_lats = [], []
+        for r in range(repeats):
+            data = rng.bytes(size)
+            t0 = time.perf_counter()
+            st.put(f"obj{r}", data)               # ack latency
+            acks.append(time.perf_counter() - t0)
+        if mode == "async":
+            # the win must not come from dropped durability: every chunk
+            # still reaches COS, just off the critical path
+            assert st.flush_writeback(timeout=600.0)
+            assert st.writeback.stats.failures == 0
+        inv0 = st.stats.gather_invokes
+        for r in range(repeats):
+            t0 = time.perf_counter()
+            got = st.get(f"obj{r}")
+            get_lats.append(time.perf_counter() - t0)
+            assert len(got) == size
+        out[f"{mode}_put_ack_ms"] = round(min(acks) * 1e3, 2)
+        out[f"{mode}_get_ms"] = round(min(get_lats) * 1e3, 2)
+        if mode == "async":
+            out["get_gather_invokes_per_op"] = round(
+                (st.stats.gather_invokes - inv0) / repeats, 2)
+            out["writeback_persisted"] = st.writeback.stats.persisted
+        st.close()
+    out["put_ack_speedup"] = round(
+        out["sync_put_ack_ms"] / out["async_put_ack_ms"], 2)
+    return out
+
+
+def run_bench(smoke: bool) -> dict:
+    if smoke:
+        points = [bench_point(1 * MB, repeats=2)]
+    else:
+        points = [bench_point(1 * MB, repeats=3),
+                  bench_point(10 * MB, repeats=2),
+                  bench_point(100 * MB, repeats=2)]
+    return {"bench": "put_latency", "smoke": smoke,
+            "ec": {"k": 10, "p": 2},
+            "cos_model": {"put_base_s": COS_PUT_BASE_S,
+                          "put_MBps": round(1.0 / COS_PUT_PER_BYTE_S / MB)},
+            "points": points}
+
+
+def _default_out(smoke: bool) -> str:
+    name = "BENCH_put_async_smoke.json" if smoke else "BENCH_put_async.json"
+    return os.path.join(ROOT, name)
+
+
+def _write(result: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+
+
+def run() -> list:
+    """benchmarks.run entry point (smoke sizes, CSV rows)."""
+    result = run_bench(smoke=True)
+    _write(result, _default_out(smoke=True))
+    rows = []
+    for pt in result["points"]:
+        tag = f"{pt['object_mb']:g}MB"
+        rows.append(f"put_ack_async_{tag},{pt['async_put_ack_ms'] * 1e3:.2f},"
+                    f"ms*1e-3 speedup={pt['put_ack_speedup']}x vs sync")
+        rows.append(f"get_grouped_{tag},{pt['async_get_ms'] * 1e3:.2f},"
+                    f"ms*1e-3 invokes/op="
+                    f"{pt['get_gather_invokes_per_op']}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 MB point only (CI sanity); writes "
+                         "BENCH_put_async_smoke.json unless --out is given")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    result = run_bench(args.smoke)
+    out = args.out or _default_out(args.smoke)
+    _write(result, out)
+    for pt in result["points"]:
+        print(f"{pt['object_mb']:>6g} MB | put ack "
+              f"{pt['sync_put_ack_ms']:>9.2f} -> "
+              f"{pt['async_put_ack_ms']:>8.2f} ms "
+              f"({pt['put_ack_speedup']}x) | get "
+              f"{pt['async_get_ms']:>8.2f} ms | "
+              f"gather invokes/op {pt['get_gather_invokes_per_op']}")
+    print(f"wrote {os.path.relpath(out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,8 @@ MODULES = [
     ("recovery", "Figs 18-21 parallel recovery"),
     ("factor_analysis", "Figs 22/23 factor analysis"),
     ("ec_path", "EC encode/decode throughput (writes BENCH_ec.json)"),
+    ("put_latency", "sync vs async PUT ack latency "
+                    "(writes BENCH_put_async.json)"),
     ("kernels", "kernel microbenchmarks"),
     ("roofline", "§Roofline summary (reads experiments/dryrun.jsonl)"),
 ]

@@ -11,3 +11,5 @@ python -m pip install -q -r requirements-dev.txt 2>/dev/null \
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 python benchmarks/ec_path.py --smoke
+# async PUT path exercised end-to-end (1 MB point, sync-vs-async ack)
+python benchmarks/put_latency.py --smoke

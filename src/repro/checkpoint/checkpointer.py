@@ -1,12 +1,20 @@
 """InfiniStore-backed distributed checkpointing (DESIGN.md §2.2).
 
-Train state leaves are serialized, RS-erasure-coded, and PUT through the
-InfiniStore data path: the SMS tier (host-RAM slabs of DP peers) gives
-fast restore, the COS tier (disk) gives durability, insertion logs give
-term-stamped failure detection, and parallel recovery restores a lost
-host's chunks without a full COS read. The paper's persistent buffer
-semantics = save() returns once SMS accepted; COS writes complete
-asynchronously.
+Train state leaves ride the store's zero-copy Payload path: each leaf
+(device `jax.Array` or host numpy) becomes ONE host transfer + a flat
+uint8 view that is fragmented, RS-erasure-coded, and PUT through the
+InfiniStore data path — no intermediate `bytes` serialization. The SMS
+tier (host-RAM slabs of DP peers) gives fast restore, the COS tier
+(disk) gives durability, insertion logs give term-stamped failure
+detection, and parallel recovery restores a lost host's chunks without a
+full COS read.
+
+Persistent-buffer semantics (§5.3.2): `save()` returns once SMS accepted
+every shard — COS writes drain from the background writeback queue, and
+shard batches ride `put_many_async` (one multi-key CAS round per batch)
+so the next batch's host transfer overlaps the previous batch's encode.
+An instance failure between save() and writeback completion loses
+nothing: restore reads unpersisted chunks from the pending map.
 
 Elastic restart: leaves are stored whole (per-leaf chunks), so restoring
 onto a different DP width just re-shards at jit boundary — exercised by
@@ -14,15 +22,15 @@ tests/test_checkpoint.py.
 """
 from __future__ import annotations
 
-import io
 import json
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.core.payload import as_u8
 from repro.core.store import InfiniStore, StoreConfig
 
 PyTree = Any
@@ -33,6 +41,7 @@ class CheckpointConfig:
     prefix: str = "ckpt"
     keep: int = 3                     # retained checkpoints
     leaf_shard_bytes: int = 64 * 1024 * 1024   # split huge leaves
+    max_inflight_batches: int = 2     # pipelined async PUT batches
 
 
 def _leaf_paths(tree: PyTree) -> List[Tuple[str, Any]]:
@@ -45,14 +54,10 @@ def _leaf_paths(tree: PyTree) -> List[Tuple[str, Any]]:
     return out
 
 
-def _pack(arr: np.ndarray) -> bytes:
-    buf = io.BytesIO()
-    np.save(buf, arr, allow_pickle=False)
-    return buf.getvalue()
-
-
-def _unpack(b: bytes) -> np.ndarray:
-    return np.load(io.BytesIO(b), allow_pickle=False)
+def _restore_dtype(name: str):
+    if name == "bfloat16":
+        return jax.numpy.bfloat16
+    return np.dtype(name)
 
 
 class Checkpointer:
@@ -71,37 +76,43 @@ class Checkpointer:
     def save(self, step: int, state: PyTree) -> None:
         leaves = _leaf_paths(state)
         manifest = {"step": step, "leaves": []}
-        # shards ride batched PUTs, flushed in bounded sub-batches so
-        # peak host memory stays O(limit) (encode_many materializes
-        # ~(k+p)/k x the sub-batch bytes) while keeping the per-function
-        # invoke/log amortization within each sub-batch
+        # shards ride pipelined async batched PUTs, flushed in bounded
+        # sub-batches so peak host memory stays O(limit) (encode_many
+        # materializes ~(k+p)/k x the sub-batch bytes) while keeping the
+        # per-function invoke/log amortization within each sub-batch; at
+        # most max_inflight_batches are outstanding at once
         limit = max(4 * self.cfg.leaf_shard_bytes, 64 * 1024 * 1024)
         sub, sub_bytes = [], 0
+        inflight: List[Any] = []
         for name, leaf in leaves:
-            arr = np.asarray(leaf)
-            if arr.dtype == jax.numpy.bfloat16:
-                arr16 = arr.view(np.uint16)
-                payload_dtype = "bfloat16"
-                arr_to_store = arr16
-            else:
-                payload_dtype = str(arr.dtype)
-                arr_to_store = arr
-            data = _pack(arr_to_store)
-            nshards = max(1, -(-len(data) // self.cfg.leaf_shard_bytes))
+            # ONE device-to-host transfer per leaf; everything downstream
+            # operates on this flat uint8 view (no bytes serialization)
+            u8 = as_u8(leaf)
+            nshards = max(1, -(-u8.size // self.cfg.leaf_shard_bytes))
             for si in range(nshards):
                 lo = si * self.cfg.leaf_shard_bytes
-                hi = min(len(data), lo + self.cfg.leaf_shard_bytes)
-                sub.append((self._leaf_key(step, name, si), data[lo:hi]))
+                hi = min(u8.size, lo + self.cfg.leaf_shard_bytes)
+                sub.append((self._leaf_key(step, name, si), u8[lo:hi]))
                 sub_bytes += hi - lo
                 if sub_bytes >= limit:
-                    self.store.put_many(sub)
+                    inflight.append(self.store.put_many_async(sub))
                     sub, sub_bytes = [], 0
+                    while len(inflight) >= self.cfg.max_inflight_batches:
+                        inflight.pop(0).result()
+            # dtype/shape come from the handle — no second host transfer
+            dtype = getattr(leaf, "dtype", None)
+            shape = getattr(leaf, "shape", None)
+            if dtype is None or shape is None:    # python scalar leaf
+                arr = np.asarray(leaf)
+                dtype, shape = arr.dtype, arr.shape
             manifest["leaves"].append(
-                {"name": name, "dtype": payload_dtype,
-                 "shape": list(arr.shape), "nshards": nshards,
-                 "nbytes": len(data)})
+                {"name": name, "dtype": str(dtype),
+                 "shape": list(shape), "nshards": nshards,
+                 "nbytes": int(u8.size)})
         if sub:
-            self.store.put_many(sub)
+            inflight.append(self.store.put_many_async(sub))
+        for fut in inflight:
+            fut.result()                         # SMS-accept barrier
         self.store.put(self._manifest_key(step),
                        json.dumps(manifest).encode())
         with self._lock:
@@ -120,10 +131,15 @@ class Checkpointer:
 
     def latest_step(self) -> Optional[int]:
         steps = []
-        for key in self.store.cos.list_keys(f"chunk/{self.cfg.prefix}/manifest/"):
+        # cos_keys includes acked-but-not-yet-persisted manifests (the
+        # pending writeback map), so a fresh save is always discoverable
+        # chunk keys look like "chunk/<prefix>/manifest/<step>|<ver>/f0#N"
+        # — the step sits in the second-to-last path component
+        for key in self.store.cos_keys(
+                f"chunk/{self.cfg.prefix}/manifest/"):
             try:
-                steps.append(int(key.split("/")[-1].split("|")[0]))
-            except ValueError:
+                steps.append(int(key.split("/")[-2].split("|")[0]))
+            except (ValueError, IndexError):
                 pass
         if self._saved_steps:
             steps.extend(self._saved_steps)
@@ -133,29 +149,31 @@ class Checkpointer:
         mb = self.store.get(self._manifest_key(step))
         if mb is None:
             raise FileNotFoundError(f"no checkpoint manifest for {step}")
-        manifest = json.loads(mb.decode())
+        manifest = json.loads(bytes(mb).decode())
         shard_keys = [self._leaf_key(step, entry["name"], si)
                       for entry in manifest["leaves"]
                       for si in range(entry["nshards"])]
-        # batched decode in bounded sub-batches, mirroring save(): one
-        # unbounded get_many would hold ~3-4x the checkpoint in host RAM
+        # batched array GETs in bounded sub-batches, mirroring save():
+        # one unbounded get would hold ~3-4x the checkpoint in host RAM.
+        # get_many_arrays returns flat uint8 views — leaves rebuild via
+        # dtype/shape views, never through an intermediate bytes object.
         limit = max(4 * self.cfg.leaf_shard_bytes, 64 * 1024 * 1024)
         per_batch = max(1, limit // self.cfg.leaf_shard_bytes)
-        shards: Dict[str, Optional[bytes]] = {}
+        shards: Dict[str, Optional[np.ndarray]] = {}
         for i in range(0, len(shard_keys), per_batch):
-            shards.update(self.store.get_many(shard_keys[i:i + per_batch]))
+            shards.update(self.store.get_many_arrays(
+                shard_keys[i:i + per_batch]))
         leaves: Dict[str, np.ndarray] = {}
         for entry in manifest["leaves"]:
             parts = []
             for si in range(entry["nshards"]):
-                b = shards.get(self._leaf_key(step, entry["name"], si))
-                if b is None:
+                a = shards.get(self._leaf_key(step, entry["name"], si))
+                if a is None:
                     raise IOError(
                         f"checkpoint shard lost: {entry['name']}/s{si}")
-                parts.append(b)
-            arr = _unpack(b"".join(parts))
-            if entry["dtype"] == "bfloat16":
-                arr = arr.view(jax.numpy.bfloat16)
+                parts.append(a)
+            u8 = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            arr = u8.view(_restore_dtype(entry["dtype"]))
             leaves[entry["name"]] = arr.reshape(entry["shape"])
         if like is None:
             return leaves

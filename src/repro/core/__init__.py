@@ -11,6 +11,8 @@ from repro.core.ec import ECConfig, RSCodec  # noqa: F401
 from repro.core.gc_window import (BucketState, GCConfig,  # noqa: F401
                                   SlidingWindow)
 from repro.core.insertion_log import InsertionLog, PutRecord  # noqa: F401
+from repro.core.payload import (Payload, as_u8,  # noqa: F401
+                                payload_nbytes, to_bytes)
 from repro.core.placement import PlacementManager  # noqa: F401
 from repro.core.recovery import RecoveryManager  # noqa: F401
 from repro.core.sms import SMS, Slab  # noqa: F401
@@ -18,3 +20,5 @@ from repro.core.store import (ConcurrentPutError, InfiniStore,  # noqa: F401
                               StoreConfig)
 from repro.core.versioning import (MetadataTable, Meta,  # noqa: F401
                                    PersistentBuffer)
+from repro.core.writeback import (StoreFuture,  # noqa: F401
+                                  WritebackQueue)

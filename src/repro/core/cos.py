@@ -5,18 +5,35 @@ Backends: in-memory dict (tests/benchmarks) or a directory on disk
 visibility lag: a newly PUT object/version only becomes readable after
 `visibility_lag` clock time, which is exactly the behaviour the
 SCFS-style consistency-increasing GET loop (Appendix A) must mask.
+
+Concurrency: `self._lock` guards ONLY metadata (visibility map, the
+in-memory dict, stats) — file I/O happens outside it, so one slow disk
+write no longer serializes every other COS operation. Disk writes go to
+a uniquely-named temp file and `os.replace` in atomically; visibility is
+flipped only after the write lands, so readers never observe a visible
+key with a half-written object.
+
+Payloads may be `bytes` or flat uint8 `ndarray` views (the zero-copy
+writeback path); the mem backend stores whatever it is handed.
+
+`put_delay_base_s` / `put_delay_per_byte_s` optionally model real
+object-store PUT latency (S3-like: ~tens of ms + bandwidth) for
+benchmarks that compare sync-ack vs async-writeback PUT paths.
 """
 from __future__ import annotations
 
 import hashlib
 import os
 import threading
+import time
+import uuid
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, Optional, Tuple
 
 from repro.core.clock import Clock
+from repro.core.payload import payload_nbytes
 
 
 @dataclass
@@ -34,7 +51,9 @@ class COSStats:
 
 class COS:
     def __init__(self, clock: Clock, *, visibility_lag: float = 0.0,
-                 root: Optional[str] = None, workers: int = 8):
+                 root: Optional[str] = None, workers: int = 8,
+                 put_delay_base_s: float = 0.0,
+                 put_delay_per_byte_s: float = 0.0):
         self.clock = clock
         self.visibility_lag = visibility_lag
         self.root = Path(root) if root else None
@@ -44,6 +63,8 @@ class COS:
         self._visible_at: Dict[str, float] = {}
         self._lock = threading.RLock()
         self.stats = COSStats()
+        self.put_delay_base_s = put_delay_base_s
+        self.put_delay_per_byte_s = put_delay_per_byte_s
         self._pool = ThreadPoolExecutor(max_workers=workers,
                                         thread_name_prefix="cos")
 
@@ -53,40 +74,48 @@ class COS:
         h = hashlib.sha1(key.encode()).hexdigest()
         return self.root / h[:2] / h[2:]
 
-    def put(self, key: str, data: bytes) -> None:
+    def put(self, key: str, data) -> None:
+        n = payload_nbytes(data)
+        if self.put_delay_base_s or self.put_delay_per_byte_s:
+            time.sleep(self.put_delay_base_s + n * self.put_delay_per_byte_s)
+        if self.root:
+            # write outside the lock; unique temp name so concurrent puts
+            # of the same key can't clobber each other's staging file
+            p = self._path(key)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            tmp = p.with_name(f"{p.name}.{uuid.uuid4().hex}.tmp")
+            with open(tmp, "wb") as f:
+                f.write(data)
+            os.replace(tmp, p)
         with self._lock:
             self.stats.puts += 1
-            self.stats.bytes_in += len(data)
+            self.stats.bytes_in += n
+            if not self.root:
+                self._mem[key] = data
             self._visible_at[key] = self.clock.now() + self.visibility_lag
-            if self.root:
-                p = self._path(key)
-                p.parent.mkdir(parents=True, exist_ok=True)
-                tmp = p.with_suffix(".tmp")
-                tmp.write_bytes(data)
-                os.replace(tmp, p)
-            else:
-                self._mem[key] = bytes(data)
 
-    def get(self, key: str) -> Optional[bytes]:
+    def get(self, key: str):
         with self._lock:
             self.stats.gets += 1
             vis = self._visible_at.get(key)
             if vis is None or self.clock.now() < vis:
                 self.stats.get_misses += 1
                 return None
-            if self.root:
-                p = self._path(key)
-                if not p.exists():
-                    self.stats.get_misses += 1
-                    return None
-                data = p.read_bytes()
-            else:
-                data = self._mem.get(key)
-                if data is None:
-                    self.stats.get_misses += 1
-                    return None
-            self.stats.bytes_out += len(data)
-            return data
+            data = None if self.root else self._mem.get(key)
+        if self.root:
+            # disk read outside the lock; a concurrent delete makes this
+            # a miss, same as observing the delete first
+            try:
+                data = self._path(key).read_bytes()
+            except FileNotFoundError:
+                data = None
+        if data is None:
+            with self._lock:
+                self.stats.get_misses += 1
+            return None
+        with self._lock:
+            self.stats.bytes_out += payload_nbytes(data)
+        return data
 
     def exists(self, key: str) -> bool:
         with self._lock:
@@ -96,12 +125,12 @@ class COS:
     def delete(self, key: str) -> None:
         with self._lock:
             self._visible_at.pop(key, None)
-            if self.root:
-                p = self._path(key)
-                if p.exists():
-                    p.unlink()
-            else:
+            if not self.root:
                 self._mem.pop(key, None)
+        if self.root:
+            p = self._path(key)
+            if p.exists():
+                p.unlink()
 
     def list_keys(self, prefix: str = "") -> list:
         with self._lock:
@@ -110,15 +139,15 @@ class COS:
     @property
     def stored_bytes(self) -> int:
         with self._lock:
-            if self.root:
-                return sum(self._path(k).stat().st_size
-                           for k in self._visible_at
-                           if self._path(k).exists())
-            return sum(len(self._mem.get(k, b"")) for k in self._visible_at)
+            keys = list(self._visible_at)
+            if not self.root:
+                return sum(payload_nbytes(self._mem.get(k, b"")) for k in keys)
+        return sum(self._path(k).stat().st_size
+                   for k in keys if self._path(k).exists())
 
     # ---- async API (persistent-buffer path, §5.3.2) ----------------------
 
-    def put_async(self, key: str, data: bytes) -> Future:
+    def put_async(self, key: str, data) -> Future:
         return self._pool.submit(self.put, key, data)
 
     def shutdown(self) -> None:

@@ -25,6 +25,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.payload import as_u8, payload_nbytes
 from repro.kernels.rs_gf256.ref import (cauchy_parity_matrix,
                                         gf_inv_matrix_np, gf_matmul_table)
 
@@ -71,37 +72,47 @@ class RSCodec:
         """payload -> k+p chunk payloads (equal length)."""
         return self.encode_many([payload])[0]
 
-    def encode_many(self, payloads: Sequence[bytes]) -> List[List[bytes]]:
+    def encode_many(self, payloads: Sequence, *,
+                    as_arrays: bool = False) -> List[List[bytes]]:
         """Batch encode: all payloads' data blocks are stacked column-wise
         into one (k, sum clen) buffer and the parity rows come from a
-        single GF(256) matmul."""
+        single GF(256) matmul.
+
+        Payloads may be bytes OR array-like (numpy / jax uint8 views via
+        the Payload protocol) — device-backed fragments reach the kernel
+        without an intermediate `bytes` copy. With `as_arrays=True`
+        chunks come back as uint8 views into the stacked encode buffer
+        (zero-copy) instead of materialized `bytes`."""
         if not payloads:
             return []
         k, p = self.cfg.k, self.cfg.p
-        clens = [self.chunk_len(len(pl)) for pl in payloads]
+        clens = [self.chunk_len(payload_nbytes(pl)) for pl in payloads]
         data = np.zeros((k, int(sum(clens))), np.uint8)
         off = 0
         for pl, clen in zip(payloads, clens):
-            self._fill_framed(data[:, off:off + clen], pl)
+            self._fill_framed(data[:, off:off + clen], as_u8(pl))
             off += clen
         parity = self._matmul(self._parity, data)
         out: List[List[bytes]] = []
         off = 0
         for clen in clens:
             sl = slice(off, off + clen)
-            out.append([data[i, sl].tobytes() for i in range(k)] +
-                       [parity[i, sl].tobytes() for i in range(p)])
+            if as_arrays:
+                out.append([data[i, sl] for i in range(k)] +
+                           [parity[i, sl] for i in range(p)])
+            else:
+                out.append([data[i, sl].tobytes() for i in range(k)] +
+                           [parity[i, sl].tobytes() for i in range(p)])
             off += clen
         return out
 
     @staticmethod
-    def _fill_framed(block: np.ndarray, payload: bytes) -> None:
-        """Write the framed payload (length header + payload) row-major
-        into `block` — a (k, clen) column-slice view of the stacked
-        buffer — via direct per-row memcpys."""
+    def _fill_framed(block: np.ndarray, flat: np.ndarray) -> None:
+        """Write the framed payload (length header + flat uint8 payload)
+        row-major into `block` — a (k, clen) column-slice view of the
+        stacked buffer — via direct per-row memcpys."""
         k, clen = block.shape
-        hdr = np.frombuffer(_HEADER.pack(len(payload)), np.uint8)
-        flat = np.frombuffer(payload, np.uint8)
+        hdr = np.frombuffer(_HEADER.pack(flat.size), np.uint8)
         H, end = hdr.size, hdr.size + flat.size
         for i in range(k):
             s = i * clen
@@ -124,13 +135,17 @@ class RSCodec:
         original payload (any k of the k+p indices suffice)."""
         return self.decode_many([chunks])[0]
 
-    def decode_many(self, chunk_maps: Sequence[Dict[int, bytes]]
-                    ) -> List[bytes]:
+    def decode_many(self, chunk_maps: Sequence[Dict[int, bytes]], *,
+                    as_arrays: bool = False) -> List[bytes]:
         """Batch decode: fragments sharing a survivor set are stacked
-        column-wise and reconstructed by one cached-inverse matmul."""
+        column-wise and reconstructed by one cached-inverse matmul.
+
+        Chunks may be bytes or uint8 arrays (slab-resident views). With
+        `as_arrays=True` results are flat uint8 arrays — the GET-side
+        zero-copy path (no `bytes` materialization per fragment)."""
         k = self.cfg.k
         ident = tuple(range(k))
-        results: List[bytes] = [b""] * len(chunk_maps)
+        results: List = [b""] * len(chunk_maps)
         groups: Dict[Tuple[int, ...], List[int]] = {}
         for pos, chunks in enumerate(chunk_maps):
             if len(chunks) < k:
@@ -138,24 +153,31 @@ class RSCodec:
                     f"need >= {k} chunks to decode, got {len(chunks)}")
             idx = tuple(sorted(chunks)[:k])
             if idx == ident:                   # all data rows survive
-                results[pos] = self._unframe(
-                    b"".join(chunks[i] for i in ident))
+                if not as_arrays and all(isinstance(chunks[i], bytes)
+                                         for i in ident):
+                    results[pos] = self._unframe(
+                        b"".join(chunks[i] for i in ident))
+                else:
+                    flat = np.concatenate([as_u8(chunks[i]) for i in ident])
+                    results[pos] = self._unframe_np(flat, as_arrays)
             else:
                 groups.setdefault(idx, []).append(pos)
         for idx, positions in groups.items():
             inv = self._decode_matrix(idx)
-            clens = [len(chunk_maps[pos][idx[0]]) for pos in positions]
+            clens = [payload_nbytes(chunk_maps[pos][idx[0]])
+                     for pos in positions]
             surv = np.empty((k, int(sum(clens))), np.uint8)
             off = 0
             for pos, clen in zip(positions, clens):
                 cm = chunk_maps[pos]
                 for r, i in enumerate(idx):
-                    surv[r, off:off + clen] = np.frombuffer(cm[i], np.uint8)
+                    surv[r, off:off + clen] = as_u8(cm[i])
                 off += clen
             dec = self._matmul(inv, surv)
             off = 0
             for pos, clen in zip(positions, clens):
-                results[pos] = self._unframe(dec[:, off:off + clen].tobytes())
+                flat = dec[:, off:off + clen].reshape(-1)
+                results[pos] = self._unframe_np(flat, as_arrays)
                 off += clen
         return results
 
@@ -179,6 +201,14 @@ class RSCodec:
     def _unframe(framed: bytes) -> bytes:
         (orig_len,) = _HEADER.unpack_from(framed)
         return framed[_HEADER.size:_HEADER.size + orig_len]
+
+    @staticmethod
+    def _unframe_np(flat: np.ndarray, as_arrays: bool):
+        """Unframe a flat uint8 buffer; returns a view (as_arrays) or
+        bytes."""
+        (orig_len,) = _HEADER.unpack_from(flat[:_HEADER.size].tobytes())
+        body = flat[_HEADER.size:_HEADER.size + orig_len]
+        return body if as_arrays else body.tobytes()
 
     def cache_info(self) -> Dict[str, int]:
         """Decode-matrix LRU accounting (hits/misses/inversions/size)."""

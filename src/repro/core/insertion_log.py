@@ -78,11 +78,19 @@ class Piggyback:
 
 
 class InsertionLog:
-    """Per-function log; nodes and snapshots are persisted in COS."""
+    """Per-function log; nodes and snapshots are persisted in COS.
 
-    def __init__(self, fid: int, cos: COS, *, snapshot_every: int = 8):
+    With a `writeback` queue attached, node/snapshot persistence rides
+    the background writer (§5.5.1: the *instance* persists the node as
+    the invocation returns — it is not on the client's ack path) and
+    reads check the pending map first, so recovery sees nodes that are
+    acked but not yet in COS."""
+
+    def __init__(self, fid: int, cos: COS, *, snapshot_every: int = 8,
+                 writeback=None):
         self.fid = fid
         self.cos = cos
+        self.writeback = writeback
         self.snapshot_every = snapshot_every
         self.term = 0
         self.last_hash = ""
@@ -109,7 +117,7 @@ class InsertionLog:
         node = InsertionNode(term=self.term, records=records,
                              prev_hash=self.last_hash)
         data = node.to_bytes()
-        self.cos.put(self.node_key(self.term), data)
+        self._persist(self.node_key(self.term), data)
         self.last_hash = node.hash
         self.diff_rank += len(records)
         self._last_node_size = len(data)
@@ -127,11 +135,22 @@ class InsertionLog:
         instance creates a snapshot ... to speed up recovery')."""
         snap = Snapshot(term=self.term, chunk_keys=sorted(self._live),
                         hash=self.last_hash)
-        self.cos.put(self.snap_key, snap.to_bytes())
+        self._persist(self.snap_key, snap.to_bytes())
         self.snapshot_term = self.term
         return snap
 
+    def _persist(self, key: str, data: bytes) -> None:
+        if self.writeback is not None:
+            self.writeback.enqueue(key, data)
+        else:
+            self.cos.put(key, data)
+
     # ---- reads ------------------------------------------------------------
+
+    def _read(self, key: str) -> Optional[bytes]:
+        if self.writeback is not None:
+            return self.writeback.read_through(key)
+        return self.cos.get(key)
 
     def piggyback(self) -> Piggyback:
         return Piggyback(term=self.term, hash=self.last_hash,
@@ -145,14 +164,14 @@ class InsertionLog:
         instance downloads first (§5.5.1)."""
         live: Set[str] = set()
         start_term = 1
-        snap_b = self.cos.get(self.snap_key)
+        snap_b = self._read(self.snap_key)
         if snap_b is not None:
             snap = Snapshot.from_bytes(snap_b)
             live = set(snap.chunk_keys)
             start_term = snap.term + 1
         t = start_term
         while True:
-            b = self.cos.get(self.node_key(t))
+            b = self._read(self.node_key(t))
             if b is None:
                 break
             node = InsertionNode.from_bytes(b)

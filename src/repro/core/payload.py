@@ -1,0 +1,82 @@
+"""Payload protocol: zero-copy device/host payload handles (ROADMAP item).
+
+The store's data plane historically forced every payload through host
+`bytes`, which costs a serialize copy on PUT and a join copy on GET even
+when the caller already holds a `numpy` or `jax.Array` buffer. This
+module defines the small protocol the store actually needs from a
+payload — a byte length and a flat `uint8` view — so the serving and
+checkpoint layers can hand device-backed fragments straight to the
+bit-sliced GF(256) kernel:
+
+- `bytes` / `bytearray` / `memoryview`  -> `np.frombuffer` view (no copy)
+- `np.ndarray` (any dtype)              -> `.view(np.uint8)` (no copy when
+  contiguous; one copy otherwise)
+- `jax.Array`                           -> one device-to-host transfer via
+  `np.asarray` (the unavoidable DMA), then the ndarray path — never an
+  intermediate `bytes` object.
+
+Everything in the PUT path downstream of `as_u8` (fragment slicing,
+erasure coding, slab stores, COS writeback) operates on `uint8` array
+views of the original buffer.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import numpy as np
+
+# What the store accepts as a value: anything bytes-like or array-like.
+# (jax.Array satisfies __array__; core deliberately avoids importing jax.)
+Payload = Union[bytes, bytearray, memoryview, np.ndarray]
+
+
+def is_array_payload(p) -> bool:
+    """True for ndarray-like payloads (numpy or device arrays)."""
+    return not isinstance(p, (bytes, bytearray, memoryview)) \
+        and hasattr(p, "__array__")
+
+
+def payload_nbytes(p) -> int:
+    if isinstance(p, (bytes, bytearray)):
+        return len(p)
+    if isinstance(p, memoryview):
+        return p.nbytes
+    if isinstance(p, np.ndarray):
+        return p.nbytes
+    if hasattr(p, "nbytes"):                    # jax.Array without transfer
+        return int(p.nbytes)
+    return len(p)
+
+
+def as_u8(p) -> np.ndarray:
+    """Flat uint8 view of the payload; copies only when unavoidable
+    (non-contiguous arrays, device-to-host DMA for jax arrays)."""
+    if isinstance(p, (bytes, bytearray, memoryview)):
+        return np.frombuffer(p, np.uint8)
+    arr = np.asarray(p)                          # host view / one DMA
+    if not arr.flags.c_contiguous:
+        arr = np.ascontiguousarray(arr)
+    return arr.reshape(-1).view(np.uint8)
+
+
+def needs_snapshot(p) -> bool:
+    """True when the payload aliases caller-MUTABLE memory and the store
+    must take a private copy at the ack boundary (the persistent buffer
+    owns its data). bytes and device arrays (`jax.Array`) are immutable
+    — their views are safe to hold; writable numpy buffers are not."""
+    if isinstance(p, np.ndarray):
+        return bool(p.flags.writeable)
+    if isinstance(p, bytearray):
+        return True
+    if isinstance(p, memoryview):
+        return not p.readonly
+    return False
+
+
+def to_bytes(p) -> bytes:
+    """Materialize a payload as bytes (the legacy GET return type)."""
+    if isinstance(p, bytes):
+        return p
+    if isinstance(p, (bytearray, memoryview)):
+        return bytes(p)
+    return as_u8(p).tobytes()

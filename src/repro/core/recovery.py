@@ -50,9 +50,13 @@ class RecoverySession:
 class RecoveryManager:
     def __init__(self, sms: SMS, cos: COS, logs: Dict[int, InsertionLog], *,
                  num_recovery_functions: int = 20, workers: int = 8,
-                 retain_seconds: float = 60.0):
+                 retain_seconds: float = 60.0, writeback=None):
         self.sms = sms
         self.cos = cos
+        # WritebackQueue (or None): chunks acked but not yet persisted to
+        # COS are restored from its pending map — the async-writeback
+        # durability contract (§5.3.2)
+        self.writeback = writeback
         self.logs = logs
         self.R = num_recovery_functions
         self.retain_seconds = retain_seconds
@@ -120,7 +124,10 @@ class RecoveryManager:
     def _download(self, keys: List[str]) -> Dict[str, bytes]:
         out: Dict[str, bytes] = {}
         for key in keys:
-            data = self.cos.get(f"chunk/{key}")
+            if self.writeback is not None:       # pending map, then COS
+                data = self.writeback.read_through(f"chunk/{key}")
+            else:
+                data = self.cos.get(f"chunk/{key}")
             if data is not None:
                 out[key] = data
         return out

@@ -1,19 +1,44 @@
-"""InfiniStore facade: GET/PUT over the SMS + COS layers (paper §5).
+"""InfiniStore facade: an async, futures-based GET/PUT client API over
+the SMS + COS layers (paper §5).
 
-Wires together: CAS versioning + persistent buffer (Appendix A), RS
-erasure coding, PlaceChunk over the sliding-window GC-buckets, insertion
-logs, failure detection + local/parallel recovery, demand caching,
-compaction, large-object fragmentation, the two-queue scheme, and
-pay-per-access cost accounting.
+The client surface is non-blocking: `put_async` / `get_async` (and the
+batched `put_many_async` / `get_many_async`) return a `StoreFuture`
+(result / exception / done-callback; PUT futures carry the committed
+version). The classic `put` / `get` / `put_many` / `get_many` are thin
+blocking wrappers over the same path. All store mutation runs on one
+internal client-daemon thread, so queued requests pipeline in submission
+order and the data structures never see concurrent writers.
 
-This is the control plane ("client daemon"); payloads are bytes. The
-serving/checkpoint layers put device-backed data through the same paths.
+Ack point + durability contract (§5.3.2): a PUT acknowledges once every
+fragment's chunks sit in SMS slabs AND the fragment sits in the
+persistent buffer with its insertion-log node persisted — COS chunk
+persistence is OFF the critical path, drained in the background by the
+`WritebackQueue` (writer thread + `gc_tick`, bounded depth, retry with
+backoff, `flush()` barrier). Until a chunk lands in COS, reads and
+recovery are served from the persistent buffer / pending-writeback map,
+so an instance failure between ack and persistence loses nothing.
+`StoreConfig(async_writeback=False)` restores the legacy inline-COS ack
+path (the benchmark baseline).
+
+Payloads follow the `Payload` protocol: `bytes`, numpy arrays, or
+device-backed `jax.Array`s are fragmented as flat uint8 views and reach
+the bit-sliced GF(256) kernel without an intermediate `bytes` copy;
+`get_array` / `get_many_arrays` return uint8 arrays the same way.
+
+Also wired through: CAS versioning with multi-key batch commit (one
+leader-sequenced metadata round per `put_many`), RS erasure coding,
+PlaceChunk over the sliding-window GC-buckets, insertion logs, failure
+detection + local/parallel recovery, demand caching, compaction,
+large-object fragmentation, grouped per-function invokes on BOTH the
+PUT and GET data paths, the two-queue scheme, and pay-per-access cost
+accounting.
 """
 from __future__ import annotations
 
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -23,10 +48,13 @@ from repro.core.costmodel import CostLedger
 from repro.core.ec import ECConfig, RSCodec
 from repro.core.gc_window import BucketState, GCConfig, SlidingWindow
 from repro.core.insertion_log import InsertionLog, Piggyback, PutRecord
+from repro.core.payload import (as_u8, is_array_payload, needs_snapshot,
+                                payload_nbytes, to_bytes)
 from repro.core.placement import PlacementManager
 from repro.core.recovery import RecoveryManager
 from repro.core.sms import SMS
 from repro.core.versioning import MetadataTable, PersistentBuffer
+from repro.core.writeback import StoreFuture, WritebackQueue
 
 MB = 1024 * 1024
 
@@ -47,6 +75,14 @@ class StoreConfig:
     # calibrated to the paper's ~75 MB/s per-instance bandwidth
     busy_base_s: float = 0.001
     busy_per_byte_s: float = 1.0 / (75 * MB)
+    # ---- async writeback (§5.3.2) --------------------------------------
+    # True: PUT acks after SMS slabs + persistent buffer + insertion log;
+    # COS chunk writes drain in the background. False: legacy inline COS
+    # writes on the ack path (benchmark baseline / strict-persist mode).
+    async_writeback: bool = True
+    writeback_depth: int = 512         # queue bound (backpressure)
+    writeback_retries: int = 8
+    writeback_backoff_s: float = 0.005
 
 
 @dataclass
@@ -61,6 +97,9 @@ class StoreStats:
     degraded_hits: int = 0
     small_requests: int = 0
     large_requests: int = 0
+    cas_rounds: int = 0            # multi-key CAS: metadata rounds issued
+    gather_invokes: int = 0        # GET-side grouped per-function invokes
+    array_payload_puts: int = 0    # PUTs that arrived as array payloads
 
     @property
     def hit_ratio(self) -> float:
@@ -89,6 +128,11 @@ class InfiniStore:
         self.stats = StoreStats()
         self.rng = np.random.default_rng(seed)
         self._lock = threading.RLock()
+        self.writeback = WritebackQueue(
+            self.cos, max_depth=cfg.writeback_depth,
+            max_retries=cfg.writeback_retries,
+            backoff_base_s=cfg.writeback_backoff_s,
+            start_thread=cfg.async_writeback)
         # chunk key -> function id (the daemon's chunk-function mapping)
         self.chunk_map: Dict[str, int] = {}
         # daemon's piggybacked view of each function's insertion state
@@ -100,8 +144,64 @@ class InfiniStore:
             new_function_cb=self._on_new_function)
         self.recovery = RecoveryManager(
             self.sms, self.cos, self.logs,
-            num_recovery_functions=cfg.num_recovery_functions)
+            num_recovery_functions=cfg.num_recovery_functions,
+            writeback=self.writeback)
         self._pending_records: Dict[int, List[PutRecord]] = {}
+        # the client-daemon thread: every mutating request runs here, in
+        # submission order — async callers pipeline, sync callers block
+        self._daemon_ident: Optional[int] = None
+        self._exec = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="store-client",
+            initializer=self._register_daemon)
+
+    # ------------------------------------------------------------------
+    # async plumbing
+    # ------------------------------------------------------------------
+
+    def _register_daemon(self) -> None:
+        self._daemon_ident = threading.get_ident()
+
+    def _submit(self, fn) -> StoreFuture:
+        fut = StoreFuture()
+        if threading.get_ident() == self._daemon_ident:
+            # re-entrant call from the daemon thread itself: run inline
+            # (queueing would deadlock the single worker)
+            try:
+                fut._resolve(fn())
+            except BaseException as e:            # noqa: BLE001
+                fut.set_exception(e)
+            return fut
+
+        def run():
+            try:
+                fut._resolve(fn())
+            except BaseException as e:            # noqa: BLE001
+                fut.set_exception(e)
+        self._exec.submit(run)
+        return fut
+
+    def flush_writeback(self, timeout: Optional[float] = None) -> bool:
+        """Barrier: block until every acked PUT is persisted in COS.
+        False on timeout or if any write failed out permanently (those
+        payloads remain pinned in the persistent buffer)."""
+        return self.writeback.flush(timeout=timeout)
+
+    def close(self, *, flush: bool = True) -> bool:
+        """Release the store's threads: drain the client-daemon executor
+        FIRST (in-flight PUTs may still enqueue writebacks), then flush +
+        stop the writeback writer. Returns False if writes were left
+        unpersisted. The store must not be used afterwards."""
+        self._exec.shutdown(wait=True)
+        ok = self.writeback.close(flush=flush)
+        self.cos.shutdown()
+        return ok
+
+    def cos_keys(self, prefix: str = "") -> List[str]:
+        """COS key listing that includes acked-but-not-yet-persisted
+        writes (the pending writeback map)."""
+        keys = set(self.cos.list_keys(prefix))
+        keys.update(self.writeback.pending_keys(prefix))
+        return sorted(keys)
 
     # ------------------------------------------------------------------
     # function lifecycle
@@ -109,7 +209,12 @@ class InfiniStore:
 
     def _on_new_function(self, fid: int, fg_id: int, capacity: int) -> None:
         self.sms.add(fid, capacity)
-        self.logs[fid] = InsertionLog(fid, self.cos)
+        # with async writeback, log-node persistence rides the background
+        # writer (the instance persists on return, §5.5.1 — not the
+        # client's ack path); reads stay correct via the pending map
+        self.logs[fid] = InsertionLog(
+            fid, self.cos,
+            writeback=self.writeback if self.cfg.async_writeback else None)
         self.daemon_view[fid] = Piggyback()
         self.window.latest.add_function(fid, fg_id)
         self.recovery.assign_group(fid, list(self.sms.slabs.keys()))
@@ -155,48 +260,94 @@ class InfiniStore:
     # PUT (Appendix A left + §5.3.1/§5.3.2)
     # ------------------------------------------------------------------
 
-    def put(self, key: str, value: bytes) -> int:
-        """Strongly-consistent versioned PUT. Returns the version."""
-        return self.put_many([(key, value)], raise_on_conflict=True)[key]
+    def put(self, key: str, value) -> int:
+        """Strongly-consistent versioned PUT (blocking wrapper over
+        `put_async`). Returns the version."""
+        return self.put_async(key, value).result()
+
+    @staticmethod
+    def _snapshot_value(value):
+        """Snapshot mutable host buffers ON THE CALLER'S THREAD, at
+        submission: once put_async returns, the caller may reuse its
+        buffer — the store must already own a stable copy. bytes and
+        device arrays are immutable and pass through zero-copy."""
+        if needs_snapshot(value):
+            return as_u8(value).copy()
+        return value
+
+    def put_async(self, key: str, value) -> StoreFuture:
+        """Non-blocking PUT. The future resolves to the committed version
+        once fragments land in SMS slabs + the persistent buffer; COS
+        persistence continues in the background (see module docstring).
+        The payload is captured at submission — the caller may mutate or
+        reuse its buffer immediately."""
+        value = self._snapshot_value(value)
+        return self._submit(
+            lambda: self._put_many_impl([(key, value)],
+                                        raise_on_conflict=True)[key])
 
     def put_many(self, items, *, raise_on_conflict: bool = False
                  ) -> Dict[str, int]:
-        """Batch PUT: one CAS per key, but ALL fragments of ALL objects go
-        through a single `encode_many` codec call and chunk writes are
-        grouped per function (one invoke + one insertion-log append each).
-        items: dict or iterable of (key, value). Returns {key: version}
-        (-1 on failure), matching `put` per key. A CAS conflict on one key
-        fails only that key (-1) unless raise_on_conflict (the single-key
-        `put` contract: raise so the caller retries)."""
+        """Batch PUT (blocking wrapper over `put_many_async`)."""
+        return self.put_many_async(
+            items, raise_on_conflict=raise_on_conflict).result()
+
+    def put_many_async(self, items, *, raise_on_conflict: bool = False
+                       ) -> StoreFuture:
+        """Batch PUT: ONE leader-sequenced multi-key CAS round commits
+        the whole batch's metadata, ALL fragments of ALL objects go
+        through a single `encode_many` codec call, and chunk writes are
+        grouped per function (one invoke + one insertion-log append
+        each). items: dict or iterable of (key, value). The future
+        resolves to {key: version} (-1 on failure), matching `put` per
+        key. A CAS conflict on one key fails only that key (-1) unless
+        raise_on_conflict (the single-key `put` contract: raise so the
+        caller retries)."""
         items = list(items.items()) if isinstance(items, dict) \
             else list(items)
+        items = [(k, self._snapshot_value(v)) for k, v in items]
+        return self._submit(
+            lambda: self._put_many_impl(items,
+                                        raise_on_conflict=raise_on_conflict))
+
+    def _put_many_impl(self, items, *, raise_on_conflict: bool = False
+                       ) -> Dict[str, int]:
         if len({k for k, _ in items}) != len(items):
             # a duplicate key would CAS against its own in-flight version
             raise ValueError("duplicate keys in put_many batch")
         conflicted: List[str] = []
+        installed: List[Tuple[str, object, object]] = []
         metas: List[Tuple[str, object, int, List[str]]] = []
-        frags: List[Tuple[str, bytes]] = []
+        frags: List[Tuple[str, np.ndarray]] = []
+        out: Dict[str, int] = {}
         try:
+            cands = []
             for key, value in items:
                 self.stats.puts += 1
-                self._track_queue(len(value))
-                c = self.mt.prepare(key, 1)
-                try:
-                    while True:
-                        m, ok = self.mt.cas(key, c)
-                        if ok:
-                            break
-                        if not m.is_done():
-                            m.wait(timeout=5.0)
+                if is_array_payload(value):
+                    self.stats.array_payload_puts += 1
+                self._track_queue(payload_nbytes(value))
+                cands.append((key, value, self.mt.prepare(key, 1)))
+            # multi-key CAS: one metadata round per retry wave, not one
+            # round per key
+            pending = cands
+            while pending:
+                self.stats.cas_rounds += 1
+                results = self.mt.cas_many([(k, c) for k, _, c in pending])
+                nxt = []
+                for (key, value, c), (m, ok) in zip(pending, results):
+                    if ok:
+                        installed.append((key, value, c))
+                    elif not m.is_done():         # concurrent PUT in flight
+                        m.wait(timeout=5.0)
+                        if raise_on_conflict:
                             raise ConcurrentPutError(key)
+                        conflicted.append(key)
+                    else:
                         c.revise(m.ver + 1)
-                except ConcurrentPutError:
-                    # candidate never installed -> nothing to clean up;
-                    # other keys in the batch proceed independently
-                    if raise_on_conflict:
-                        raise
-                    conflicted.append(key)
-                    continue
+                        nxt.append((key, value, c))
+                pending = nxt
+            for key, value, c in installed:
                 ver = c.ver
                 self.mt.store(f"{key}|{ver}", c)
                 # register for cleanup BEFORE fragmenting: once the CAS
@@ -204,25 +355,36 @@ class InfiniStore:
                 # finalize this key (fkeys is mutated in place)
                 fkeys: List[str] = []
                 metas.append((key, c, ver, fkeys))
-                fragments = [value[i:i + self.cfg.fragment_bytes]
-                             for i in range(0, max(len(value), 1),
-                                            self.cfg.fragment_bytes)]
+                # mutable buffers were snapshotted at submission
+                # (_snapshot_value), so this view is store-owned or
+                # immutable-backed either way
+                u8 = as_u8(value)
+                fb = self.cfg.fragment_bytes
+                fragments = [u8[i:i + fb]
+                             for i in range(0, max(u8.size, 1), fb)]
                 c.num_fragments = len(fragments)
-                c.size = len(value)
+                c.size = u8.size
                 for fi, frag in enumerate(fragments):
                     fkey = f"{key}|{ver}/f{fi}"
-                    self.pb.create(fkey, frag)      # persistent buffer
+                    # persistent buffer: one ref held by the PUT itself;
+                    # each async chunk writeback retains another and
+                    # releases it on persistence (§5.3.2 draining)
+                    self.pb.create(fkey, frag)
                     fkeys.append(fkey)
                     frags.append((fkey, frag))
             failed = self._put_fragments(frags)
-            # PUT returns after SMS insertion; COS persistence is async
-            # and retried from the persistent buffer (§5.3.2). Here the
-            # insertion log append IS the durable point, buffers release.
-            out: Dict[str, int] = {}
+            # ACK POINT: chunks are in SMS slabs, fragments in the
+            # persistent buffer, insertion logs appended. COS chunk
+            # persistence drains asynchronously from the writeback queue;
+            # the buffer entry lives until its last chunk persists.
             for key, c, ver, fkeys in metas:
+                frag_failed = any(fk in failed for fk in fkeys)
                 for fkey in fkeys:
-                    self.pb.release(fkey)
-                ok = c.done(not any(fk in failed for fk in fkeys))
+                    if frag_failed:
+                        self.pb.release_all(fkey)
+                    else:
+                        self.pb.release(fkey)     # drop the PUT's own ref
+                ok = c.done(not frag_failed)
                 if ok and c.prev_ver > 0:
                     self._gc_old_version(key, c.prev_ver)
                 out[key] = ver if ok else -1
@@ -234,7 +396,10 @@ class InfiniStore:
             for _, c, _, fkeys in metas:
                 if not c.is_done():
                     for fkey in fkeys:
-                        self.pb.release(fkey)
+                        self.pb.release_all(fkey)
+                    c.done(False)
+            for _, _, c in installed:
+                if not c.is_done():               # installed, not fragmented
                     c.done(False)
             raise
         for key in conflicted:
@@ -268,26 +433,52 @@ class InfiniStore:
                 return fid
             self.placement.seal_fg(self.placement.functions[fid].fg_id)
 
-    def _put_fragments(self, frags: List[Tuple[str, bytes]]) -> Set[str]:
-        """Encode ALL fragments in one `encode_many` call, place every
-        chunk, then drain the writes grouped by target function: one
-        `_invoke` covering the function's whole byte share (amortizing the
-        per-request busy-time base of the billing model, §5.2) and one
-        insertion-log append per function (§5.5.1). Returns the set of
-        fragment keys whose chunks failed to store."""
+    def _persist_chunk(self, fkey: str, ckey: str, chunk) -> None:
+        """Route one chunk's COS persistence: inline on the ack path
+        (legacy mode) or via the background writeback queue."""
+        self.ledger.cos_op("put")
+        if self.cfg.async_writeback:
+            self.pb.retain(fkey)
+            self.writeback.enqueue(f"chunk/{ckey}", chunk,
+                                   on_done=self._on_chunk_persisted)
+        else:
+            self.cos.put(f"chunk/{ckey}", chunk)
+
+    def _on_chunk_persisted(self, cos_key: str, ok: bool) -> None:
+        """Writeback completion: drop the chunk's persistent-buffer ref.
+        A write that exhausted its retries keeps the ref — the buffer
+        stays the durable copy rather than silently losing data."""
+        if ok:
+            fkey = cos_key[len("chunk/"):].rsplit("#", 1)[0]
+            self.pb.release(fkey)
+
+    def _put_fragments(self, frags: List[Tuple[str, np.ndarray]]
+                       ) -> Set[str]:
+        """Encode ALL fragments in one `encode_many` call (array chunks:
+        uint8 views into the stacked encode buffer, no bytes copies),
+        place every chunk, then drain the writes grouped by target
+        function: one `_invoke` covering the function's whole byte share
+        (amortizing the per-request busy-time base of the billing model,
+        §5.2) and one insertion-log append per function (§5.5.1).
+        Returns the set of fragment keys whose chunks failed to store."""
         if not frags:
             return set()
-        all_chunks = self.codec.encode_many([frag for _, frag in frags])
-        groups: Dict[int, List[Tuple[str, str, bytes]]] = {}
+        all_chunks = self.codec.encode_many([frag for _, frag in frags],
+                                            as_arrays=True)
+        groups: Dict[int, List[Tuple[str, str, object]]] = {}
         for (fkey, _), chunks in zip(frags, all_chunks):
             for idx, chunk in enumerate(chunks):
                 ckey = f"{fkey}#{idx}"
                 fid = self._place_chunk(idx, len(chunk))
-                groups.setdefault(fid, []).append((fkey, ckey, chunk))
+                # compact the chunk out of the batch-wide stacked encode
+                # buffer (one memcpy, as the legacy tobytes did) so a
+                # long-lived slab/COS chunk never pins the whole batch
+                groups.setdefault(fid, []).append((fkey, ckey,
+                                                   chunk.copy()))
         # phase 1: slab writes only, so a fragment can still fail before
         # anything about it becomes durable
         failed: Set[str] = set()
-        written: Dict[int, List[Tuple[str, str, bytes]]] = {}
+        written: Dict[int, List[Tuple[str, str, object]]] = {}
         for fid, items in groups.items():
             slab = self.sms.get(fid)
             self._invoke(fid, sum(len(c) for _, _, c in items), "request")
@@ -315,8 +506,9 @@ class InfiniStore:
                 else:
                     failed.add(fkey)
         # phase 2: failed fragments roll their stored chunks back out of
-        # the slabs; surviving fragments become visible (chunk_map), hit
-        # COS (§5.2), and land in the insertion log — the durable point
+        # the slabs; surviving fragments become visible (chunk_map), are
+        # queued for COS persistence (§5.3.2), and land in the insertion
+        # log — the durable point
         for fid, items in written.items():
             slab = self.sms.get(fid)
             records: List[PutRecord] = []
@@ -327,8 +519,7 @@ class InfiniStore:
                     continue
                 with self._lock:
                     self.chunk_map[ckey] = fid
-                self.cos.put(f"chunk/{ckey}", chunk)
-                self.ledger.cos_op("put")
+                self._persist_chunk(fkey, ckey, chunk)
                 records.append(PutRecord(key=ckey, size=len(chunk),
                                          version=0))
             # consolidate this window's records into insertion nodes
@@ -346,50 +537,105 @@ class InfiniStore:
     # ------------------------------------------------------------------
 
     def get(self, key: str) -> Optional[bytes]:
-        return self.get_many([key])[key]
+        return self.get_async(key).result()
+
+    def get_async(self, key: str) -> StoreFuture:
+        """Non-blocking GET; the future resolves to bytes or None."""
+        return self._submit(lambda: self._get_many_impl([key])[key])
 
     def get_many(self, keys) -> Dict[str, Optional[bytes]]:
-        """Batch GET: chunk reads happen per fragment, but ALL fragments
-        needing EC reconstruction across the whole batch are decoded by a
-        single `decode_many` call (shared survivor sets stack into one
-        cached-inverse matmul). Returns {key: value-or-None}."""
-        out: Dict[str, Optional[bytes]] = {}
+        return self.get_many_async(keys).result()
+
+    def get_many_async(self, keys) -> StoreFuture:
+        """Batch GET: chunk reads are grouped into ONE invoke per function
+        across the whole gather, and ALL fragments needing EC
+        reconstruction are decoded by a single `decode_many` call. The
+        future resolves to {key: value-or-None}."""
+        keys = list(keys)
+        return self._submit(lambda: self._get_many_impl(keys))
+
+    def get_array(self, key: str) -> Optional[np.ndarray]:
+        """GET returning a flat uint8 array (no bytes materialization) —
+        the device/checkpoint payload path."""
+        return self.get_many_arrays([key])[key]
+
+    def get_many_arrays(self, keys) -> Dict[str, Optional[np.ndarray]]:
+        return self.get_many_arrays_async(keys).result()
+
+    def get_many_arrays_async(self, keys) -> StoreFuture:
+        keys = list(keys)
+        return self._submit(
+            lambda: self._get_many_impl(keys, as_arrays=True))
+
+    def _get_many_impl(self, keys, *, as_arrays: bool = False) -> Dict:
+        out: Dict = {}
         plans: List[Tuple[str, object, List[object]]] = []
-        batch: List[Dict[int, bytes]] = []
+        gather_fkeys: List[str] = []
         for key in dict.fromkeys(keys):    # dedup, keep first-seen order
             self.stats.gets += 1
             m = self._resolve_meta(key)
             if m is None:
                 out[key] = None
                 continue
-            parts: List[object] = []     # bytes, or int index into `batch`
-            local: List[Dict[int, bytes]] = []
+            parts: List[object] = []   # payload, or str fkey placeholder
             for fi in range(m.num_fragments):
                 fkey = f"{key}|{m.ver}/f{fi}"
                 buf = self.pb.load(fkey)             # read-after-write
                 if buf is not None:
                     self.stats.buffer_hits += 1
                     parts.append(buf)
-                    continue
-                chunks = self._gather_fragment_chunks(fkey)
-                if chunks is None:
-                    out[key] = None
-                    parts = None
-                    break
-                parts.append(len(batch) + len(local))
-                local.append(chunks)
-            if parts is not None:
+                else:
+                    parts.append(fkey)
+                    gather_fkeys.append(fkey)
+            plans.append((key, m, parts))
+        gathered = self._gather_many(gather_fkeys) if gather_fkeys else {}
+        batch: List[Dict[int, object]] = []
+        final: List[Tuple[str, object, List[object]]] = []
+        for key, m, parts in plans:
+            resolved: List[object] = []
+            for p in parts:
+                if isinstance(p, str):               # needs chunk gather
+                    chunks = gathered.get(p)
+                    if chunks is None:
+                        out[key] = None
+                        resolved = None
+                        break
+                    resolved.append(len(batch))
+                    batch.append(chunks)
+                else:
+                    resolved.append(p)
+            if resolved is not None:
                 # only successful keys reach the decode batch; a failed
                 # key's already-gathered fragments are dropped here
-                batch.extend(local)
-                plans.append((key, m, parts))
-        decoded = self.codec.decode_many(batch) if batch else []
-        for key, m, parts in plans:
-            val = b"".join(p if isinstance(p, bytes) else decoded[p]
-                           for p in parts)
-            self._track_queue(len(val))
-            out[key] = val[:m.size] if m.size else val
+                final.append((key, m, resolved))
+        decoded = self.codec.decode_many(batch, as_arrays=as_arrays) \
+            if batch else []
+        for key, m, parts in final:
+            pieces = [decoded[p] if isinstance(p, int) else p
+                      for p in parts]
+            val = self._assemble(pieces, m.size, as_arrays)
+            self._track_queue(payload_nbytes(val))
+            out[key] = val
         return out
+
+    @staticmethod
+    def _assemble(pieces: List[object], size: int, as_arrays: bool):
+        """Join fragment payloads into the object value, trimmed to the
+        metadata size. Array results are READ-ONLY views: a single-
+        fragment result can alias the persistent buffer's durable copy,
+        and stored objects are immutable by contract anyway."""
+        if as_arrays:
+            val = pieces[0] if len(pieces) == 1 else \
+                np.concatenate([as_u8(p) for p in pieces])
+            val = as_u8(val)
+            out = (val[:size] if size else val).view()
+            out.flags.writeable = False
+            return out
+        if all(isinstance(p, bytes) for p in pieces):
+            val = b"".join(pieces)
+        else:
+            val = b"".join(to_bytes(p) for p in pieces)
+        return val[:size] if size else val
 
     def _resolve_meta(self, key: str):
         """Follow the version chain to the newest done-ok metadata."""
@@ -408,68 +654,116 @@ class InfiniStore:
             return None
         return m
 
-    def _gather_fragment_chunks(self, fkey: str) -> Optional[Dict[int, bytes]]:
+    def _gather_many(self, fkeys: Sequence[str]
+                     ) -> Dict[str, Optional[Dict[int, object]]]:
+        """Gather >= k chunks for every fragment, issuing AT MOST ONE
+        invoke per function across the whole gather (the GET-side mirror
+        of the PUT-side per-function grouping)."""
         n, k = self.cfg.ec.n, self.cfg.ec.k
-        have: Dict[int, bytes] = {}
-        missing: List[int] = []
-        for idx in range(n):
-            ckey = f"{fkey}#{idx}"
-            fid = self.chunk_map.get(ckey)
-            if fid is None:
-                missing.append(idx)
-                continue
-            data = self._read_chunk(ckey, fid)
-            if data is not None:
-                have[idx] = data
-                if len(have) >= k:
-                    break                            # EC: k chunks suffice
-            else:
-                missing.append(idx)
-        if len(have) < k:
-            # on-demand migration from COS (§5.3.3)
-            for idx in missing:
+        have: Dict[str, Dict[int, object]] = {f: {} for f in fkeys}
+        candidates: Dict[str, List[Tuple[int, str, int]]] = {}
+        for fkey in fkeys:
+            cand = []
+            for idx in range(n):
                 ckey = f"{fkey}#{idx}"
-                data = self._cos_read_consistent(f"chunk/{ckey}")
-                if data is not None:
-                    have[idx] = data
-                    self._demand_cache(ckey, data)
-                if len(have) >= k:
-                    break
-        if len(have) < k:
-            return None
-        return have
+                fid = self.chunk_map.get(ckey)
+                if fid is not None:
+                    cand.append((idx, ckey, fid))
+            candidates[fkey] = cand
+        # round 0 reads the first k mapped chunks per fragment (EC needs
+        # only k); round 1 widens to the remaining mapped chunks for
+        # fragments a failed read left short. Each round groups reads by
+        # function: one invoke covers every chunk the function serves.
+        tried: Set[Tuple[str, int]] = set()
+        invoked: Set[int] = set()
+        for rnd in (0, 1):
+            groups: Dict[int, List[Tuple[str, int, str]]] = {}
+            for fkey, cand in candidates.items():
+                short = k - len(have[fkey])
+                if short <= 0:
+                    continue
+                sel = cand[:k] if rnd == 0 else cand
+                for idx, ckey, fid in sel:
+                    if (fkey, idx) in tried or idx in have[fkey]:
+                        continue
+                    tried.add((fkey, idx))
+                    groups.setdefault(fid, []).append((fkey, idx, ckey))
+            if not groups:
+                continue
+            degraded: List[str] = []
+            for fid, group in groups.items():
+                for fkey, idx, data in self._read_chunks_grouped(
+                        fid, group, degraded, invoked):
+                    have[fkey][idx] = data
+            if degraded:
+                self._migrate_chunks(degraded)        # sync migration
+        out: Dict[str, Optional[Dict[int, object]]] = {}
+        for fkey, got in have.items():
+            if len(got) < k:
+                # on-demand migration from COS (§5.3.3); the pending
+                # writeback map covers acked-but-unpersisted chunks
+                for idx in range(n):
+                    if idx in got:
+                        continue
+                    ckey = f"{fkey}#{idx}"
+                    data = self._cos_read_consistent(f"chunk/{ckey}")
+                    if data is not None:
+                        got[idx] = data
+                        self._demand_cache(ckey, data)
+                    if len(got) >= k:
+                        break
+            out[fkey] = got if len(got) >= k else None
+        return out
 
-    def _read_chunk(self, ckey: str, fid: int) -> Optional[bytes]:
+    def _read_chunks_grouped(self, fid: int,
+                             items: List[Tuple[str, int, str]],
+                             degraded_out: List[str],
+                             invoked: Set[int]) -> List[Tuple[str, int, object]]:
+        """Read this function's share of a gather with ONE invoke (and
+        one consolidated ledger charge for the bytes served)."""
+        out: List[Tuple[str, int, object]] = []
         slab = self.sms.slabs.get(fid)
         if slab is None:                              # function released
-            self.stats.sms_chunk_misses += 1
-            return None
+            self.stats.sms_chunk_misses += len(items)
+            return out
         state = self.window.state_of_function(fid)
         if state is None or state == BucketState.RELEASED:
-            self.stats.sms_chunk_misses += 1
-            return None
-        self._invoke(fid, 0, "request")
-        data = self.recovery.serve_during_recovery(fid, ckey)
-        if data is None:
-            data = slab.load(ckey)
-        if data is None:
-            self.stats.sms_chunk_misses += 1
-            return None
-        self.stats.sms_chunk_hits += 1
-        self.ledger.invoke("request", gb=slab.capacity / 1024**3,
-                           seconds=len(data) * self.cfg.busy_per_byte_s)
-        # mark re-accessed data for compaction (§5.3.3)
-        self.window.mark(ckey)
-        if state == BucketState.DEGRADED:
-            self.stats.degraded_hits += 1
-            self._migrate_chunks([ckey])              # sync migration
-        return data
+            self.stats.sms_chunk_misses += len(items)
+            return out
+        if fid not in invoked:
+            self._invoke(fid, 0, "request")
+            self.stats.gather_invokes += 1
+            invoked.add(fid)
+        nbytes = 0
+        for fkey, idx, ckey in items:
+            data = self.recovery.serve_during_recovery(fid, ckey)
+            if data is None:
+                data = slab.load(ckey)
+            if data is None:
+                self.stats.sms_chunk_misses += 1
+                continue
+            self.stats.sms_chunk_hits += 1
+            nbytes += len(data)
+            # mark re-accessed data for compaction (§5.3.3)
+            self.window.mark(ckey)
+            if state == BucketState.DEGRADED:
+                self.stats.degraded_hits += 1
+                degraded_out.append(ckey)
+            out.append((fkey, idx, data))
+        if nbytes:
+            self.ledger.invoke("request", gb=slab.capacity / 1024**3,
+                               seconds=nbytes * self.cfg.busy_per_byte_s)
+        return out
 
-    def _cos_read_consistent(self, key: str, max_tries: int = 16
-                             ) -> Optional[bytes]:
+    def _cos_read_consistent(self, key: str, max_tries: int = 16):
         """SCFS-style consistency-increasing loop: retry until the
-        eventually-consistent COS shows the object (Appendix A)."""
+        eventually-consistent COS shows the object (Appendix A). Writes
+        still queued for persistence are served from the writeback
+        pending map — they're not in COS yet by construction."""
         for _ in range(max_tries):
+            data = self.writeback.peek(key)
+            if data is not None:
+                return data
             data = self.cos.get(key)
             self.ledger.cos_op("get")
             if data is not None:
@@ -486,7 +780,7 @@ class InfiniStore:
     # demand caching + compaction + GC
     # ------------------------------------------------------------------
 
-    def _demand_cache(self, ckey: str, data: bytes) -> None:
+    def _demand_cache(self, ckey: str, data) -> None:
         """GET-triggered caching into the latest bucket's cache space
     (§5.3.3 'cache functions'); evictable, not counted against HARDCAP."""
         fid = self.placement.get_open_funcs(0)[0]
@@ -499,8 +793,10 @@ class InfiniStore:
         """Compaction: move marked/hit chunks into the latest GC-bucket by
         loading them from COS into newly placed slots (§5.3.3)."""
         for ckey in ckeys:
-            data = self.cos.get(f"chunk/{ckey}")
-            self.ledger.cos_op("get")
+            data = self.writeback.peek(f"chunk/{ckey}")
+            if data is None:
+                data = self.cos.get(f"chunk/{ckey}")
+                self.ledger.cos_op("get")
             if data is None:
                 old = self.chunk_map.get(ckey)
                 data = self.sms.slabs[old].load(ckey) if old is not None \
@@ -527,8 +823,13 @@ class InfiniStore:
                 self.stats.compactions += 1
 
     def gc_tick(self) -> None:
-        """Run due GC + one compaction round + warmups. Call periodically
-        (the serving engine ticks this; tests drive the clock)."""
+        """Run due GC + one compaction round + warmups + a writeback
+        drain slice. Call periodically (the serving engine ticks this;
+        tests drive the clock). Runs on the client-daemon thread so it
+        serializes with in-flight async PUT/GETs."""
+        self._submit(self._gc_tick_impl).result()
+
+    def _gc_tick_impl(self) -> None:
         if self.window.due():
             ev = self.window.run_gc()
             # carry open FGs into the new bucket (Fig. 4c)
@@ -543,6 +844,8 @@ class InfiniStore:
         if round_keys:
             self._migrate_chunks(round_keys)
         self._warmup_tick()
+        if self.cfg.async_writeback:
+            self.writeback.drain(32)                  # §5.3.2 retry point
         # provider-side reclamation of long-idle instances
         self.sms.reclaim_idle(self.cfg.provider_idle_reclaim)
 

@@ -14,6 +14,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
+from repro.core.payload import payload_nbytes
+
 
 class MetaStatus(enum.Enum):
     PENDING = 0
@@ -70,14 +72,28 @@ class MetadataTable:
     def cas(self, key: str, candidate: Meta) -> Tuple[Optional[Meta], bool]:
         """Insert candidate as the head metadata for key unless a PENDING
         or newer entry exists. Returns (current, ok)."""
+        return self.cas_many([(key, candidate)])[0]
+
+    def cas_many(self, items: "list[Tuple[str, Meta]]"
+                 ) -> "list[Tuple[Optional[Meta], bool]]":
+        """Multi-key CAS: commit a batch of candidates in ONE leader-
+        sequenced metadata round (one lock acquisition) instead of one
+        round per key. Keys succeed/fail independently — a PENDING or
+        newer head fails only that key. Checkpoint saves are the main
+        beneficiary: B leaf shards -> 1 metadata round."""
+        out: "list[Tuple[Optional[Meta], bool]]" = []
         with self._lock:
-            cur = self._t.get(key)
-            if cur is None or (cur.is_done() and candidate.ver == cur.ver + 1):
-                if cur is not None:
-                    candidate.prev_ver = cur.ver
-                self._t[key] = candidate
-                return candidate, True
-            return cur, False
+            for key, candidate in items:
+                cur = self._t.get(key)
+                if cur is None or (cur.is_done()
+                                   and candidate.ver == cur.ver + 1):
+                    if cur is not None:
+                        candidate.prev_ver = cur.ver
+                    self._t[key] = candidate
+                    out.append((candidate, True))
+                else:
+                    out.append((cur, False))
+        return out
 
     def store(self, versioned_key: str, meta: Meta) -> None:
         with self._lock:
@@ -100,12 +116,19 @@ class MetadataTable:
 
 @dataclass
 class _BufEntry:
-    data: bytes
+    data: object                  # bytes or flat uint8 ndarray (zero-copy)
     refs: int = 1
 
 
 class PersistentBuffer:
-    """Daemon-local stream buffer keyed by `key|ver[/frag]` (§5.3.2)."""
+    """Daemon-local stream buffer keyed by `key|ver[/frag]` (§5.3.2).
+
+    Entries are refcounted so the async writeback path can drain them
+    incrementally: a PUT creates the entry with one ref per derived COS
+    write, each completed (or abandoned) write releases one ref, and the
+    entry — which serves read-after-write GETs and the durability
+    fallback meanwhile — is freed when the last ref drops. Payloads are
+    stored as handed in (bytes or uint8 views), never copied."""
 
     def __init__(self):
         self._buf: Dict[str, _BufEntry] = {}
@@ -113,15 +136,15 @@ class PersistentBuffer:
         self.peak_bytes = 0
         self.hits = 0
 
-    def create(self, key: str, data: bytes) -> str:
+    def create(self, key: str, data, refs: int = 1) -> str:
         with self._lock:
-            self._buf[key] = _BufEntry(bytes(data))
+            self._buf[key] = _BufEntry(data, refs=max(refs, 1))
             self.peak_bytes = max(
                 self.peak_bytes,
-                sum(len(e.data) for e in self._buf.values()))
+                sum(payload_nbytes(e.data) for e in self._buf.values()))
             return key
 
-    def load(self, key: str) -> Optional[bytes]:
+    def load(self, key: str):
         with self._lock:
             e = self._buf.get(key)
             if e is not None:
@@ -129,11 +152,29 @@ class PersistentBuffer:
                 return e.data
             return None
 
+    def retain(self, key: str) -> None:
+        """Add a ref (one per in-flight writeback of derived data)."""
+        with self._lock:
+            e = self._buf.get(key)
+            if e is not None:
+                e.refs += 1
+
     def release(self, key: str) -> None:
+        """Drop one ref; the entry is freed when the last ref drops."""
+        with self._lock:
+            e = self._buf.get(key)
+            if e is None:
+                return
+            e.refs -= 1
+            if e.refs <= 0:
+                self._buf.pop(key, None)
+
+    def release_all(self, key: str) -> None:
+        """Force-drop the entry regardless of refcount (failure paths)."""
         with self._lock:
             self._buf.pop(key, None)
 
     @property
     def size_bytes(self) -> int:
         with self._lock:
-            return sum(len(e.data) for e in self._buf.values())
+            return sum(payload_nbytes(e.data) for e in self._buf.values())

@@ -26,6 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.core.clock import Clock
 from repro.core.cos import COS
 from repro.core.gc_window import BucketState, GCConfig, SlidingWindow
+from repro.core.payload import as_u8
 from repro.core.placement import PlacementManager
 from repro.core.sms import SMS, Ref
 
@@ -117,11 +118,13 @@ class SMSPagedKV:
                     slab.invoke(0.0)
 
     def evict_page_to_cos(self, key: str) -> None:
-        """Copy the page to host (COS) and free its device slot."""
+        """Copy the page to host (COS) and free its device slot. The
+        payload rides the uint8 Payload protocol: one device-to-host
+        transfer per pool + one concat — no intermediate `bytes`."""
         b, j, phys, fid = self.pages[key]
-        kp = np.asarray(self.k_pool[:, b, phys])
-        vp = np.asarray(self.v_pool[:, b, phys])
-        self.cos.put(key, kp.tobytes() + vp.tobytes())
+        payload = np.concatenate([as_u8(self.k_pool[:, b, phys]),
+                                  as_u8(self.v_pool[:, b, phys])])
+        self.cos.put(key, payload)
         self._free[b].add(phys)
         slab = self.sms.slabs.get(fid)
         if slab is not None:
@@ -137,15 +140,11 @@ class SMSPagedKV:
         if raw is None:
             raise KeyError(f"page {key} not in COS")
         L, _, _, ps, K, hd = self.k_pool.shape
-        half = len(raw) // 2
+        buf = as_u8(raw)                       # bytes or uint8 view alike
+        half = buf.size // 2
         dt = self.k_pool.dtype
-        kp = np.frombuffer(raw[:half], dtype=np.uint16 if dt == jnp.bfloat16
-                           else dt).reshape(L, ps, K, hd)
-        vp = np.frombuffer(raw[half:], dtype=np.uint16 if dt == jnp.bfloat16
-                           else dt).reshape(L, ps, K, hd)
-        if dt == jnp.bfloat16:
-            kp = kp.view(jnp.bfloat16)
-            vp = vp.view(jnp.bfloat16)
+        kp = buf[:half].view(dt).reshape(L, ps, K, hd)
+        vp = buf[half:].view(dt).reshape(L, ps, K, hd)
         phys = self.alloc_page(b, seq_id, j)
         self.k_pool = self.k_pool.at[:, b, phys].set(jnp.asarray(kp))
         self.v_pool = self.v_pool.at[:, b, phys].set(jnp.asarray(vp))

@@ -1,0 +1,270 @@
+"""Futures-based client API: put_async/get_async semantics, grouped GET
+invokes (at most one invoke per function per gather), multi-key CAS
+batching, and zero-copy device/array payloads end-to-end."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Clock, ConcurrentPutError, InfiniStore, StoreConfig,
+                        StoreFuture)
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+
+MB = 1024 * 1024
+
+
+def make_store(k=4, p=2, fragment_bytes=1 * MB, capacity=64 * MB):
+    cfg = StoreConfig(ec=ECConfig(k=k, p=p),
+                      function_capacity=capacity,
+                      fragment_bytes=fragment_bytes,
+                      gc=GCConfig(gc_interval=1e9),
+                      num_recovery_functions=4)
+    return InfiniStore(cfg, clock=Clock())
+
+
+# ---------------------------------------------------------------------------
+# futures semantics
+# ---------------------------------------------------------------------------
+
+def test_put_async_future_resolves_to_version():
+    st = make_store()
+    fut = st.put_async("k", b"hello" * 1000)
+    assert isinstance(fut, StoreFuture)
+    assert fut.result(timeout=10.0) == 1
+    assert fut.version == 1
+    assert fut.done() and fut.exception() is None
+    fut2 = st.put_async("k", b"world" * 1000)
+    assert fut2.result(timeout=10.0) == 2
+
+
+def test_get_async_future_resolves_to_payload():
+    st = make_store()
+    data = np.random.default_rng(0).bytes(50_000)
+    st.put_async("k", data)                       # pipelined: no result()
+    got = st.get_async("k").result(timeout=10.0)
+    assert got == data                            # ordered behind the PUT
+    assert st.get_async("missing").result(timeout=10.0) is None
+
+
+def test_done_callback_fires():
+    st = make_store()
+    seen = []
+    ev = threading.Event()
+
+    def cb(f):
+        seen.append(f.result())
+        ev.set()
+
+    st.put_async("k", b"x" * 100).add_done_callback(cb)
+    assert ev.wait(timeout=10.0)
+    assert seen == [1]
+
+
+def test_pipelined_puts_then_batched_get():
+    st = make_store()
+    rng = np.random.default_rng(1)
+    objs = {f"k{i}": rng.bytes(20_000) for i in range(10)}
+    futs = [st.put_async(k, v) for k, v in objs.items()]
+    assert [f.result(timeout=10.0) for f in futs] == [1] * 10
+    out = st.get_many_async(list(objs)).result(timeout=10.0)
+    assert out == objs
+
+
+def test_put_async_conflict_raises_via_future():
+    st = make_store()
+    st.put("x", b"base")
+    # simulate an in-flight PUT by inserting a PENDING head
+    c = st.mt.prepare("x", 1)
+    c.revise(2)
+    st.mt.cas("x", c)
+    t = threading.Timer(0.05, lambda: c.done(True))
+    t.start()
+    fut = st.put_async("x", b"conflict")
+    with pytest.raises(ConcurrentPutError):
+        fut.result(timeout=10.0)
+    t.join()
+
+
+def test_sync_wrappers_match_async():
+    st = make_store()
+    data = b"z" * 30_000
+    assert st.put("a", data) == st.put_async("b", data).result()
+    assert st.get("a") == st.get_async("b").result() == data
+
+
+# ---------------------------------------------------------------------------
+# grouped GET: at most one invoke per function per gather
+# ---------------------------------------------------------------------------
+
+def test_get_invokes_at_most_once_per_function():
+    # 4 fragments x (k=2 reads each) land on 3 functions: a per-chunk
+    # GET would invoke 8 times; the grouped gather may invoke each
+    # function at most once
+    st = make_store(k=2, p=1, fragment_bytes=64 * 1024)
+    data = np.random.default_rng(2).bytes(256 * 1024)     # 4 fragments
+    st.put("big", data)
+    nfuncs = len(st.sms.slabs)
+    assert nfuncs == 3                            # one FG, chunks stacked
+    before = {fid: s.stats.invocations for fid, s in st.sms.slabs.items()}
+    g0 = st.stats.gather_invokes
+    assert st.get("big") == data
+    per_slab = {fid: s.stats.invocations - before[fid]
+                for fid, s in st.sms.slabs.items()}
+    assert all(d <= 1 for d in per_slab.values()), per_slab
+    assert st.stats.gather_invokes - g0 <= nfuncs
+
+
+def test_get_many_groups_across_keys():
+    st = make_store(k=2, p=1, fragment_bytes=64 * 1024)
+    rng = np.random.default_rng(3)
+    objs = {f"o{i}": rng.bytes(100_000) for i in range(5)}
+    for k, v in objs.items():
+        st.put(k, v)
+    nfuncs = len(st.sms.slabs)
+    g0 = st.stats.gather_invokes
+    assert st.get_many(list(objs)) == objs
+    # 5 objects x 2 fragments x 2 chunks = 20 reads, but at most one
+    # invoke per function for the whole batched gather
+    assert st.stats.gather_invokes - g0 <= nfuncs
+
+
+# ---------------------------------------------------------------------------
+# multi-key CAS batching
+# ---------------------------------------------------------------------------
+
+def test_put_many_single_cas_round():
+    st = make_store()
+    rng = np.random.default_rng(4)
+    items = [(f"k{i}", rng.bytes(10_000)) for i in range(8)]
+    r0 = st.stats.cas_rounds
+    out = st.put_many(items)
+    assert all(v == 1 for v in out.values())
+    assert st.stats.cas_rounds - r0 == 1          # ONE metadata round
+    # updates still batch: all 8 keys revise to ver 2 in one extra round
+    r1 = st.stats.cas_rounds
+    out = st.put_many(items)
+    assert all(v == 2 for v in out.values())
+    assert st.stats.cas_rounds - r1 <= 2
+
+
+def test_cas_many_independent_failures():
+    st = make_store()
+    st.put("a", b"1")
+    c = st.mt.prepare("b", 1)
+    st.mt.cas("b", c)                             # leave b PENDING
+    threading.Timer(0.05, lambda: c.done(True)).start()
+    out = st.put_many([("a", b"2"), ("b", b"x"), ("c", b"3")])
+    assert out["a"] == 2 and out["c"] == 1
+    assert out["b"] == -1                         # only b failed
+
+
+# ---------------------------------------------------------------------------
+# zero-copy device/array payloads
+# ---------------------------------------------------------------------------
+
+def test_numpy_payload_roundtrip():
+    st = make_store()
+    arr = np.arange(40_000, dtype=np.float32)
+    a0 = st.stats.array_payload_puts
+    assert st.put("w", arr) == 1
+    assert st.stats.array_payload_puts - a0 == 1
+    got = st.get_array("w")
+    assert isinstance(got, np.ndarray) and got.dtype == np.uint8
+    np.testing.assert_array_equal(got.view(np.float32), arr)
+    # bytes view of the same object matches too
+    assert st.get("w") == arr.tobytes()
+
+
+def test_jax_array_payload_roundtrip():
+    st = make_store()
+    arr = jnp.asarray(np.random.default_rng(5).standard_normal(
+        (64, 64)).astype(np.float32))
+    assert st.put("dev", arr) == 1
+    assert st.stats.array_payload_puts >= 1
+    got = st.get_array("dev")
+    np.testing.assert_array_equal(
+        got.view(np.float32).reshape(64, 64), np.asarray(arr))
+
+
+def test_bfloat16_device_payload_roundtrip():
+    st = make_store()
+    arr = jnp.arange(4096, dtype=jnp.bfloat16)
+    st.put("bf16", arr)
+    got = st.get_array("bf16")
+    np.testing.assert_array_equal(
+        np.asarray(got.view(jnp.bfloat16)), np.asarray(arr))
+
+
+def test_multifragment_array_get():
+    st = make_store(fragment_bytes=64 * 1024)
+    arr = np.random.default_rng(6).integers(
+        0, 255, size=300_000, dtype=np.uint8)     # 5 fragments
+    st.put("frag", arr)
+    np.testing.assert_array_equal(st.get_array("frag"), arr)
+
+
+def test_checkpoint_device_payloads_use_array_path():
+    """Checkpoint save/restore moves jax.Array leaves end-to-end through
+    the array payload path (no intermediate bytes serialization)."""
+    from repro.checkpoint import Checkpointer
+    st = make_store(capacity=32 * MB, fragment_bytes=4 * MB)
+    ck = Checkpointer(st)
+    params = {"w": jnp.asarray(np.random.default_rng(7).standard_normal(
+        (128, 32)).astype(np.float32)),
+        "b16": jnp.arange(2048, dtype=jnp.bfloat16)}
+    a0 = st.stats.array_payload_puts
+    ck.save(3, params)
+    assert st.stats.array_payload_puts - a0 >= len(params)
+    out = ck.restore(3, like=params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mutable_array_payload_snapshotted_at_ack():
+    """Mutating a numpy payload after the PUT acks must not corrupt
+    read-after-write GETs (the persistent buffer owns a snapshot)."""
+    st = make_store()
+    st.writeback.pause()                          # hold the pb entry live
+    arr = np.full(30_000, 7, dtype=np.uint8)
+    st.put("mut", arr)
+    arr[:] = 0                                    # caller mutates post-ack
+    got = st.get_array("mut")
+    np.testing.assert_array_equal(got, np.full(30_000, 7, dtype=np.uint8))
+    st.writeback.resume()
+
+
+def test_put_async_snapshots_at_submission():
+    """The payload is captured when put_async RETURNS — mutating the
+    buffer before the future resolves must not corrupt the write."""
+    st = make_store()
+    arr = np.full(50_000, 9, dtype=np.uint8)
+    futs = [st.put_async(f"p{i}", b"x" * 10_000) for i in range(4)]
+    fut = st.put_async("mut", arr)                # queued behind the others
+    arr[:] = 0                                    # immediate buffer reuse
+    assert fut.result(timeout=10.0) == 1
+    [f.result(timeout=10.0) for f in futs]
+    np.testing.assert_array_equal(
+        st.get_array("mut"), np.full(50_000, 9, dtype=np.uint8))
+
+
+def test_get_array_results_are_read_only():
+    st = make_store()
+    st.put("ro", np.arange(20_000, dtype=np.uint8))
+    got = st.get_array("ro")
+    assert not got.flags.writeable
+    with pytest.raises(ValueError):
+        got[0] = 1
+
+
+def test_durable_after_flush_with_array_payloads():
+    st = make_store()
+    arr = np.arange(25_000, dtype=np.int32)
+    st.put("arr", arr)
+    assert st.flush_writeback(timeout=10.0)
+    for fid in list(st.sms.slabs):
+        st.inject_failure(fid)
+    np.testing.assert_array_equal(
+        st.get_array("arr").view(np.int32), arr)

@@ -49,6 +49,7 @@ def test_restore_after_slab_failures():
     m = build_model(cfg)
     params = m.init_params(jax.random.PRNGKey(1))
     ck.save(1, {"params": params})
+    st.flush_writeback()       # drain the buffer: restore must hit slabs/COS
     for fid in list(st.sms.slabs)[::2]:
         st.inject_failure(fid)
     out = ck.restore(1, like={"params": params})
@@ -85,3 +86,7 @@ def test_latest_step():
     ck.save(2, {"params": params})
     ck.save(7, {"params": params})
     assert ck.latest_step() == 7
+    # a FRESH checkpointer over the same store must discover the steps
+    # from COS keys (incl. the pending writeback map), not process state
+    ck2 = Checkpointer(st)
+    assert ck2.latest_step() == 7

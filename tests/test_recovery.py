@@ -18,6 +18,7 @@ def big_store(num_recovery=4):
 def test_detection_on_term_mismatch(tiny_store):
     st, _ = tiny_store
     st.put("a", b"x" * 50_000)
+    st.flush_writeback()       # drain the buffer: GET must hit the slabs
     fid = st.chunk_map["a|1/f0#0"]
     st.inject_failure(fid)
     before = st.recovery.stats.detections
@@ -28,6 +29,7 @@ def test_detection_on_term_mismatch(tiny_store):
 def test_local_recovery_when_few_chunks(tiny_store):
     st, _ = tiny_store
     st.put("a", b"y" * 10_000)
+    st.flush_writeback()       # drain the buffer: GET must hit the slabs
     fid = st.chunk_map["a|1/f0#1"]
     st.inject_failure(fid)
     st.get("a")
@@ -42,6 +44,7 @@ def test_parallel_recovery_when_many_chunks():
     for i in range(40):
         payloads[f"o{i}"] = rng.bytes(20_000)
         st.put(f"o{i}", payloads[f"o{i}"])
+    st.flush_writeback()       # drain the buffer: GET must hit the slabs
     # every object's chunk 0 lands on slot-0 functions; kill one with many
     fid = st.chunk_map["o0|1/f0#0"]
     n_chunks = len(st.sms.get(fid).storage)
@@ -83,6 +86,7 @@ def test_recovered_data_served_during_recovery():
     rng = np.random.default_rng(1)
     for i in range(30):
         st.put(f"o{i}", rng.bytes(10_000))
+    st.flush_writeback()       # drain the buffer: GET must hit the slabs
     fid = st.chunk_map["o5|1/f0#2"]
     st.inject_failure(fid)
     st.get("o5")

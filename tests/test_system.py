@@ -66,6 +66,7 @@ def test_working_set_capture_and_elastic_shrink():
     st.put("cold", cold)
     for i in range(24):                      # filler seals the early FGs
         st.put(f"fill{i}", rng.bytes(200_000))
+    st.flush_writeback()       # drain the buffer so GETs hit the slabs
     for i in range(6):
         clock.advance(10.0)
         _ = st.get("hot")                    # keep hot in the window
@@ -97,6 +98,7 @@ def test_hit_ratio_accounting():
     rng = np.random.default_rng(3)
     for i in range(5):
         st.put(f"x{i}", rng.bytes(30_000))
+    st.flush_writeback()       # drain the buffer so GETs hit the slabs
     for _ in range(3):
         for i in range(5):
             st.get(f"x{i}")

@@ -1,0 +1,261 @@
+"""Async COS writeback (paper §5.3.2): WritebackQueue unit semantics
+(retry/backoff, flush barriers, pending map) and the store-level
+durability contract — a PUT acks before COS persistence, and an instance
+failure in that window must lose nothing."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.cos import COS
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+from repro.core.writeback import WritebackQueue
+
+MB = 1024 * 1024
+
+
+class FlakyCOS:
+    """COS facade whose put fails the first `fail_first` times."""
+
+    def __init__(self, fail_first: int = 0):
+        self.inner = COS(Clock())
+        self.fail_first = fail_first
+        self.attempts = 0
+
+    def put(self, key, data):
+        self.attempts += 1
+        if self.attempts <= self.fail_first:
+            raise IOError("simulated COS outage")
+        self.inner.put(key, data)
+
+    def get(self, key):
+        return self.inner.get(key)
+
+
+def make_store(**kw):
+    cfg = StoreConfig(ec=ECConfig(k=4, p=2),
+                      function_capacity=8 * MB,
+                      fragment_bytes=1 * MB,
+                      gc=GCConfig(gc_interval=1e9),
+                      num_recovery_functions=4, **kw)
+    return InfiniStore(cfg, clock=Clock())
+
+
+# ---------------------------------------------------------------------------
+# WritebackQueue unit semantics
+# ---------------------------------------------------------------------------
+
+def test_writeback_basic_persist_and_flush():
+    cos = COS(Clock())
+    wb = WritebackQueue(cos)
+    wb.enqueue("a", b"x" * 100)
+    wb.enqueue("b", b"y" * 100)
+    assert wb.flush(timeout=5.0)
+    assert cos.get("a") == b"x" * 100 and cos.get("b") == b"y" * 100
+    assert wb.stats.persisted == 2 and wb.depth == 0
+    assert wb.peek("a") is None                   # pending map drained
+    wb.close()
+
+
+def test_writeback_pending_serves_reads_before_persist():
+    cos = COS(Clock())
+    wb = WritebackQueue(cos, start_thread=False)   # nothing drains yet
+    wb.enqueue("k", b"payload")
+    assert cos.get("k") is None                   # not persisted
+    assert wb.peek("k") == b"payload"             # but readable
+    assert wb.pending_keys() == ["k"]
+    assert wb.drain() == 1                        # gc_tick-style drain
+    assert cos.get("k") == b"payload"
+    assert wb.peek("k") is None
+
+
+def test_writeback_retry_with_backoff():
+    cos = FlakyCOS(fail_first=3)
+    wb = WritebackQueue(cos, max_retries=8, backoff_base_s=0.001)
+    wb.enqueue("k", b"v")
+    assert wb.flush(timeout=10.0)
+    assert cos.get("k") == b"v"
+    assert wb.stats.retries >= 3                  # 3 failed attempts
+    assert wb.stats.persisted == 1
+    assert wb.stats.failures == 0
+    wb.close()
+
+
+def test_writeback_gives_up_after_max_retries():
+    cos = FlakyCOS(fail_first=10 ** 9)            # permanently down
+    wb = WritebackQueue(cos, max_retries=2, backoff_base_s=0.0,
+                        start_thread=False)
+    wb.enqueue("k", b"v")
+    # flush terminates but reports the barrier did NOT fully persist
+    assert wb.flush(timeout=5.0) is False
+    assert wb.stats.failures == 1
+    assert wb.errors() and "k" in wb.errors()[0]
+
+
+def test_writeback_pause_resume():
+    cos = COS(Clock())
+    wb = WritebackQueue(cos)
+    wb.pause()
+    wb.enqueue("k", b"v")
+    time.sleep(0.05)
+    assert cos.get("k") is None and wb.depth == 1
+    assert wb.drain() == 0                        # drain respects pause
+    wb.resume()
+    assert wb.flush(timeout=5.0)
+    assert cos.get("k") == b"v"
+    wb.close()
+
+
+def test_writeback_backpressure_bounded_depth():
+    cos = COS(Clock())
+    wb = WritebackQueue(cos, max_depth=2)
+    wb.pause()
+    wb.enqueue("a", b"1")
+    wb.enqueue("b", b"2")
+    done = threading.Event()
+
+    def third():
+        wb.enqueue("c", b"3")                     # must block: queue full
+        done.set()
+
+    t = threading.Thread(target=third, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    assert not done.is_set()                      # blocked on backpressure
+    wb.resume()
+    assert done.wait(timeout=5.0)
+    assert wb.flush(timeout=5.0)
+    assert cos.get("c") == b"3"
+    wb.close()
+
+
+def test_writeback_newer_write_supersedes_pending():
+    cos = COS(Clock())
+    wb = WritebackQueue(cos, start_thread=False)
+    wb.enqueue("k", b"v1")
+    wb.enqueue("k", b"v2")
+    assert wb.peek("k") == b"v2"                  # latest wins for reads
+    wb.drain()
+    assert cos.get("k") == b"v2"
+    # the stale write was dropped, not persisted-then-overwritten — a
+    # retried old write can never clobber a newer one in COS
+    assert wb.stats.superseded == 1
+    assert wb.stats.persisted == 1
+
+
+# ---------------------------------------------------------------------------
+# store-level durability under async writeback
+# ---------------------------------------------------------------------------
+
+def test_put_acks_before_cos_persistence():
+    st = make_store()
+    st.writeback.pause()                          # hold all chunk writes
+    data = np.random.default_rng(0).bytes(300_000)
+    ver = st.put("obj", data)                     # must ack regardless
+    assert ver == 1
+    assert st.cos.list_keys("chunk/obj") == []    # nothing persisted yet
+    # chunks + insertion-log nodes are queued, none persisted
+    assert st.writeback.depth >= st.cfg.ec.n
+    assert st.get("obj") == data                  # read-your-writes
+    st.writeback.resume()
+    assert st.flush_writeback(timeout=10.0)
+    assert len(st.cos.list_keys("chunk/obj")) == st.cfg.ec.n
+
+
+def test_durability_failure_after_ack_before_persist():
+    """Kill EVERY function after PUT-ack but before any COS persistence:
+    GET must still return the object (persistent buffer + pending map +
+    recovery), the paper's §5.3.2 durability contract."""
+    st = make_store()
+    st.writeback.pause()
+    rng = np.random.default_rng(1)
+    objs = {f"k{i}": rng.bytes(150_000) for i in range(6)}
+    for k, v in objs.items():
+        assert st.put(k, v) == 1
+    assert st.cos.list_keys("chunk/k") == []      # zero chunks persisted
+    for fid in list(st.sms.slabs):
+        st.inject_failure(fid)                    # provider reclaims ALL
+    for k, v in objs.items():
+        assert st.get(k) == v, f"lost {k} before writeback completed"
+    # after the queue drains, the persistent buffer is fully released
+    st.writeback.resume()
+    assert st.flush_writeback(timeout=10.0)
+    assert st.pb.size_bytes == 0
+
+
+def test_recovery_restores_unpersisted_chunks_from_pending():
+    """Parallel recovery must find acked-but-unpersisted chunks in the
+    writeback pending map (COS doesn't have them yet)."""
+    cfg = StoreConfig(ec=ECConfig(k=4, p=2),
+                      function_capacity=64 * MB,
+                      gc=GCConfig(gc_interval=1e9),
+                      num_recovery_functions=2)
+    st = InfiniStore(cfg, clock=Clock())
+    st.writeback.pause()
+    rng = np.random.default_rng(2)
+    payloads = {}
+    for i in range(30):
+        payloads[f"o{i}"] = rng.bytes(20_000)
+        st.put(f"o{i}", payloads[f"o{i}"])
+    fid = st.chunk_map["o0|1/f0#0"]
+    n_chunks = len(st.sms.get(fid).storage)
+    assert n_chunks > st.cfg.num_recovery_functions
+    st.inject_failure(fid)
+    # drop o0's buffer entry so the GET takes the chunk-gather path and
+    # the invoke-time failure detection fires (otherwise the persistent
+    # buffer would serve the read without touching the failed function)
+    st.pb.release_all("o0|1/f0")
+    assert st.get("o0") == payloads["o0"]
+    assert st.recovery.stats.parallel_recoveries >= 1
+    # full restoration happened even though COS had nothing
+    assert len(st.sms.get(fid).storage) == n_chunks
+
+
+def test_persistent_buffer_drains_as_chunks_persist():
+    st = make_store()
+    st.writeback.pause()
+    st.put("x", b"q" * 200_000)
+    assert st.pb.size_bytes > 0                   # held while unpersisted
+    st.writeback.resume()
+    assert st.flush_writeback(timeout=10.0)
+    assert st.pb.size_bytes == 0                  # refs drained
+    # and the object now survives total reclamation via COS alone
+    for fid in list(st.sms.slabs):
+        st.inject_failure(fid)
+    assert st.get("x") == b"q" * 200_000
+
+
+def test_sync_mode_persists_inline():
+    st = make_store(async_writeback=False)
+    st.put("x", b"v" * 100_000)
+    assert len(st.cos.list_keys("chunk/x")) == st.cfg.ec.n
+    assert st.writeback.depth == 0
+    assert st.pb.size_bytes == 0
+    assert st.get("x") == b"v" * 100_000
+
+
+def test_store_close_releases_threads():
+    st = make_store()
+    st.put("x", b"d" * 50_000)
+    st.close()
+    assert st.writeback.depth == 0                # flushed on close
+    assert len(st.cos.list_keys("chunk/x")) == st.cfg.ec.n
+
+
+def test_gc_tick_drains_writeback():
+    st = make_store()
+    # no writer-thread race: pause, then drain exclusively via gc_tick
+    st.writeback.pause()
+    st.put("x", b"d" * 120_000)
+    assert st.cos.list_keys("chunk/x") == []
+    st.writeback.resume()
+    # resume alone lets the thread race gc_tick; drain() is what gc_tick
+    # calls — exercise it directly through the public tick
+    deadline = time.monotonic() + 5.0
+    while len(st.cos.list_keys("chunk/x")) < st.cfg.ec.n:
+        st.gc_tick()
+        if time.monotonic() > deadline:
+            pytest.fail("gc_tick never drained the writeback queue")
