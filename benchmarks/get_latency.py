@@ -1,0 +1,252 @@
+"""GET latency benchmark: serial vs pipelined read path (§5.3.3).
+
+Three scenarios per object size, each measured with the legacy serial
+path (`StoreConfig(pipelined_get=False)`: gather-everything barrier,
+one-chunk-at-a-time COS fallback, inline compaction migration) and the
+pipelined path (grouped SMS sweep, bounded-concurrency COS fan-out,
+ready-order decode, gc_tick migration):
+
+- **warm**: every chunk SMS-resident in an ACTIVE bucket (pure in-memory
+  gather + decode; the two paths should be near parity).
+- **aged**: chunks SMS-resident but their bucket aged to DEGRADED — the
+  serial path migrates every hit chunk inline (COS reads ON the read
+  path); the pipelined path defers the round to gc_tick.
+- **degraded**: every slab reclaimed (recovery off), so all chunks come
+  from COS — the serial consistency loop vs the parallel fan-out.
+
+Plus a sequential-scan pass (ordered `.../sN` keys over a degraded
+store) with the prefetcher on vs off, reporting warm-chunk hit/waste
+accounting.
+
+COS GET latency is modelled S3-like (first-byte base + per-connection
+bandwidth, wall-clock sleeps outside the COS lock) so overlap is
+physically possible; the store runs on a logical clock.
+
+Full runs write ``BENCH_get.json`` at the repo root; ``--smoke`` writes
+``BENCH_get_smoke.json`` so CI never clobbers the trajectory.
+
+Usage: PYTHONPATH=src python benchmarks/get_latency.py [--smoke] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                      # direct-script invocation
+    _HERE = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, os.path.join(_HERE, ".."))
+    sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+
+import numpy as np
+
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+
+MB = 1024 * 1024
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+# S3-like COS GET model: ~10 ms first-byte + ~90 MB/s per connection
+COS_GET_BASE_S = 0.010
+COS_GET_PER_BYTE_S = 1.0 / (90 * MB)
+
+
+def make_store(*, pipelined: bool, prefetch: bool = True,
+               io_workers: int = 8) -> InfiniStore:
+    cfg = StoreConfig(
+        ec=ECConfig(k=10, p=2),
+        function_capacity=512 * MB,
+        fragment_bytes=64 * MB,
+        gc=GCConfig(gc_interval=30.0, active_intervals=2,
+                    degraded_intervals=12),
+        num_recovery_functions=4,
+        enable_recovery=False,       # reclaimed slabs = pure COS fallback
+        pipelined_get=pipelined,
+        prefetch=prefetch,
+        get_io_workers=io_workers,
+        writeback_depth=4096,
+    )
+    st = InfiniStore(cfg, clock=Clock())
+    st.cos.get_delay_base_s = COS_GET_BASE_S
+    st.cos.get_delay_per_byte_s = COS_GET_PER_BYTE_S
+    return st
+
+
+def _put_objects(st: InfiniStore, size: int, count: int, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    objs = {f"obj{i}": rng.bytes(size) for i in range(count)}
+    for k, v in objs.items():
+        st.put(k, v)
+    assert st.flush_writeback(timeout=600.0)
+    return objs
+
+
+def _age_to_degraded(st: InfiniStore) -> None:
+    """Seal the data-holding FGs, open a fresh one, age the sealed bucket
+    to DEGRADED (open FGs carry over and stay ACTIVE)."""
+    for fg_id in list(st.placement.open_fg_ids):
+        st.placement.seal_fg(fg_id)
+    st.put("opener", b"x" * 1024)
+    assert st.flush_writeback(timeout=600.0)
+    for _ in range(3):
+        st.clock.advance(30.0)
+        st.gc_tick()
+
+
+def _timed_gets(st: InfiniStore, objs: dict) -> list:
+    lats = []
+    for k, v in objs.items():
+        t0 = time.perf_counter()
+        got = st.get(k)
+        lats.append(time.perf_counter() - t0)
+        assert got == v
+    return lats
+
+
+def bench_point(size: int, repeats: int) -> dict:
+    out = {"object_mb": size / MB}
+    for mode in ("serial", "pipelined"):
+        pipelined = mode == "pipelined"
+        # warm: ACTIVE-bucket SMS hits
+        st = make_store(pipelined=pipelined)
+        objs = _put_objects(st, size, repeats, seed=size)
+        # warm reads are sub-ms at 1 MB, so min over enough rounds that
+        # cross-thread wakeup jitter doesn't dominate the number
+        rounds = 3 if size >= 100 * MB else 12
+        lats = []
+        for _ in range(rounds):
+            lats += _timed_gets(st, objs)
+        out[f"{mode}_warm_ms"] = round(min(lats) * 1e3, 2)
+        st.close()
+        # aged: DEGRADED-bucket SMS hits (serial pays inline migration)
+        st = make_store(pipelined=pipelined)
+        objs = _put_objects(st, size, repeats, seed=size + 1)
+        _age_to_degraded(st)
+        lats = _timed_gets(st, objs)
+        out[f"{mode}_aged_ms"] = round(min(lats) * 1e3, 2)
+        st.close()
+        # degraded: slabs reclaimed, every chunk demand-read from COS
+        st = make_store(pipelined=pipelined)
+        objs = _put_objects(st, size, repeats, seed=size + 2)
+        for fid in list(st.sms.slabs):
+            st.inject_failure(fid)
+        lats = _timed_gets(st, objs)
+        out[f"{mode}_degraded_ms"] = round(min(lats) * 1e3, 2)
+        if pipelined:
+            out["cos_fallback_reads"] = st.stats.cos_fallback_reads
+            out["decode_batches"] = st.stats.decode_batches
+        st.close()
+    for scen in ("warm", "aged", "degraded"):
+        out[f"{scen}_speedup"] = round(
+            out[f"serial_{scen}_ms"] / max(out[f"pipelined_{scen}_ms"], 1e-9),
+            2)
+    return out
+
+
+def bench_scan(size: int, count: int) -> dict:
+    """Ordered degraded scan (checkpoint-restore shape): prefetch off vs
+    on, both on the pipelined path. The executor gets headroom beyond
+    one object's demand fan-out (16 workers vs k=10 chunks) so warm
+    fetches for the next objects can run during the inter-GET gaps."""
+    out = {"object_mb": size / MB, "objects": count}
+    for tag, prefetch in (("noprefetch", False), ("prefetch", True)):
+        st = make_store(pipelined=True, prefetch=prefetch, io_workers=16)
+        rng = np.random.default_rng(77)
+        objs = {f"scan/s{i}": rng.bytes(size) for i in range(count)}
+        st.put_many(objs)
+        assert st.flush_writeback(timeout=600.0)
+        for fid in list(st.sms.slabs):
+            st.inject_failure(fid)
+        t0 = time.perf_counter()
+        for k, v in objs.items():        # one GET at a time, in order
+            assert st.get(k) == v
+        out[f"scan_{tag}_ms"] = round((time.perf_counter() - t0) * 1e3, 2)
+        if prefetch:
+            out["prefetch_hits"] = st.stats.prefetch_hits
+            out["prefetch_wasted"] = st.stats.prefetch_wasted
+            out["prefetch"] = st.prefetcher.snapshot()
+        st.close()
+    out["scan_speedup"] = round(
+        out["scan_noprefetch_ms"] / max(out["scan_prefetch_ms"], 1e-9), 2)
+    return out
+
+
+def run_bench(smoke: bool) -> dict:
+    if smoke:
+        points = [bench_point(1 * MB, repeats=2)]
+        scan = bench_scan(1 * MB, count=6)
+    else:
+        points = [bench_point(1 * MB, repeats=3),
+                  bench_point(10 * MB, repeats=2),
+                  bench_point(100 * MB, repeats=2)]
+        scan = bench_scan(2 * MB, count=8)
+    return {"bench": "get_latency", "smoke": smoke,
+            "ec": {"k": 10, "p": 2},
+            "cos_model": {"get_base_s": COS_GET_BASE_S,
+                          "get_MBps": round(1.0 / COS_GET_PER_BYTE_S / MB)},
+            "points": points, "scan": scan}
+
+
+def _default_out(smoke: bool) -> str:
+    name = "BENCH_get_smoke.json" if smoke else "BENCH_get.json"
+    return os.path.join(ROOT, name)
+
+
+def _write(result: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+
+
+def run() -> list:
+    """benchmarks.run entry point (smoke sizes, CSV rows)."""
+    result = run_bench(smoke=True)
+    _write(result, _default_out(smoke=True))
+    rows = []
+    for pt in result["points"]:
+        tag = f"{pt['object_mb']:g}MB"
+        rows.append(
+            f"get_degraded_pipe_{tag},{pt['pipelined_degraded_ms'] * 1e3:.2f},"
+            f"ms*1e-3 speedup={pt['degraded_speedup']}x vs serial")
+        rows.append(
+            f"get_aged_pipe_{tag},{pt['pipelined_aged_ms'] * 1e3:.2f},"
+            f"ms*1e-3 speedup={pt['aged_speedup']}x vs serial")
+    sc = result["scan"]
+    rows.append(f"get_scan_prefetch,{sc['scan_prefetch_ms'] * 1e3:.2f},"
+                f"ms*1e-3 speedup={sc['scan_speedup']}x "
+                f"hits={sc['prefetch_hits']}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 MB point only (CI sanity); writes "
+                         "BENCH_get_smoke.json unless --out is given")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    result = run_bench(args.smoke)
+    out = args.out or _default_out(args.smoke)
+    _write(result, out)
+    for pt in result["points"]:
+        print(f"{pt['object_mb']:>6g} MB | warm "
+              f"{pt['serial_warm_ms']:>8.2f} -> {pt['pipelined_warm_ms']:>8.2f} ms "
+              f"({pt['warm_speedup']}x) | aged "
+              f"{pt['serial_aged_ms']:>8.2f} -> {pt['pipelined_aged_ms']:>8.2f} ms "
+              f"({pt['aged_speedup']}x) | degraded "
+              f"{pt['serial_degraded_ms']:>9.2f} -> "
+              f"{pt['pipelined_degraded_ms']:>8.2f} ms "
+              f"({pt['degraded_speedup']}x)")
+    sc = result["scan"]
+    print(f"scan {sc['objects']}x{sc['object_mb']:g} MB | "
+          f"{sc['scan_noprefetch_ms']:.2f} -> {sc['scan_prefetch_ms']:.2f} ms "
+          f"({sc['scan_speedup']}x) | prefetch hits {sc['prefetch_hits']} "
+          f"wasted {sc['prefetch_wasted']}")
+    print(f"wrote {os.path.relpath(out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,8 @@ MODULES = [
     ("ec_path", "EC encode/decode throughput (writes BENCH_ec.json)"),
     ("put_latency", "sync vs async PUT ack latency "
                     "(writes BENCH_put_async.json)"),
+    ("get_latency", "serial vs pipelined GET latency "
+                    "(writes BENCH_get.json)"),
     ("kernels", "kernel microbenchmarks"),
     ("roofline", "§Roofline summary (reads experiments/dryrun.jsonl)"),
 ]

@@ -13,3 +13,5 @@ python -m pytest -x -q
 python benchmarks/ec_path.py --smoke
 # async PUT path exercised end-to-end (1 MB point, sync-vs-async ack)
 python benchmarks/put_latency.py --smoke
+# pipelined GET path end-to-end (warm/aged/degraded + prefetch scan)
+python benchmarks/get_latency.py --smoke

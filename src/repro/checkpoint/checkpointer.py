@@ -157,12 +157,22 @@ class Checkpointer:
         # one unbounded get would hold ~3-4x the checkpoint in host RAM.
         # get_many_arrays returns flat uint8 views — leaves rebuild via
         # dtype/shape views, never through an intermediate bytes object.
+        # Batches ride async futures with at most max_inflight_batches
+        # outstanding, so batch i+1 queues on the client daemon while
+        # batch i decodes — and the ordered .../sN shard keys let the
+        # store's sequential-scan prefetcher warm the next shards' chunks
+        # from COS during that decode (the degraded-restore fast path).
         limit = max(4 * self.cfg.leaf_shard_bytes, 64 * 1024 * 1024)
         per_batch = max(1, limit // self.cfg.leaf_shard_bytes)
         shards: Dict[str, Optional[np.ndarray]] = {}
+        inflight: List[Any] = []
         for i in range(0, len(shard_keys), per_batch):
-            shards.update(self.store.get_many_arrays(
+            inflight.append(self.store.get_many_arrays_async(
                 shard_keys[i:i + per_batch]))
+            while len(inflight) >= self.cfg.max_inflight_batches:
+                shards.update(inflight.pop(0).result())
+        for fut in inflight:
+            shards.update(fut.result())
         leaves: Dict[str, np.ndarray] = {}
         for entry in manifest["leaves"]:
             parts = []

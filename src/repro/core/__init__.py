@@ -14,6 +14,8 @@ from repro.core.insertion_log import InsertionLog, PutRecord  # noqa: F401
 from repro.core.payload import (Payload, as_u8,  # noqa: F401
                                 payload_nbytes, to_bytes)
 from repro.core.placement import PlacementManager  # noqa: F401
+from repro.core.prefetch import (PrefetchConfig,  # noqa: F401
+                                 SequentialPrefetcher)
 from repro.core.recovery import RecoveryManager  # noqa: F401
 from repro.core.sms import SMS, Slab  # noqa: F401
 from repro.core.store import (ConcurrentPutError, InfiniStore,  # noqa: F401

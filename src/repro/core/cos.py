@@ -18,7 +18,12 @@ writeback path); the mem backend stores whatever it is handed.
 
 `put_delay_base_s` / `put_delay_per_byte_s` optionally model real
 object-store PUT latency (S3-like: ~tens of ms + bandwidth) for
-benchmarks that compare sync-ack vs async-writeback PUT paths.
+benchmarks that compare sync-ack vs async-writeback PUT paths;
+`get_delay_base_s` / `get_delay_per_byte_s` are the GET-side mirror
+(first-byte latency + per-connection bandwidth) for benchmarks that
+compare serial vs fanned-out demand reads. The sleeps happen outside
+the metadata lock, so concurrent GETs overlap — exactly the property
+the pipelined read path exploits.
 """
 from __future__ import annotations
 
@@ -53,7 +58,9 @@ class COS:
     def __init__(self, clock: Clock, *, visibility_lag: float = 0.0,
                  root: Optional[str] = None, workers: int = 8,
                  put_delay_base_s: float = 0.0,
-                 put_delay_per_byte_s: float = 0.0):
+                 put_delay_per_byte_s: float = 0.0,
+                 get_delay_base_s: float = 0.0,
+                 get_delay_per_byte_s: float = 0.0):
         self.clock = clock
         self.visibility_lag = visibility_lag
         self.root = Path(root) if root else None
@@ -65,6 +72,8 @@ class COS:
         self.stats = COSStats()
         self.put_delay_base_s = put_delay_base_s
         self.put_delay_per_byte_s = put_delay_per_byte_s
+        self.get_delay_base_s = get_delay_base_s
+        self.get_delay_per_byte_s = get_delay_per_byte_s
         self._pool = ThreadPoolExecutor(max_workers=workers,
                                         thread_name_prefix="cos")
 
@@ -95,6 +104,8 @@ class COS:
             self._visible_at[key] = self.clock.now() + self.visibility_lag
 
     def get(self, key: str):
+        if self.get_delay_base_s:
+            time.sleep(self.get_delay_base_s)     # first-byte latency
         with self._lock:
             self.stats.gets += 1
             vis = self._visible_at.get(key)
@@ -113,6 +124,8 @@ class COS:
             with self._lock:
                 self.stats.get_misses += 1
             return None
+        if self.get_delay_per_byte_s:             # per-connection bandwidth
+            time.sleep(payload_nbytes(data) * self.get_delay_per_byte_s)
         with self._lock:
             self.stats.bytes_out += payload_nbytes(data)
         return data
@@ -149,6 +162,11 @@ class COS:
 
     def put_async(self, key: str, data) -> Future:
         return self._pool.submit(self.put, key, data)
+
+    def get_async(self, key: str) -> Future:
+        """Fan-out read on the COS worker pool (batched page restore /
+        demand-read callers)."""
+        return self._pool.submit(self.get, key)
 
     def shutdown(self) -> None:
         self._pool.shutdown(wait=True)

@@ -167,6 +167,22 @@ class PlacementManager:
             else:
                 return functions[func_ptr]
 
+    def try_place_chunk(self, chunk_id: int, nbytes: int) -> Optional[int]:
+        """`place_chunk` without the auto-scale: probes only EXISTING
+        open functions and returns None when none accepts. Compaction
+        and cache-space callers use this — re-placed read-path bytes
+        must never spin up a new function group."""
+        if not 0 <= chunk_id < self.fg_size:
+            raise ValueError(f"chunk_id {chunk_id} not in [0,{self.fg_size})")
+        functions = self._open_functions()
+        func_ptr = chunk_id
+        while func_ptr < len(functions):
+            self.stats.probes += 1
+            if self.test_and_place(functions[func_ptr], nbytes):
+                return functions[func_ptr]
+            func_ptr += self.fg_size            # next FG, same slot
+        return None
+
     def release(self, fid: int, nbytes: int) -> None:
         f = self.functions.get(fid)
         if f is not None:

@@ -25,6 +25,18 @@ device-backed `jax.Array`s are fragmented as flat uint8 views and reach
 the bit-sliced GF(256) kernel without an intermediate `bytes` copy;
 `get_array` / `get_many_arrays` return uint8 arrays the same way.
 
+GET is a pipeline (§5.3.3 + readahead): one grouped SMS sweep per batch
+(at most one invoke per function), then every still-short fragment's
+missing chunks fan out to COS concurrently on a bounded I/O executor
+while fragments decode in ready-order `decode_many` batches — decode of
+fragment A overlaps the gather of fragment B. Degraded-bucket compaction
+migrates from `gc_tick`, off the read critical path. A sequential-scan
+prefetcher (`repro.core.prefetch`) watches the object-key stream and
+warms the predicted next objects' chunks into bucket cache space during
+decode (checkpoint shard restore and KV page restore both scan ordered
+trailing-index keys). `StoreConfig(pipelined_get=False)` restores the
+legacy serial gather -> barrier -> decode path for A/B comparison.
+
 Also wired through: CAS versioning with multi-key batch commit (one
 leader-sequenced metadata round per `put_many`), RS erasure coding,
 PlaceChunk over the sliding-window GC-buckets, insertion logs, failure
@@ -36,7 +48,9 @@ accounting.
 from __future__ import annotations
 
 import threading
-from concurrent.futures import ThreadPoolExecutor
+import time
+from concurrent.futures import (FIRST_COMPLETED, Future,
+                                ThreadPoolExecutor, wait)
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -51,6 +65,7 @@ from repro.core.insertion_log import InsertionLog, Piggyback, PutRecord
 from repro.core.payload import (as_u8, is_array_payload, needs_snapshot,
                                 payload_nbytes, to_bytes)
 from repro.core.placement import PlacementManager
+from repro.core.prefetch import PrefetchConfig, SequentialPrefetcher
 from repro.core.recovery import RecoveryManager
 from repro.core.sms import SMS
 from repro.core.versioning import MetadataTable, PersistentBuffer
@@ -83,6 +98,21 @@ class StoreConfig:
     writeback_depth: int = 512         # queue bound (backpressure)
     writeback_retries: int = 8
     writeback_backoff_s: float = 0.005
+    # ---- pipelined GET (§5.3.3 + readahead) ----------------------------
+    # True: grouped SMS reads, then COS demand reads fan out concurrently
+    # on a bounded I/O executor while fragments decode in ready-order
+    # batches; compaction migration drains from gc_tick. False: the
+    # legacy serial gather -> barrier -> decode path (A/B baseline).
+    pipelined_get: bool = True
+    get_io_workers: int = 8            # COS fallback / prefetch fan-out
+    decode_batch_fragments: int = 4    # fragments per ready-order decode
+    # sequential-scan readahead: after `prefetch_min_run` consecutive
+    # trailing-index keys, the next `prefetch_depth` objects' missing
+    # chunks are warmed into bucket cache space during decode
+    prefetch: bool = True
+    prefetch_min_run: int = 3
+    prefetch_depth: int = 2
+    prefetch_max_inflight: int = 64    # warm fetches in flight at once
 
 
 @dataclass
@@ -100,6 +130,10 @@ class StoreStats:
     cas_rounds: int = 0            # multi-key CAS: metadata rounds issued
     gather_invokes: int = 0        # GET-side grouped per-function invokes
     array_payload_puts: int = 0    # PUTs that arrived as array payloads
+    prefetch_hits: int = 0         # warmed chunks consumed by a GET
+    prefetch_wasted: int = 0       # warmed chunks dropped unconsumed
+    cos_fallback_reads: int = 0    # demand chunk reads sent to COS
+    decode_batches: int = 0        # ready-order decode_many calls
 
     @property
     def hit_ratio(self) -> float:
@@ -153,6 +187,22 @@ class InfiniStore:
         self._exec = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="store-client",
             initializer=self._register_daemon)
+        # GET-side I/O executor: COS demand reads + prefetch warms fan
+        # out here while the daemon thread decodes (the workers only
+        # touch thread-safe layers: writeback.peek / cos.get / clock)
+        self._io = ThreadPoolExecutor(
+            max_workers=max(1, cfg.get_io_workers),
+            thread_name_prefix="store-io")
+        self.prefetcher = SequentialPrefetcher(PrefetchConfig(
+            enabled=cfg.prefetch and cfg.pipelined_get,
+            min_run=cfg.prefetch_min_run, depth=cfg.prefetch_depth))
+        # warm fetches in flight: chunk key -> Future (daemon thread only)
+        self._prefetch_inflight: Dict[str, Future] = {}
+        # degraded-read compaction candidates deferred off the GET
+        # critical path; drained by gc_tick on the daemon thread. An
+        # insertion-ordered de-dup set: bounded by the number of distinct
+        # degraded chunks, not the read rate
+        self._pending_migrations: Dict[str, None] = {}
 
     # ------------------------------------------------------------------
     # async plumbing
@@ -192,6 +242,7 @@ class InfiniStore:
         stop the writeback writer. Returns False if writes were left
         unpersisted. The store must not be used afterwards."""
         self._exec.shutdown(wait=True)
+        self._io.shutdown(wait=True)
         ok = self.writeback.close(flush=flush)
         self.cos.shutdown()
         return ok
@@ -568,10 +619,17 @@ class InfiniStore:
             lambda: self._get_many_impl(keys, as_arrays=True))
 
     def _get_many_impl(self, keys, *, as_arrays: bool = False) -> Dict:
-        out: Dict = {}
+        if self.cfg.pipelined_get:
+            return self._get_many_pipelined(keys, as_arrays=as_arrays)
+        return self._get_many_serial(keys, as_arrays=as_arrays)
+
+    def _plan_gets(self, keys, out: Dict):
+        """Shared GET planning: resolve metadata, serve read-after-write
+        fragments from the persistent buffer, and list the fragment keys
+        that need a chunk gather."""
         plans: List[Tuple[str, object, List[object]]] = []
         gather_fkeys: List[str] = []
-        for key in dict.fromkeys(keys):    # dedup, keep first-seen order
+        for key in keys:
             self.stats.gets += 1
             m = self._resolve_meta(key)
             if m is None:
@@ -588,6 +646,14 @@ class InfiniStore:
                     parts.append(fkey)
                     gather_fkeys.append(fkey)
             plans.append((key, m, parts))
+        return plans, gather_fkeys
+
+    def _get_many_serial(self, keys, *, as_arrays: bool = False) -> Dict:
+        """The legacy GET path (pipelined_get=False, the A/B baseline):
+        gather EVERY fragment's chunks — COS fallbacks one chunk at a
+        time — then decode everything behind one global barrier."""
+        out: Dict = {}
+        plans, gather_fkeys = self._plan_gets(dict.fromkeys(keys), out)
         gathered = self._gather_many(gather_fkeys) if gather_fkeys else {}
         batch: List[Dict[int, object]] = []
         final: List[Tuple[str, object, List[object]]] = []
@@ -616,6 +682,180 @@ class InfiniStore:
             val = self._assemble(pieces, m.size, as_arrays)
             self._track_queue(payload_nbytes(val))
             out[key] = val
+        return out
+
+    def _get_many_pipelined(self, keys, *, as_arrays: bool = False) -> Dict:
+        """The pipelined GET data path: (1) plan + buffer hits, (2) one
+        grouped SMS sweep (at most one invoke per function), (3) every
+        still-short fragment's missing chunks fan out to COS on the
+        bounded I/O executor AT ONCE, (4) fragments decode in ready-order
+        batches while those reads are in flight — decode of fragment A
+        overlaps the gather of fragment B instead of a global barrier.
+        The sequential-scan prefetcher warms the predicted next objects'
+        chunks on the same executor during decode."""
+        self._harvest_prefetch()
+        out: Dict = {}
+        ordered = list(dict.fromkeys(keys))
+        plans, gather_fkeys = self._plan_gets(ordered, out)
+        if gather_fkeys:
+            # readahead is issued inside the gather, AFTER this batch's
+            # own demand reads hit the FIFO executor — warms overlap the
+            # decode without ever delaying the critical path
+            frags = self._gather_decode_pipelined(
+                gather_fkeys, as_arrays, prefetch_keys=ordered)
+        else:
+            frags = {}
+            self._maybe_prefetch(ordered)
+        for key, m, parts in plans:
+            pieces: Optional[List[object]] = []
+            for p in parts:
+                if isinstance(p, str):
+                    p = frags.get(p)
+                    if p is None:                    # fragment lost
+                        pieces = None
+                        break
+                pieces.append(p)
+            if pieces is None:
+                out[key] = None
+                continue
+            val = self._assemble(pieces, m.size, as_arrays)
+            self._track_queue(payload_nbytes(val))
+            out[key] = val
+        self._sync_prefetch_stats()
+        return out
+
+    def _sms_sweep(self, fkeys: Sequence[str],
+                   have: Dict[str, Dict[int, object]],
+                   degraded_out: List[str]) -> None:
+        """The grouped SMS sweep shared by both GET paths: round 0 reads
+        the first k mapped chunks per fragment (EC needs only k); round 1
+        widens to the remaining mapped chunks for fragments a failed read
+        left short. Each round groups reads by function — at most ONE
+        invoke per function across the whole sweep."""
+        n, k = self.cfg.ec.n, self.cfg.ec.k
+        candidates: Dict[str, List[Tuple[int, str, int]]] = {}
+        for fkey in fkeys:
+            cand = []
+            for idx in range(n):
+                ckey = f"{fkey}#{idx}"
+                fid = self.chunk_map.get(ckey)
+                if fid is not None:
+                    cand.append((idx, ckey, fid))
+            candidates[fkey] = cand
+        tried: Set[Tuple[str, int]] = set()
+        invoked: Set[int] = set()
+        for rnd in (0, 1):
+            groups: Dict[int, List[Tuple[str, int, str]]] = {}
+            for fkey, cand in candidates.items():
+                if len(have[fkey]) >= k:
+                    continue
+                sel = cand[:k] if rnd == 0 else cand
+                for idx, ckey, fid in sel:
+                    if (fkey, idx) in tried or idx in have[fkey]:
+                        continue
+                    tried.add((fkey, idx))
+                    groups.setdefault(fid, []).append((fkey, idx, ckey))
+            for fid, group in groups.items():
+                for fkey, idx, data in self._read_chunks_grouped(
+                        fid, group, degraded_out, invoked):
+                    have[fkey][idx] = data
+
+    def _gather_decode_pipelined(self, fkeys: Sequence[str],
+                                 as_arrays: bool, *,
+                                 prefetch_keys: Optional[Sequence[str]]
+                                 = None) -> Dict[str, Optional[object]]:
+        """fkey -> reconstructed fragment payload (None = unrecoverable).
+
+        Degraded-bucket hits are queued for gc_tick's compaction round
+        instead of migrating inline — the read path never blocks on
+        maintenance COS I/O. Demand reads reuse in-flight prefetch
+        futures rather than duplicating the fetch."""
+        n, k = self.cfg.ec.n, self.cfg.ec.k
+        fkeys = list(dict.fromkeys(fkeys))
+        have: Dict[str, Dict[int, object]] = {f: {} for f in fkeys}
+        degraded: List[str] = []
+        self._sms_sweep(fkeys, have, degraded)
+        if degraded:
+            self._pending_migrations.update(dict.fromkeys(degraded))
+        # stage 2: every short fragment's demand reads fan out at once
+        # (bounded by the executor's get_io_workers), all fragments
+        # concurrently. Within a fragment the reads go data-row-first:
+        # exactly k-|got| missing chunks in index order, so a fully-lost
+        # fragment reconstructs via the identity fast path (concat, no
+        # GF(256) matmul); the remaining indices (usually parity) stay in
+        # reserve and refill one-for-one when a read comes back empty.
+        futs: Dict[Future, Tuple[str, int, str]] = {}
+        frag_pending: Dict[str, Set[Future]] = {}
+        reserve: Dict[str, List[int]] = {}
+
+        def submit(fkey: str, idx: int) -> None:
+            ckey = f"{fkey}#{idx}"
+            fut = self._prefetch_inflight.pop(ckey, None)
+            if fut is None:
+                # no readahead in flight for this chunk — issue the read.
+                # Adopted warms are counted as hits only when their data
+                # actually arrives (stage 3), never at adoption time
+                self.stats.cos_fallback_reads += 1
+                fut = self._io.submit(self._cos_fetch_task,
+                                      f"chunk/{ckey}")
+            futs[fut] = (fkey, idx, ckey)
+            frag_pending.setdefault(fkey, set()).add(fut)
+
+        for fkey in fkeys:
+            got = have[fkey]
+            if len(got) >= k:
+                continue
+            missing = [idx for idx in range(n) if idx not in got]
+            short = k - len(got)
+            reserve[fkey] = missing[short:]
+            for idx in missing[:short]:
+                submit(fkey, idx)
+        if prefetch_keys is not None:
+            # readahead enqueues BEHIND this batch's demand reads (FIFO
+            # executor): warms fill idle workers during the decode below
+            # without ever delaying the critical path
+            self._maybe_prefetch(prefetch_keys)
+        # stage 3: ready-order decode overlapping the in-flight reads
+        out: Dict[str, Optional[object]] = {}
+        batch_size = max(1, self.cfg.decode_batch_fragments)
+        queue: List[str] = [f for f in fkeys if len(have[f]) >= k]
+        settled: Set[str] = set(queue)
+        while queue or futs:
+            if queue:
+                batch, queue = queue[:batch_size], queue[batch_size:]
+                vals = self.codec.decode_many([have[f] for f in batch],
+                                              as_arrays=as_arrays)
+                self.stats.decode_batches += 1
+                out.update(zip(batch, vals))
+                continue
+            ready, _ = wait(list(futs), return_when=FIRST_COMPLETED)
+            for fut in ready:
+                fkey, idx, ckey = futs.pop(fut)
+                frag_pending[fkey].discard(fut)
+                try:
+                    data = fut.result()
+                except Exception:                     # noqa: BLE001
+                    data = None
+                if data is None:
+                    # a failed adopted warm counts as waste, not a hit
+                    self.prefetcher.discard(ckey)
+                    if fkey not in settled and reserve.get(fkey):
+                        submit(fkey, reserve[fkey].pop(0))
+                else:
+                    self.prefetcher.consume(ckey)     # adopted warm: hit
+                    # §5.3.3 on-demand migration: cache the chunk even if
+                    # its fragment already decoded — the next GET hits SMS
+                    self._demand_cache(ckey, data)
+                    if fkey not in settled:
+                        have[fkey][idx] = data
+                        if len(have[fkey]) >= k:
+                            settled.add(fkey)
+                            queue.append(fkey)
+                if fkey not in settled and not frag_pending[fkey]:
+                    settled.add(fkey)                 # short for good
+                    out[fkey] = None
+        for fkey in fkeys:
+            out.setdefault(fkey, None)
         return out
 
     @staticmethod
@@ -658,45 +898,15 @@ class InfiniStore:
                      ) -> Dict[str, Optional[Dict[int, object]]]:
         """Gather >= k chunks for every fragment, issuing AT MOST ONE
         invoke per function across the whole gather (the GET-side mirror
-        of the PUT-side per-function grouping)."""
+        of the PUT-side per-function grouping). The legacy serial path:
+        degraded hits migrate inline, COS fallbacks run one chunk at a
+        time."""
         n, k = self.cfg.ec.n, self.cfg.ec.k
         have: Dict[str, Dict[int, object]] = {f: {} for f in fkeys}
-        candidates: Dict[str, List[Tuple[int, str, int]]] = {}
-        for fkey in fkeys:
-            cand = []
-            for idx in range(n):
-                ckey = f"{fkey}#{idx}"
-                fid = self.chunk_map.get(ckey)
-                if fid is not None:
-                    cand.append((idx, ckey, fid))
-            candidates[fkey] = cand
-        # round 0 reads the first k mapped chunks per fragment (EC needs
-        # only k); round 1 widens to the remaining mapped chunks for
-        # fragments a failed read left short. Each round groups reads by
-        # function: one invoke covers every chunk the function serves.
-        tried: Set[Tuple[str, int]] = set()
-        invoked: Set[int] = set()
-        for rnd in (0, 1):
-            groups: Dict[int, List[Tuple[str, int, str]]] = {}
-            for fkey, cand in candidates.items():
-                short = k - len(have[fkey])
-                if short <= 0:
-                    continue
-                sel = cand[:k] if rnd == 0 else cand
-                for idx, ckey, fid in sel:
-                    if (fkey, idx) in tried or idx in have[fkey]:
-                        continue
-                    tried.add((fkey, idx))
-                    groups.setdefault(fid, []).append((fkey, idx, ckey))
-            if not groups:
-                continue
-            degraded: List[str] = []
-            for fid, group in groups.items():
-                for fkey, idx, data in self._read_chunks_grouped(
-                        fid, group, degraded, invoked):
-                    have[fkey][idx] = data
-            if degraded:
-                self._migrate_chunks(degraded)        # sync migration
+        degraded: List[str] = []
+        self._sms_sweep(fkeys, have, degraded)
+        if degraded:
+            self._migrate_chunks(degraded)            # sync migration
         out: Dict[str, Optional[Dict[int, object]]] = {}
         for fkey, got in have.items():
             if len(got) < k:
@@ -706,6 +916,7 @@ class InfiniStore:
                     if idx in got:
                         continue
                     ckey = f"{fkey}#{idx}"
+                    self.stats.cos_fallback_reads += 1
                     data = self._cos_read_consistent(f"chunk/{ckey}")
                     if data is not None:
                         got[idx] = data
@@ -743,6 +954,7 @@ class InfiniStore:
                 self.stats.sms_chunk_misses += 1
                 continue
             self.stats.sms_chunk_hits += 1
+            self.prefetcher.consume(ckey)
             nbytes += len(data)
             # mark re-accessed data for compaction (§5.3.3)
             self.window.mark(ckey)
@@ -757,33 +969,149 @@ class InfiniStore:
 
     def _cos_read_consistent(self, key: str, max_tries: int = 16):
         """SCFS-style consistency-increasing loop: retry until the
-        eventually-consistent COS shows the object (Appendix A). Writes
-        still queued for persistence are served from the writeback
-        pending map — they're not in COS yet by construction."""
-        for _ in range(max_tries):
+        eventually-consistent COS shows the object (Appendix A), with
+        capped exponential backoff derived from the configured
+        `cos_visibility_lag`. Writes still queued for persistence are
+        served from the writeback pending map — they're not in COS yet
+        by construction. Thread-safe: runs on the daemon thread (legacy
+        path) or the GET I/O executor (pipelined fan-out); the ledger is
+        charged under the store lock."""
+        base = max(self.cfg.cos_visibility_lag / 8.0, 1e-3)
+        cap = max(self.cfg.cos_visibility_lag, 0.05)
+        for attempt in range(max_tries):
             data = self.writeback.peek(key)
             if data is not None:
                 return data
             data = self.cos.get(key)
-            self.ledger.cos_op("get")
+            with self._lock:
+                self.ledger.cos_op("get")
             if data is not None:
                 return data
+            delay = min(base * (2.0 ** attempt), cap)
             if self.clock.is_wall:
-                import time
-                time.sleep(0.005)
+                time.sleep(delay)
             else:
-                self.clock.advance(max(self.cfg.cos_visibility_lag / 4,
-                                       0.001))
+                self.clock.advance(delay)
         return None
+
+    def _cos_fetch_task(self, cos_key: str):
+        """I/O-executor body for one demand/prefetch chunk read. Touches
+        only thread-safe layers (pending map, COS, clock, ledger under
+        the store lock); all store mutation happens back on the daemon
+        thread when the future is harvested."""
+        return self._cos_read_consistent(cos_key)
+
+    # ------------------------------------------------------------------
+    # prefetch (sequential-scan readahead)
+    # ------------------------------------------------------------------
+
+    def _maybe_prefetch(self, keys: Sequence[str]) -> None:
+        """Sequential-scan readahead: predict the next objects of
+        detected key runs (checkpoint shard restore, KV page restore —
+        ordered trailing-index scans) and warm their non-resident chunks
+        from COS into bucket cache space via the I/O executor. The
+        fetches run while THIS GET decodes; the next GETs in the scan
+        consume them as ordinary SMS cache hits."""
+        if not self.prefetcher.cfg.enabled:
+            return
+        k, n = self.cfg.ec.k, self.cfg.ec.n
+        predicted = self.prefetcher.observe(keys)
+        for ckey in self.prefetcher.take_dropped():
+            # a cancelled/pruned run's warms must not keep occupying the
+            # executor ahead of future demand reads
+            fut = self._prefetch_inflight.pop(ckey, None)
+            if fut is not None:
+                fut.cancel()
+        for pkey, stem in predicted:
+            m = self.mt.load(pkey)
+            if m is None or not m.is_done_ok():
+                continue                   # unknown or in-flight object
+            for fi in range(m.num_fragments):
+                fkey = f"{pkey}|{m.ver}/f{fi}"
+                if self.pb.load(fkey) is not None:
+                    continue               # persistent buffer serves it
+                resident = 0
+                absent: List[str] = []
+                for idx in range(n):
+                    ckey = f"{fkey}#{idx}"
+                    if ckey in self._prefetch_inflight \
+                            or self._chunk_resident(ckey):
+                        resident += 1
+                    else:
+                        absent.append(ckey)
+                # warm just enough absent chunks that any k are servable
+                for ckey in absent[:max(0, k - resident)]:
+                    if len(self._prefetch_inflight) >= \
+                            self.cfg.prefetch_max_inflight:
+                        return
+                    self.prefetcher.record_issued(ckey, stem)
+                    self._prefetch_inflight[ckey] = self._io.submit(
+                        self._cos_fetch_task, f"chunk/{ckey}")
+
+    def _chunk_resident(self, ckey: str) -> bool:
+        """Is this chunk servable from SMS (storage or cache space)?"""
+        fid = self.chunk_map.get(ckey)
+        if fid is None:
+            return False
+        state = self.window.state_of_function(fid)
+        if state is None or state == BucketState.RELEASED:
+            return False
+        slab = self.sms.slabs.get(fid)
+        return slab is not None and slab.load(ckey) is not None
+
+    def _harvest_prefetch(self) -> None:
+        """Apply completed warm fetches (daemon thread only): loaded
+        chunks go into bucket cache space + the chunk map, so the next
+        GET's grouped SMS sweep serves them as cache hits."""
+        if not self._prefetch_inflight:
+            return
+        done = [ck for ck, f in self._prefetch_inflight.items()
+                if f.done()]
+        for ckey in done:
+            fut = self._prefetch_inflight.pop(ckey)
+            try:
+                data = fut.result()
+            except Exception:                         # noqa: BLE001
+                data = None
+            if data is None:
+                self.prefetcher.discard(ckey)
+            else:
+                self._demand_cache(ckey, data)
+
+    def _sync_prefetch_stats(self) -> None:
+        """Mirror the prefetcher's accounting into StoreStats (one sync
+        point per GET / gc_tick instead of per consume/waste site)."""
+        self.stats.prefetch_hits = self.prefetcher.stats.hits
+        self.stats.prefetch_wasted = self.prefetcher.stats.wasted
 
     # ------------------------------------------------------------------
     # demand caching + compaction + GC
     # ------------------------------------------------------------------
 
+    def _cache_target_fid(self) -> Optional[int]:
+        """A slab to host evictable cache-space bytes WITHOUT forcing a
+        scale-out: open-FG slabs first (the latest bucket's cache
+        functions, §5.3.3), else any alive ACTIVE-bucket slab. None when
+        nothing suitable exists — caching is an optimization, never
+        worth spinning up a function group."""
+        for fg_id in self.placement.open_fg_ids:
+            for fid in self.placement.fgs[fg_id].fids:
+                slab = self.sms.slabs.get(fid)
+                if slab is not None and slab.alive:
+                    return fid
+        for fid, slab in self.sms.slabs.items():
+            if slab.alive and self.window.state_of_function(fid) \
+                    == BucketState.ACTIVE:
+                return fid
+        return None
+
     def _demand_cache(self, ckey: str, data) -> None:
         """GET-triggered caching into the latest bucket's cache space
-    (§5.3.3 'cache functions'); evictable, not counted against HARDCAP."""
-        fid = self.placement.get_open_funcs(0)[0]
+        (§5.3.3 'cache functions'); evictable, not counted against
+        HARDCAP, and never a reason to spin up a new function group."""
+        fid = self._cache_target_fid()
+        if fid is None:
+            return
         self.sms.get(fid).cache_put(ckey, data)
         with self._lock:
             self.chunk_map[ckey] = fid
@@ -791,12 +1119,20 @@ class InfiniStore:
 
     def _migrate_chunks(self, ckeys: List[str]) -> None:
         """Compaction: move marked/hit chunks into the latest GC-bucket by
-        loading them from COS into newly placed slots (§5.3.3)."""
+        loading them from COS into newly placed slots (§5.3.3). Under the
+        pipelined GET path this runs from gc_tick, off the read critical
+        path. When no open function can take the chunk it is re-marked
+        and skipped: read-path maintenance must not force a scale-out
+        (`try_place_chunk` never spins up a function group)."""
         for ckey in ckeys:
+            if not self.placement.open_fg_ids:
+                self.window.mark(ckey)
+                continue
             data = self.writeback.peek(f"chunk/{ckey}")
             if data is None:
                 data = self.cos.get(f"chunk/{ckey}")
-                self.ledger.cos_op("get")
+                with self._lock:      # I/O-executor reads charge it too
+                    self.ledger.cos_op("get")
             if data is None:
                 old = self.chunk_map.get(ckey)
                 data = self.sms.slabs[old].load(ckey) if old is not None \
@@ -804,10 +1140,23 @@ class InfiniStore:
             if data is None:
                 continue
             idx = int(ckey.rsplit("#", 1)[1])
-            fid = self._place_chunk(idx, len(data))
+            while True:
+                fid = self.placement.try_place_chunk(idx, len(data))
+                if fid is None or self.sms.get(fid).used \
+                        < self.sms.get(fid).hardcap:
+                    break
+                # slab is the authority on fullness (§5.3.1): resync the
+                # drifted ledger by sealing and probe the next open FG
+                self.placement.release(fid, len(data))
+                self.placement.seal_fg(self.placement.functions[fid].fg_id)
+            if fid is None:
+                self.window.mark(ckey)    # retry once capacity opens
+                continue
             slab = self.sms.get(fid)
             self._invoke(fid, len(data), "request")
-            if slab.store(ckey, data):
+            if not slab.store(ckey, data):
+                self.placement.release(fid, len(data))
+            else:
                 old = self.chunk_map.get(ckey)
                 with self._lock:
                     self.chunk_map[ckey] = fid
@@ -830,6 +1179,13 @@ class InfiniStore:
         self._submit(self._gc_tick_impl).result()
 
     def _gc_tick_impl(self) -> None:
+        self._harvest_prefetch()
+        self._sync_prefetch_stats()
+        if self._pending_migrations:
+            # degraded-read compaction deferred by the pipelined GET path
+            pending = list(self._pending_migrations)
+            self._pending_migrations.clear()
+            self._migrate_chunks(pending)
         if self.window.due():
             ev = self.window.run_gc()
             # carry open FGs into the new bucket (Fig. 4c)
@@ -884,7 +1240,15 @@ class InfiniStore:
 
     def snapshot_metadata(self):
         return {"mt": self.mt.snapshot(),
-                "chunk_map": dict(self.chunk_map)}
+                "chunk_map": dict(self.chunk_map),
+                "get_pipeline": {
+                    "pipelined": self.cfg.pipelined_get,
+                    "prefetch_hits": self.stats.prefetch_hits,
+                    "prefetch_wasted": self.stats.prefetch_wasted,
+                    "cos_fallback_reads": self.stats.cos_fallback_reads,
+                    "decode_batches": self.stats.decode_batches,
+                    "pending_migrations": len(self._pending_migrations),
+                    "prefetch": self.prefetcher.snapshot()}}
 
 
 class ConcurrentPutError(RuntimeError):

@@ -139,6 +139,27 @@ class SMSPagedKV:
         raw = self.cos.get(key)
         if raw is None:
             raise KeyError(f"page {key} not in COS")
+        return self._install_page(b, seq_id, j, raw)
+
+    def restore_pages(self, b: int, seq_id: str, js: List[int]) -> int:
+        """Batched on-demand migration for a resuming sequence: the
+        missing pages' COS payloads are fetched with one bounded parallel
+        fan-out (the KV mirror of the store's pipelined demand reads)
+        and installed in page order. Returns the pages restored."""
+        todo = [(j, self._key(seq_id, j)) for j in js
+                if self._key(seq_id, j) not in self.pages]
+        if not todo:
+            return 0
+        # COS's own worker pool does the fan-out: no per-call executor
+        futs = [(j, key, self.cos.get_async(key)) for j, key in todo]
+        for j, key, fut in futs:
+            raw = fut.result()
+            if raw is None:
+                raise KeyError(f"page {key} not in COS")
+            self._install_page(b, seq_id, j, raw)
+        return len(todo)
+
+    def _install_page(self, b: int, seq_id: str, j: int, raw) -> int:
         L, _, _, ps, K, hd = self.k_pool.shape
         buf = as_u8(raw)                       # bytes or uint8 view alike
         half = buf.size // 2

@@ -1,0 +1,350 @@
+"""GET pipeline: overlapped gather+decode, parallel COS fallback,
+sequential-scan prefetch, and the read-path maintenance guards.
+
+Covers the pipelined data path (`StoreConfig(pipelined_get=True)`, the
+default) against the legacy serial path, the bounded I/O fan-out for
+demand reads under the S3-like latency model, scan detection +
+cancellation, degraded reads with prefetch warming, and the no-scale-out
+guarantees of `_demand_cache` / `_migrate_chunks`.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import BucketState, GCConfig
+from repro.core.prefetch import (PrefetchConfig, SequentialPrefetcher,
+                                 split_key)
+
+MB = 1024 * 1024
+
+
+def make_store(**kw):
+    kw.setdefault("ec", ECConfig(k=4, p=2))
+    kw.setdefault("function_capacity", 8 * MB)
+    kw.setdefault("fragment_bytes", 1 * MB)
+    kw.setdefault("gc", GCConfig(gc_interval=10.0, active_intervals=2,
+                                 degraded_intervals=6))
+    kw.setdefault("num_recovery_functions", 3)
+    clock = Clock()
+    return InfiniStore(StoreConfig(**kw), clock=clock), clock
+
+
+def fail_all_slabs(st):
+    for fid in list(st.sms.slabs):
+        st.inject_failure(fid)
+
+
+# ---------------------------------------------------------------------------
+# sequential-scan detection (policy unit tests)
+# ---------------------------------------------------------------------------
+
+def test_split_key_trailing_index():
+    assert split_key("ckpt/8/w/s12") == ("ckpt/8/w/s", 12, 0)
+    assert split_key("kv/seq0/p4") == ("kv/seq0/p", 4, 0)
+    assert split_key("shard/s007") == ("shard/s", 7, 3)
+    assert split_key("no-index/") is None
+
+
+def test_detector_predicts_after_min_run():
+    pf = SequentialPrefetcher(PrefetchConfig(min_run=3, depth=2))
+    assert pf.observe(["a/s0"]) == []
+    assert pf.observe(["a/s1"]) == []
+    assert pf.observe(["a/s2"]) == [("a/s3", "a/s"), ("a/s4", "a/s")]
+    assert pf.stats.runs_detected == 1
+    # zero-padded indices keep their padding in predictions
+    pf2 = SequentialPrefetcher(PrefetchConfig(min_run=2, depth=1))
+    pf2.observe(["m/s08"])
+    assert pf2.observe(["m/s09"]) == [("m/s10", "m/s")]
+
+
+def test_detector_batch_observe_predicts_ahead():
+    pf = SequentialPrefetcher(PrefetchConfig(min_run=3, depth=2))
+    preds = pf.observe([f"x/p{i}" for i in range(6)])
+    # one ordered batch: predictions dedup and extend past the batch head
+    assert ("x/p6", "x/p") in preds and ("x/p7", "x/p") in preds
+
+
+def test_detector_cancels_on_random_access_and_counts_waste():
+    pf = SequentialPrefetcher(PrefetchConfig(min_run=3, depth=2))
+    pf.observe(["a/s0", "a/s1", "a/s2"])
+    pf.record_issued("a/s3|1/f0#0", "a/s")
+    pf.record_issued("a/s3|1/f0#1", "a/s")
+    # random access breaks the run: outstanding warms become waste
+    pf.observe(["a/s0"])
+    assert pf.stats.runs_cancelled == 1
+    assert pf.stats.wasted == 2
+    assert pf.outstanding == 0
+    # consumed warms are hits, not waste
+    pf.observe(["b/s0", "b/s1", "b/s2"])
+    pf.record_issued("b/s3|1/f0#0", "b/s")
+    assert pf.consume("b/s3|1/f0#0") is True
+    assert pf.consume("b/s3|1/f0#0") is False      # once only
+    assert pf.stats.hits == 1
+
+
+# ---------------------------------------------------------------------------
+# overlapped gather + decode: ordering/correctness vs the serial path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pipelined", [True, False])
+def test_roundtrip_matches_serial(pipelined):
+    # recovery off so reclaimed slabs exercise the COS fallback itself
+    st, _ = make_store(pipelined_get=pipelined, enable_recovery=False)
+    rng = np.random.default_rng(0)
+    objs = {"tiny": rng.bytes(1000),
+            "one": rng.bytes(300_000),
+            "multi": rng.bytes(int(2.5 * MB))}      # 3 fragments
+    for k, v in objs.items():
+        st.put(k, v)
+    got = st.get_many(list(objs) + ["missing"])
+    for k, v in objs.items():
+        assert got[k] == v
+    assert got["missing"] is None
+    # degraded: reclaim everything, reads fall back to COS
+    st.flush_writeback()
+    fail_all_slabs(st)
+    got = st.get_many(list(objs))
+    for k, v in objs.items():
+        assert got[k] == v
+    assert st.stats.cos_fallback_reads > 0
+    if pipelined:
+        assert st.stats.decode_batches > 0
+    st.close()
+
+
+def test_ready_order_decode_batches_and_array_path():
+    st, _ = make_store(decode_batch_fragments=2)
+    rng = np.random.default_rng(1)
+    objs = {f"k{i}": rng.bytes(120_000) for i in range(7)}
+    st.put_many(objs)
+    st.flush_writeback()
+    before = st.stats.decode_batches
+    got = st.get_many_arrays(list(objs))
+    for k, v in objs.items():
+        assert bytes(got[k]) == v
+        assert not got[k].flags.writeable
+    # 7 fragments, batch size 2 -> at least 4 ready-order decode calls
+    assert st.stats.decode_batches - before >= 4
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# parallel COS fallback
+# ---------------------------------------------------------------------------
+
+class ConcurrencyProbe:
+    """Wraps cos.get, tracking the max number of concurrent readers."""
+
+    def __init__(self, cos, sleep_s=0.01):
+        self._orig = cos.get
+        self._sleep = sleep_s
+        self._lock = threading.Lock()
+        self.cur = 0
+        self.max = 0
+        cos.get = self
+
+    def __call__(self, key):
+        with self._lock:
+            self.cur += 1
+            self.max = max(self.max, self.cur)
+        try:
+            time.sleep(self._sleep)
+            return self._orig(key)
+        finally:
+            with self._lock:
+                self.cur -= 1
+
+
+def test_cos_fallback_fans_out_concurrently():
+    st, _ = make_store(enable_recovery=False, get_io_workers=6)
+    rng = np.random.default_rng(2)
+    objs = {f"o{i}": rng.bytes(200_000) for i in range(3)}
+    st.put_many(objs)
+    st.flush_writeback()
+    fail_all_slabs(st)
+    probe = ConcurrencyProbe(st.cos)
+    got = st.get_many(list(objs))
+    for k, v in objs.items():
+        assert got[k] == v
+    assert probe.max > 1, "demand reads did not overlap"
+    assert st.stats.cos_fallback_reads >= st.cfg.ec.k * len(objs)
+    st.close()
+
+
+def test_serial_fallback_stays_serial():
+    st, _ = make_store(pipelined_get=False, enable_recovery=False)
+    rng = np.random.default_rng(3)
+    st.put("o", rng.bytes(200_000))
+    st.flush_writeback()
+    fail_all_slabs(st)
+    probe = ConcurrencyProbe(st.cos)
+    assert st.get("o") is not None
+    assert probe.max == 1
+    st.close()
+
+
+def test_fallback_masks_visibility_lag_with_backoff():
+    """The consistency loop's capped exponential backoff (derived from
+    cos_visibility_lag) must advance the logical clock past the lag."""
+    st, clock = make_store(enable_recovery=False, cos_visibility_lag=5.0)
+    rng = np.random.default_rng(4)
+    data = rng.bytes(150_000)
+    st.put("lagged", data)
+    st.flush_writeback()                 # persisted, but not yet visible
+    fail_all_slabs(st)
+    assert clock.now() < 5.0
+    assert st.get("lagged") == data      # backoff masked the lag
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# sequential-scan prefetch on the degraded read path
+# ---------------------------------------------------------------------------
+
+def test_prefetch_warms_sequential_scan():
+    st, _ = make_store(enable_recovery=False)
+    rng = np.random.default_rng(5)
+    objs = {f"shard/s{i}": rng.bytes(100_000) for i in range(8)}
+    st.put_many(objs)
+    st.flush_writeback()
+    fail_all_slabs(st)
+    for i in range(8):                   # ordered scan, one GET at a time
+        key = f"shard/s{i}"
+        assert st.get(key) == objs[key]
+    assert st.prefetcher.stats.runs_detected == 1
+    assert st.stats.prefetch_hits > 0, "scan never consumed a warm chunk"
+    # warmed chunks land in bucket cache space -> re-reads hit SMS
+    miss0 = st.stats.sms_chunk_misses
+    assert st.get("shard/s5") == objs["shard/s5"]
+    assert st.stats.sms_chunk_hits > 0
+    del miss0
+    st.close()
+
+
+def test_random_access_cancels_prefetch_and_counts_waste():
+    st, _ = make_store(enable_recovery=False)
+    rng = np.random.default_rng(6)
+    objs = {f"r/s{i}": rng.bytes(80_000) for i in range(8)}
+    st.put_many(objs)
+    st.flush_writeback()
+    fail_all_slabs(st)
+    for i in range(5):                   # run established; s5/s6 predicted
+        assert st.get(f"r/s{i}") == objs[f"r/s{i}"]
+    assert st.prefetcher.outstanding > 0 or st.stats.prefetch_hits > 0
+    st.get("r/s0")                       # random access: cancel the run
+    assert st.prefetcher.stats.runs_cancelled >= 1
+    assert st.prefetcher.outstanding == 0
+    # the cancelled run's warm fetches were withdrawn from the executor
+    assert not any(ck.split("|")[0] in ("r/s5", "r/s6")
+                   for ck in st._prefetch_inflight)
+    # any warmed-but-unconsumed chunks were counted as waste
+    assert st.stats.prefetch_wasted == st.prefetcher.stats.wasted
+    st.close()
+
+
+def test_prefetch_disabled_under_serial_path():
+    st, _ = make_store(pipelined_get=False)
+    rng = np.random.default_rng(7)
+    for i in range(6):
+        st.put(f"q/s{i}", rng.bytes(50_000))
+    for i in range(6):
+        st.get(f"q/s{i}")
+    assert st.prefetcher.stats.predicted == 0
+    assert st.stats.prefetch_hits == 0
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# read-path maintenance: no scale-out, migration off the critical path
+# ---------------------------------------------------------------------------
+
+def test_demand_cache_never_forces_scaleout():
+    st, _ = make_store(enable_recovery=False)
+    rng = np.random.default_rng(8)
+    data = rng.bytes(150_000)
+    st.put("guarded", data)
+    st.flush_writeback()
+    for fg_id in list(st.placement.open_fg_ids):
+        st.placement.seal_fg(fg_id)      # no open FG anywhere
+    fail_all_slabs(st)
+    scale_outs = st.placement.stats.scale_outs
+    assert st.get("guarded") == data     # COS fallback, cache skipped
+    assert st.placement.stats.scale_outs == scale_outs, \
+        "demand caching spun up a function group for cache-space bytes"
+    st.close()
+
+
+def test_try_place_chunk_never_scales_out():
+    from repro.core.placement import PlacementManager
+    pm = PlacementManager(3, 1000)
+    pm.get_open_funcs(2)                 # exactly one FG
+    scale_outs = pm.stats.scale_outs
+    assert pm.try_place_chunk(0, 800) is not None
+    assert pm.try_place_chunk(0, 800) is not None  # crossing write seals
+    # sealed FG, no open functions left: place_chunk would scale out here
+    assert pm.try_place_chunk(0, 800) is None
+    assert pm.stats.scale_outs == scale_outs
+
+
+def test_migrate_chunks_skips_without_open_fg():
+    st, _ = make_store()
+    rng = np.random.default_rng(9)
+    st.put("m", rng.bytes(100_000))
+    st.flush_writeback()
+    for fg_id in list(st.placement.open_fg_ids):
+        st.placement.seal_fg(fg_id)
+    ckey = "m|1/f0#0"
+    st.window.mark(ckey)
+    scale_outs = st.placement.stats.scale_outs
+    st.gc_tick()                         # compaction round hits the guard
+    assert st.placement.stats.scale_outs == scale_outs
+    assert ckey in st.window.marked()    # re-marked for a later round
+    st.close()
+
+
+def age_first_bucket_to_degraded(st, clock):
+    """Seal the data-holding FGs, open a fresh FG, and age the sealed
+    bucket to DEGRADED (open FGs carry over and stay ACTIVE)."""
+    for fg_id in list(st.placement.open_fg_ids):
+        st.placement.seal_fg(fg_id)
+    st.put("opener", b"x" * 1000)        # spins up a fresh open FG
+    st.flush_writeback()
+    for _ in range(3):
+        clock.advance(10.0)
+        st.gc_tick()
+
+
+def test_degraded_hit_migration_deferred_to_gc_tick():
+    st, clock = make_store()
+    rng = np.random.default_rng(10)
+    data = rng.bytes(200_000)
+    st.put("hot", data)
+    st.flush_writeback()
+    age_first_bucket_to_degraded(st, clock)
+    fid = st.chunk_map["hot|1/f0#0"]
+    assert st.window.state_of_function(fid) == BucketState.DEGRADED
+    assert st.get("hot") == data         # in-memory DEGRADED-bucket hit
+    assert st.stats.degraded_hits > 0
+    snap = st.snapshot_metadata()["get_pipeline"]
+    assert snap["pending_migrations"] > 0, "migration ran on the GET path"
+    assert st.stats.compactions == 0
+    st.gc_tick()                         # the deferred round runs here
+    assert st.stats.compactions > 0
+    assert st.snapshot_metadata()["get_pipeline"]["pending_migrations"] == 0
+    st.close()
+
+
+def test_serial_path_still_migrates_inline():
+    st, clock = make_store(pipelined_get=False)
+    rng = np.random.default_rng(11)
+    data = rng.bytes(200_000)
+    st.put("hot", data)
+    st.flush_writeback()
+    age_first_bucket_to_degraded(st, clock)
+    assert st.get("hot") == data
+    assert st.stats.compactions > 0      # legacy: migrated during the GET
+    st.close()
