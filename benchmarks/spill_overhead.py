@@ -1,0 +1,223 @@
+"""Spill-journal overhead benchmark: crash-consistent writeback (§5.3.2).
+
+Two questions the durable spill journal must answer with numbers:
+
+1. **Ack cost** — how much PUT-ack latency does journaling every
+   enqueued write (before the ack) add over the memory-only pending map
+   (`spill_dir=None`)?  The acceptance bar is <= 25% at 1 MB.  COS is
+   modelled S3-like (same model as put_latency.py) so the ack paths
+   being compared are the real persistent-buffer ack paths.
+2. **Replay cost** — how long does a daemon restart take to replay the
+   journal back into the queue, as a function of acked-but-unpersisted
+   bytes at the crash?  Measured by killing the daemon mid-flight
+   (`simulate_crash`) and timing the rebuild, then verifying every
+   acked key is readable and flushes to COS.
+
+Full runs write ``BENCH_spill.json`` at the repo root; ``--smoke`` runs
+write ``BENCH_spill_smoke.json`` so CI never clobbers it.
+
+Usage: PYTHONPATH=src python benchmarks/spill_overhead.py [--smoke] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):                      # direct-script invocation
+    _HERE = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, os.path.join(_HERE, ".."))
+    sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+
+import numpy as np
+
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+
+MB = 1024 * 1024
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+# same S3-like COS PUT model as put_latency.py (~15 ms base + 100 MB/s)
+COS_PUT_BASE_S = 0.015
+COS_PUT_PER_BYTE_S = 1.0 / (100 * MB)
+
+
+def make_store(*, spill_dir, cos_model: bool = True) -> InfiniStore:
+    cfg = StoreConfig(
+        ec=ECConfig(k=10, p=2),
+        function_capacity=512 * MB,
+        fragment_bytes=64 * MB,
+        gc=GCConfig(gc_interval=1e12),
+        num_recovery_functions=4,
+        writeback_depth=4096,
+        spill_dir=spill_dir,
+    )
+    st = InfiniStore(cfg, clock=Clock())
+    if cos_model:
+        st.cos.put_delay_base_s = COS_PUT_BASE_S
+        st.cos.put_delay_per_byte_s = COS_PUT_PER_BYTE_S
+    return st
+
+
+def bench_ack(size: int, repeats: int, max_repeats: int = 0) -> dict:
+    """Journaled vs memory-only PUT ack latency (async writeback both).
+    The two modes' PUTs are INTERLEAVED so both sample the same machine
+    load windows, the floors are min-of-N (the systematic cost, with
+    noisy-neighbor spikes excluded), and sampling continues past
+    `repeats` until both floors stabilize (no new min for 8 straight
+    pairs) or `max_repeats` is hit — shared CI boxes need the adaptive
+    tail to find a quiet window. The background COS writers are paused
+    during the measured PUTs so both modes see an identical quiesced
+    store; they are resumed and fully flushed afterwards to verify the
+    durability half."""
+    rng = np.random.default_rng(size)
+    out = {"object_mb": size / MB}
+    tmp = tempfile.mkdtemp(prefix="spill-bench-")
+    # no COS latency model here: the writer is paused during the
+    # measured acks (COS never runs on them), and the post-measurement
+    # verification flush shouldn't dominate the benchmark's runtime
+    stores = {"memory": make_store(spill_dir=None, cos_model=False),
+              "journal": make_store(spill_dir=tmp, cos_model=False)}
+    acks = {"memory": [], "journal": []}
+    for st in stores.values():
+        st.writeback.pause()
+    max_repeats = max_repeats or 3 * repeats
+    since_new_min = 0
+    for r in range(max_repeats):
+        data = rng.bytes(size)
+        improved = False
+        for mode, st in stores.items():
+            t0 = time.perf_counter()
+            st.put(f"obj{r}", data)               # ack latency
+            dt = time.perf_counter() - t0
+            if not acks[mode] or dt < min(acks[mode]):
+                improved = True
+            acks[mode].append(dt)
+        since_new_min = 0 if improved else since_new_min + 1
+        if r + 1 >= repeats and since_new_min >= 8:
+            break
+    out["repeats"] = len(acks["memory"])
+    out["journal_appends"] = stores["journal"].spill.stats.appends
+    out["journal_mb"] = round(
+        stores["journal"].spill.stats.appended_bytes / MB, 2)
+    for mode, st in stores.items():
+        st.writeback.resume()
+        # the journal must not cost durability either: every write still
+        # reaches COS in the background
+        assert st.flush_writeback(timeout=600.0)
+        assert st.writeback.stats.failures == 0
+        st.close()
+        out[f"{mode}_put_ack_ms"] = round(min(acks[mode]) * 1e3, 2)
+    shutil.rmtree(tmp, ignore_errors=True)
+    out["overhead_pct"] = round(
+        (out["journal_put_ack_ms"] - out["memory_put_ack_ms"])
+        / out["memory_put_ack_ms"] * 100.0, 1)
+    return out
+
+
+def bench_replay(pending_mb: int, object_mb: int = 1) -> dict:
+    """Kill the daemon with `pending_mb` acked-but-unpersisted MB and
+    time the restart replay; verify zero loss end-to-end."""
+    tmp = tempfile.mkdtemp(prefix="spill-bench-")
+    rng = np.random.default_rng(pending_mb)
+    try:
+        st = make_store(spill_dir=tmp, cos_model=False)
+        st.writeback.pause()                      # hold everything pending
+        n = max(1, pending_mb // object_mb)
+        objs = {f"k{i}": rng.bytes(object_mb * MB) for i in range(n)}
+        for k, v in objs.items():
+            st.put(k, v)
+        pending_bytes = st.spill.pending_bytes
+        st.simulate_crash()
+        t0 = time.perf_counter()
+        st2 = make_store(spill_dir=tmp, cos_model=False)
+        replay_s = time.perf_counter() - t0
+        lost = sum(1 for k, v in objs.items() if st2.get(k) != v)
+        assert st2.flush_writeback(timeout=600.0)
+        persisted = all(st2.get(k) == v for k, v in objs.items())
+        out = {"pending_mb": round(pending_bytes / MB, 2),
+               "objects": n,
+               "replay_ms": round(replay_s * 1e3, 2),
+               "replayed_writes": st2.stats.spill_replayed_writes,
+               "replayed_metas": st2.stats.spill_replayed_metas,
+               "replay_MBps": round(pending_bytes / MB / replay_s, 1),
+               "lost_after_restart": lost,
+               "all_cos_persistent": bool(persisted)}
+        st2.close()
+        return out
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run_bench(smoke: bool) -> dict:
+    if smoke:
+        ack = [bench_ack(1 * MB, repeats=16)]
+        replay = [bench_replay(4)]
+    else:
+        ack = [bench_ack(1 * MB, repeats=24),
+               bench_ack(10 * MB, repeats=6)]
+        replay = [bench_replay(8), bench_replay(32), bench_replay(128)]
+    return {"bench": "spill_overhead", "smoke": smoke,
+            "ec": {"k": 10, "p": 2},
+            "cos_model": {"put_base_s": COS_PUT_BASE_S,
+                          "put_MBps": round(1.0 / COS_PUT_PER_BYTE_S / MB)},
+            "ack": ack, "replay": replay}
+
+
+def _default_out(smoke: bool) -> str:
+    name = "BENCH_spill_smoke.json" if smoke else "BENCH_spill.json"
+    return os.path.join(ROOT, name)
+
+
+def _write(result: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+
+
+def run() -> list:
+    """benchmarks.run entry point (smoke sizes, CSV rows)."""
+    result = run_bench(smoke=True)
+    _write(result, _default_out(smoke=True))
+    rows = []
+    for pt in result["ack"]:
+        tag = f"{pt['object_mb']:g}MB"
+        rows.append(f"put_ack_journal_{tag},{pt['journal_put_ack_ms']},"
+                    f"ms overhead={pt['overhead_pct']}% vs memory-only")
+    for pt in result["replay"]:
+        rows.append(f"spill_replay_{pt['pending_mb']:g}MB,"
+                    f"{pt['replay_ms']},ms lost={pt['lost_after_restart']}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 MB ack + 4 MB replay only (CI sanity); writes "
+                         "BENCH_spill_smoke.json unless --out is given")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    result = run_bench(args.smoke)
+    out = args.out or _default_out(args.smoke)
+    _write(result, out)
+    for pt in result["ack"]:
+        print(f"{pt['object_mb']:>6g} MB | put ack memory "
+              f"{pt['memory_put_ack_ms']:>8.2f} ms -> journal "
+              f"{pt['journal_put_ack_ms']:>8.2f} ms "
+              f"({pt['overhead_pct']:+.1f}%)")
+    for pt in result["replay"]:
+        print(f"{pt['pending_mb']:>6g} MB pending | replay "
+              f"{pt['replay_ms']:>8.2f} ms "
+              f"({pt['replay_MBps']} MB/s) | lost "
+              f"{pt['lost_after_restart']} | COS-persistent "
+              f"{pt['all_cos_persistent']}")
+    print(f"wrote {os.path.relpath(out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,3 +15,5 @@ python benchmarks/ec_path.py --smoke
 python benchmarks/put_latency.py --smoke
 # pipelined GET path end-to-end (warm/aged/degraded + prefetch scan)
 python benchmarks/get_latency.py --smoke
+# spill-journal overhead + kill/restart replay (crash-consistent writeback)
+python benchmarks/spill_overhead.py --smoke

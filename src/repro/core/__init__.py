@@ -18,6 +18,7 @@ from repro.core.prefetch import (PrefetchConfig,  # noqa: F401
                                  SequentialPrefetcher)
 from repro.core.recovery import RecoveryManager  # noqa: F401
 from repro.core.sms import SMS, Slab  # noqa: F401
+from repro.core.spill import SpillJournal, SpillStats  # noqa: F401
 from repro.core.store import (ConcurrentPutError, InfiniStore,  # noqa: F401
                               StoreConfig)
 from repro.core.versioning import (MetadataTable, Meta,  # noqa: F401

@@ -109,6 +109,12 @@ class COS:
         with self._lock:
             self.stats.gets += 1
             vis = self._visible_at.get(key)
+            if vis is None and self.root and self._path(key).exists():
+                # daemon-restart path: the object was persisted by a
+                # previous process (its put predates this one, so any
+                # visibility lag has long elapsed) — adopt it as visible
+                vis = self.clock.now()
+                self._visible_at[key] = vis
             if vis is None or self.clock.now() < vis:
                 self.stats.get_misses += 1
                 return None
@@ -133,6 +139,10 @@ class COS:
     def exists(self, key: str) -> bool:
         with self._lock:
             vis = self._visible_at.get(key)
+            if vis is None and self.root and self._path(key).exists():
+                # same daemon-restart adoption as get()
+                vis = self.clock.now()
+                self._visible_at[key] = vis
             return vis is not None and self.clock.now() >= vis
 
     def delete(self, key: str) -> None:
@@ -146,6 +156,11 @@ class COS:
                 p.unlink()
 
     def list_keys(self, prefix: str = "") -> list:
+        """Keys this process has seen (put, or adopted by get()/exists()
+        after a daemon restart). NOTE: the disk layout stores objects
+        under hashed paths, so keys persisted by a PREVIOUS process are
+        listable only once touched by key — by-key reads (GET data path,
+        recovery manifests, journal replay) work regardless."""
         with self._lock:
             return sorted(k for k in self._visible_at if k.startswith(prefix))
 

@@ -161,10 +161,11 @@ class SlidingWindow:
         old_latest = self.latest
         ev.new_bucket = self._new_bucket()
         carry_open_fgs(old_latest, ev.new_bucket)
-        # drop fully-released buckets from the window front
+        # drop fully-released buckets from the window front; the new
+        # bucket was appended by _new_bucket and is ACTIVE, so it always
+        # survives this filter — no re-append, which would duplicate it
         self._buckets = [b for b in self._buckets
                          if b.state != BucketState.RELEASED]
-        self._buckets.append(ev.new_bucket) if ev.new_bucket not in self._buckets else None
         return ev
 
     def release_function(self, fid: int) -> None:

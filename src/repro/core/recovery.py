@@ -45,12 +45,15 @@ class RecoverySession:
     pending: Set[str]
     recovered: Dict[str, bytes] = field(default_factory=dict)
     done: bool = False
+    completed_at: Optional[float] = None      # clock time of phase 3
+    # temporary cache placements in the recovery group: (rfid, chunk key)
+    placements: List[tuple] = field(default_factory=list)
 
 
 class RecoveryManager:
     def __init__(self, sms: SMS, cos: COS, logs: Dict[int, InsertionLog], *,
                  num_recovery_functions: int = 20, workers: int = 8,
-                 retain_seconds: float = 60.0, writeback=None):
+                 retain_seconds: float = 60.0, writeback=None, clock=None):
         self.sms = sms
         self.cos = cos
         # WritebackQueue (or None): chunks acked but not yet persisted to
@@ -59,7 +62,10 @@ class RecoveryManager:
         self.writeback = writeback
         self.logs = logs
         self.R = num_recovery_functions
+        # §5.5.2: recovery-group placements are TEMPORARY — they expire
+        # this long after the session completes (swept by sweep_expired)
         self.retain_seconds = retain_seconds
+        self.clock = clock                    # store Clock, or wall time
         self.stats = RecoveryStats()
         self._pool = ThreadPoolExecutor(max_workers=workers,
                                         thread_name_prefix="recovery")
@@ -70,6 +76,15 @@ class RecoveryManager:
         # function each, §5.5.2 phase 1)
         self._busy_recovery: Set[int] = set()
         self.sessions: Dict[int, RecoverySession] = {}
+
+    def _now(self) -> float:
+        return self.clock.now() if self.clock is not None \
+            else time.monotonic()
+
+    def shutdown(self) -> None:
+        """Release the recovery worker pool. Without this every store
+        leaks up to `workers` live recovery-* threads on close."""
+        self._pool.shutdown(wait=True)
 
     # ---- group management (phase 1) -------------------------------------
 
@@ -109,9 +124,17 @@ class RecoveryManager:
         failed = (slab.term != daemon_view.term
                   or slab.log_hash != daemon_view.hash)
         if failed and daemon_view.term > 0:
-            self.stats.detections += 1
+            self.note_detection()
             return True
         return False
+
+    def note_detection(self) -> None:
+        """Count one failure detection. The store calls this for the
+        invoke-path `was_dead` case (an instance observed reclaimed at
+        invocation) that a matching term/hash would otherwise hide from
+        `check_failed` — both paths are real detections."""
+        with self._lock:
+            self.stats.detections += 1
 
     def needs_parallel(self, slab: Slab, daemon_view: Piggyback) -> bool:
         """diff_rank difference significantly larger than the recovery
@@ -147,10 +170,11 @@ class RecoveryManager:
         slab.term = log.term
         slab.log_hash = log.last_hash
         slab.diff_rank = log.diff_rank
-        self.stats.local_recoveries += 1
-        self.stats.chunks_recovered += len(got)
-        self.stats.bytes_recovered += sum(len(v) for v in got.values())
-        self.stats.recovery_seconds += time.monotonic() - t0
+        with self._lock:                  # pool workers may be running
+            self.stats.local_recoveries += 1
+            self.stats.chunks_recovered += len(got)
+            self.stats.bytes_recovered += sum(len(v) for v in got.values())
+            self.stats.recovery_seconds += time.monotonic() - t0
         return len(got)
 
     def recover_parallel(self, slab: Slab, candidates: List[int],
@@ -185,6 +209,7 @@ class RecoveryManager:
                     rslab = self.sms.slabs[group[i]]
                     for k2, v in got.items():
                         rslab.cache_put(k2, v)
+                        session.placements.append((group[i], k2))
             return got
 
         futures = [self._pool.submit(worker, i) for i in range(R)]
@@ -196,12 +221,14 @@ class RecoveryManager:
         slab.log_hash = log.last_hash
         slab.diff_rank = log.diff_rank
         session.done = True
+        session.completed_at = self._now()
         self._release_group(group)
-        self.stats.parallel_recoveries += 1
-        self.stats.chunks_recovered += len(session.recovered)
-        self.stats.bytes_recovered += sum(
-            len(v) for v in session.recovered.values())
-        self.stats.recovery_seconds += time.monotonic() - t0
+        with self._lock:                  # other sessions may be running
+            self.stats.parallel_recoveries += 1
+            self.stats.chunks_recovered += len(session.recovered)
+            self.stats.bytes_recovered += sum(
+                len(v) for v in session.recovered.values())
+            self.stats.recovery_seconds += time.monotonic() - t0
         if on_ready:
             on_ready(session)
         return session
@@ -214,3 +241,22 @@ class RecoveryManager:
             if session is None:
                 return None
             return session.recovered.get(key)
+
+    def sweep_expired(self, now: Optional[float] = None) -> int:
+        """Expire completed sessions past `retain_seconds` (the gc_tick
+        hook): the recovery group's cache placements are TEMPORARY per
+        §5.5.2 — evict them and drop the finished session. Returns the
+        number of sessions expired."""
+        if now is None:
+            now = self._now()
+        with self._lock:
+            expired = [fid for fid, s in self.sessions.items()
+                       if s.done and s.completed_at is not None
+                       and now - s.completed_at >= self.retain_seconds]
+            swept = [self.sessions.pop(fid) for fid in expired]
+        for session in swept:
+            for rfid, key in session.placements:
+                rslab = self.sms.slabs.get(rfid)
+                if rslab is not None:
+                    rslab.cache_delete(key)
+        return len(swept)

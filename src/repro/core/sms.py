@@ -150,6 +150,12 @@ class Slab:
             total -= _nbytes(v)
         self.stats.cached_bytes = total
 
+    def cache_delete(self, key: str) -> bool:
+        """Drop a cache-space entry WITHOUT touching the storage
+        partition (expired temporary recovery placements, §5.5.2)."""
+        with self._lock:
+            return self.cache.pop(key, None) is not None
+
     def _evict_cache(self, needed: int) -> None:
         freed = 0
         while self.cache and freed < needed:

@@ -20,6 +20,16 @@ so an instance failure between ack and persistence loses nothing.
 `StoreConfig(async_writeback=False)` restores the legacy inline-COS ack
 path (the benchmark baseline).
 
+The durability contract also survives the DAEMON: every enqueued write
+(and each PUT's committed metadata) is appended to a crash-consistent
+local spill journal (`repro.core.spill`) before the ack, and a store
+rebuilt on the same `StoreConfig(spill_dir=...)` replays surviving
+records on construction — metadata is restored, pending writes re-enter
+the queue, and post-restart GETs / instance recovery serve them exactly
+like live pending data. `spill_dir=None` restores the memory-only
+pending map; `simulate_crash()` is the kill half of the kill/restart
+tests.
+
 Payloads follow the `Payload` protocol: `bytes`, numpy arrays, or
 device-backed `jax.Array`s are fragmented as flat uint8 views and reach
 the bit-sliced GF(256) kernel without an intermediate `bytes` copy;
@@ -47,6 +57,9 @@ accounting.
 """
 from __future__ import annotations
 
+import json
+import shutil
+import tempfile
 import threading
 import time
 from concurrent.futures import (FIRST_COMPLETED, Future,
@@ -68,7 +81,8 @@ from repro.core.placement import PlacementManager
 from repro.core.prefetch import PrefetchConfig, SequentialPrefetcher
 from repro.core.recovery import RecoveryManager
 from repro.core.sms import SMS
-from repro.core.versioning import MetadataTable, PersistentBuffer
+from repro.core.spill import SpillJournal
+from repro.core.versioning import Meta, MetadataTable, PersistentBuffer
 from repro.core.writeback import StoreFuture, WritebackQueue
 
 MB = 1024 * 1024
@@ -98,6 +112,20 @@ class StoreConfig:
     writeback_depth: int = 512         # queue bound (backpressure)
     writeback_retries: int = 8
     writeback_backoff_s: float = 0.005
+    # ---- crash-consistent writeback spill (§5.3.2 durability) ----------
+    # The durable half of the persistent buffer: enqueued writes are
+    # journaled to an append-only, CRC-framed, segment-rotated local log
+    # BEFORE the PUT acks, and replayed into the queue when a store is
+    # rebuilt on the same directory after a daemon crash/restart.
+    # "auto" = private tempdir (journaling on, restart resume opted out);
+    # a path = durable across restarts; None = the pre-journal in-memory
+    # pending map (A/B baseline). Only meaningful with async_writeback.
+    spill_dir: Optional[str] = "auto"
+    spill_segment_bytes: int = 64 * MB
+    spill_fsync: bool = False          # True: machine-crash durability
+    # temporary recovery placements (cache_put into the recovery group,
+    # §5.5.2) expire this many seconds after the session completes
+    recovery_retain_seconds: float = 60.0
     # ---- pipelined GET (§5.3.3 + readahead) ----------------------------
     # True: grouped SMS reads, then COS demand reads fan out concurrently
     # on a bounded I/O executor while fragments decode in ready-order
@@ -134,6 +162,8 @@ class StoreStats:
     prefetch_wasted: int = 0       # warmed chunks dropped unconsumed
     cos_fallback_reads: int = 0    # demand chunk reads sent to COS
     decode_batches: int = 0        # ready-order decode_many calls
+    spill_replayed_writes: int = 0  # journal records re-enqueued at open
+    spill_replayed_metas: int = 0   # metadata records restored at open
 
     @property
     def hit_ratio(self) -> float:
@@ -162,11 +192,33 @@ class InfiniStore:
         self.stats = StoreStats()
         self.rng = np.random.default_rng(seed)
         self._lock = threading.RLock()
+        # crash-consistent spill journal (§5.3.2): the writeback queue
+        # appends every enqueue here before the PUT acks; metadata
+        # records ("meta/<key>|<ver>") journal the table entry so a
+        # restarted daemon can serve replayed pending data. Journal seq
+        # of each live object version's metadata record, truncated when
+        # the version is superseded or the PUT aborts:
+        self._spill_meta_seqs: Dict[str, int] = {}
+        self.spill: Optional[SpillJournal] = None
+        self._spill_auto = False
+        spill_dir = cfg.spill_dir
+        if cfg.async_writeback and spill_dir is not None:
+            if spill_dir == "auto":
+                spill_dir = tempfile.mkdtemp(prefix="infinistore-spill-")
+                self._spill_auto = True
+            # group-commit mode: enqueues buffer their journal frames;
+            # the PUT path syncs ONCE at its ack point (one flush per
+            # PUT, not one per chunk record)
+            self.spill = SpillJournal(
+                spill_dir, segment_bytes=cfg.spill_segment_bytes,
+                fsync=cfg.spill_fsync, sync_each=False)
+        self.spill_dir = spill_dir if self.spill is not None else None
         self.writeback = WritebackQueue(
             self.cos, max_depth=cfg.writeback_depth,
             max_retries=cfg.writeback_retries,
             backoff_base_s=cfg.writeback_backoff_s,
-            start_thread=cfg.async_writeback)
+            start_thread=cfg.async_writeback,
+            spill=self.spill)
         # chunk key -> function id (the daemon's chunk-function mapping)
         self.chunk_map: Dict[str, int] = {}
         # daemon's piggybacked view of each function's insertion state
@@ -179,6 +231,8 @@ class InfiniStore:
         self.recovery = RecoveryManager(
             self.sms, self.cos, self.logs,
             num_recovery_functions=cfg.num_recovery_functions,
+            retain_seconds=cfg.recovery_retain_seconds,
+            clock=self.clock,
             writeback=self.writeback)
         self._pending_records: Dict[int, List[PutRecord]] = {}
         # the client-daemon thread: every mutating request runs here, in
@@ -203,6 +257,23 @@ class InfiniStore:
         # insertion-ordered de-dup set: bounded by the number of distinct
         # degraded chunks, not the read rate
         self._pending_migrations: Dict[str, None] = {}
+        # chunk journal records pre-appended by _put_fragments that have
+        # not yet been handed to the writeback queue (ckey -> seq); any
+        # left behind by a failed/aborted PUT are marked dead. Daemon-
+        # thread only.
+        self._spill_put_seqs: Dict[str, int] = {}
+        # fragment payload records: the journal holds each fragment's
+        # pre-EC payload ONCE (chunk records are tiny stubs replay
+        # re-encodes); the record lives until the persistent-buffer
+        # entry fully drains. In-flight (this PUT) vs committed:
+        self._spill_put_frag_seqs: Dict[str, int] = {}
+        self._spill_frag_seqs: Dict[str, int] = {}
+        # daemon-restart resume: replay journal records that survived a
+        # crash — metadata records restore the table, pending writes
+        # re-enter the queue (and thus the pending map, so GETs and
+        # RecoveryManager._download serve them like live pending data)
+        if self.spill is not None:
+            self._replay_spill()
 
     # ------------------------------------------------------------------
     # async plumbing
@@ -239,13 +310,146 @@ class InfiniStore:
     def close(self, *, flush: bool = True) -> bool:
         """Release the store's threads: drain the client-daemon executor
         FIRST (in-flight PUTs may still enqueue writebacks), then flush +
-        stop the writeback writer. Returns False if writes were left
-        unpersisted. The store must not be used afterwards."""
+        stop the writeback writer, the recovery pool, and COS. Returns
+        False if writes were left unpersisted. The store must not be
+        used afterwards."""
         self._exec.shutdown(wait=True)
         self._io.shutdown(wait=True)
         ok = self.writeback.close(flush=flush)
+        self.recovery.shutdown()
         self.cos.shutdown()
+        if self.spill is not None:
+            self.spill.close()
+            if self._spill_auto:
+                # private tempdir journal: a restart can't find it, so a
+                # graceful close reclaims it outright
+                shutil.rmtree(self.spill_dir, ignore_errors=True)
         return ok
+
+    def simulate_crash(self) -> Optional[str]:
+        """Drop the client daemon mid-flight WITHOUT flushing — the kill
+        half of the kill/restart durability tests. The queue, pending
+        map, persistent buffer, and metadata table are abandoned exactly
+        as a process crash would abandon them; the spill journal's
+        segments (and a disk-backed COS root) survive. Returns the
+        spill_dir so the caller can rebuild a store on it."""
+        self._exec.shutdown(wait=True, cancel_futures=True)
+        self._io.shutdown(wait=False, cancel_futures=True)
+        self.writeback.close(flush=False)
+        self.recovery.shutdown()
+        self.cos.shutdown()
+        if self.spill is not None:
+            # hard close: the journal's unsynced buffer tail is
+            # discarded, as a real SIGKILL would — only frames an
+            # ack-point sync() covered survive
+            self.spill.close(reclaim=False, hard=True)
+        return self.spill_dir
+
+    # ------------------------------------------------------------------
+    # spill journal: metadata records + restart replay (§5.3.2)
+    # ------------------------------------------------------------------
+
+    def _spill_journal_meta(self, key: str, c) -> None:
+        """Journal the committed metadata of one PUT ('meta/<key>|<ver>')
+        — appended at commit, after the version's fragment/stub frames
+        (replay does not depend on file order: metadata is restored
+        during the scan, chunks re-enqueue afterwards). The record lives
+        until the version is superseded — it is what makes an acked
+        object *resolvable* after a restart."""
+        obj = f"{key}|{c.ver}"
+        rec = json.dumps({"key": key, "ver": c.ver, "prev_ver": c.prev_ver,
+                          "num_fragments": c.num_fragments,
+                          "size": c.size}).encode()
+        seq = self.spill.append(f"meta/{obj}", rec)
+        with self._lock:
+            self._spill_meta_seqs[obj] = seq
+
+    def _spill_drop_meta(self, obj: str) -> None:
+        """Logically truncate a metadata record (version superseded, PUT
+        failed, or PUT aborted mid-flight)."""
+        if self.spill is None:
+            return
+        with self._lock:
+            seq = self._spill_meta_seqs.pop(obj, None)
+        if seq is not None:
+            self.spill.mark_persisted(seq)
+
+    def _replay_spill(self) -> None:
+        """Re-enqueue every journal record that survived the previous
+        daemon: metadata records rebuild the table (newest version wins
+        the head); fragment records restore their persistent-buffer
+        entries (one ref per surviving chunk stub) and are re-encoded —
+        deterministic RS — to regenerate each stub's chunk payload for
+        the queue; log/snapshot records re-enter the queue as-is. The
+        pending map + buffer then serve post-restart GETs and recovery
+        exactly like live pending data, and the background writer
+        persists everything to COS."""
+        frag_payloads: Dict[str, object] = {}
+        frag_seqs: Dict[str, int] = {}
+        stubs: Dict[str, List[Tuple[int, str]]] = {}  # fkey -> (seq, key)
+        for seq, key, data in self.spill.take_pending():
+            if key.startswith("meta/"):
+                self._spill_restore_meta(seq, data)
+            elif key.startswith("frag/"):
+                fkey = key[len("frag/"):]
+                frag_payloads[fkey] = data
+                frag_seqs[fkey] = seq
+            elif key.startswith("chunk/"):        # stub: payload derived
+                ckey = key[len("chunk/"):]
+                stubs.setdefault(ckey.rsplit("#", 1)[0],
+                                 []).append((seq, key))
+            else:
+                self.writeback.enqueue(key, data, seq=seq)
+                self.stats.spill_replayed_writes += 1
+        live = []                                 # (fkey, u8, stub items)
+        for fkey, seq in frag_seqs.items():
+            items = stubs.pop(fkey, [])
+            if not items:
+                # every chunk persisted pre-crash (their truncation
+                # frames made it, the fragment's did not): record is dead
+                self.spill.mark_persisted(seq)
+                continue
+            u8 = as_u8(frag_payloads[fkey])
+            # restore the buffer entry: one ref per outstanding chunk,
+            # released as each persists — the live draining contract
+            self.pb.create(fkey, u8, refs=len(items))
+            with self._lock:
+                self._spill_frag_seqs[fkey] = seq
+            live.append((fkey, u8, items))
+        for (fkey, u8, items), chunks in zip(
+                live, self.codec.encode_many([u for _, u, _ in live],
+                                             as_arrays=True)
+                if live else []):
+            for seq, cos_key in items:
+                idx = int(cos_key.rsplit("#", 1)[1])
+                self.writeback.enqueue(cos_key, chunks[idx].copy(),
+                                       seq=seq,
+                                       on_done=self._on_chunk_persisted)
+                self.stats.spill_replayed_writes += 1
+        for items in stubs.values():              # stubs whose fragment
+            for seq, _ in items:                  # is gone (corruption):
+                self.spill.mark_persisted(seq)    # unrecoverable, drop
+
+    def _spill_restore_meta(self, seq: int, data) -> None:
+        try:
+            d = json.loads(bytes(data))
+            key, ver = d["key"], int(d["ver"])
+            m = Meta(key, ver, int(d.get("prev_ver", 0)))
+            m.num_fragments = int(d.get("num_fragments", 1))
+            m.size = int(d.get("size", 0))
+        except (ValueError, KeyError, TypeError):
+            # malformed record: unrestorable — truncate it so it cannot
+            # pin its segment (and replay cost) forever
+            self.spill.mark_persisted(seq)
+            return
+        m.done(True)
+        self.mt.store(f"{key}|{ver}", m)
+        head = self.mt.load(key)
+        if head is None or head.ver <= ver:
+            self.mt.store(key, m)
+        with self._lock:
+            self._spill_meta_seqs[f"{key}|{ver}"] = seq
+        self.stats.spill_replayed_metas += 1
 
     def cos_keys(self, prefix: str = "") -> List[str]:
         """COS key listing that includes acked-but-not-yet-persisted
@@ -280,7 +484,13 @@ class InfiniStore:
         gb = slab.capacity / (1024 ** 3)
         self.ledger.invoke(category, gb=gb, seconds=busy)
         view = self.daemon_view.get(fid, Piggyback())
-        failed = self.recovery.check_failed(slab, view) or was_dead
+        detected = self.recovery.check_failed(slab, view)
+        if was_dead and not detected:
+            # observed-dead at invocation is a real detection even when
+            # term/hash happen to match (e.g. a never-written instance) —
+            # without this, stats.detections undercounts
+            self.recovery.note_detection()
+        failed = detected or was_dead
         if failed and view.term > 0 and self.cfg.enable_recovery:
             self._recover(fid)
 
@@ -433,22 +643,39 @@ class InfiniStore:
                 for fkey in fkeys:
                     if frag_failed:
                         self.pb.release_all(fkey)
-                    else:
-                        self.pb.release(fkey)     # drop the PUT's own ref
+                        self._spill_drop_frag(fkey)
+                    elif self.pb.release(fkey):   # drop the PUT's own ref
+                        self._spill_drop_frag(fkey)
                 ok = c.done(not frag_failed)
+                if ok and self.spill is not None:
+                    # journal the metadata AFTER the version's payload
+                    # frames (they were appended in _put_fragments): a
+                    # torn tail then can only lose the meta of a PUT
+                    # whose data frames are also gone — replay can never
+                    # restore a head version with no recoverable data,
+                    # which would shadow the older durable version
+                    self._spill_journal_meta(key, c)
                 if ok and c.prev_ver > 0:
                     self._gc_old_version(key, c.prev_ver)
                 out[key] = ver if ok else -1
+            if self.spill is not None:
+                # ACK DURABILITY POINT: group-commit every journal frame
+                # this batch appended (metadata + chunk + log records)
+                # before any caller observes the ack
+                self.spill.sync()
         except BaseException:
             # finalize every CAS-installed key that hasn't completed as
             # failed so no metadata head stays PENDING forever (readers
             # would block and later puts would raise on every attempt) —
             # covers CAS conflicts, encode/placement errors, MemoryError
-            for _, c, _, fkeys in metas:
+            self._spill_abort_chunks()    # never handed to the queue
+            for mkey, c, mver, fkeys in metas:
                 if not c.is_done():
                     for fkey in fkeys:
                         self.pb.release_all(fkey)
+                        self._spill_drop_frag(fkey)
                     c.done(False)
+                    self._spill_drop_meta(f"{mkey}|{mver}")
             for _, _, c in installed:
                 if not c.is_done():               # installed, not fragmented
                     c.done(False)
@@ -460,6 +687,7 @@ class InfiniStore:
     def _gc_old_version(self, key: str, ver: int) -> None:
         """Free the superseded version's SMS chunks (COS retains them for
         any concurrent reader still on the old version)."""
+        self._spill_drop_meta(f"{key}|{ver}")   # newer version journaled
         m = self.mt.load(f"{key}|{ver}")
         nfrags = m.num_fragments if m is not None else 1
         for fi in range(nfrags):
@@ -486,22 +714,45 @@ class InfiniStore:
 
     def _persist_chunk(self, fkey: str, ckey: str, chunk) -> None:
         """Route one chunk's COS persistence: inline on the ack path
-        (legacy mode) or via the background writeback queue."""
+        (legacy mode) or via the background writeback queue (handing
+        over the journal record _put_fragments pre-appended)."""
         self.ledger.cos_op("put")
         if self.cfg.async_writeback:
             self.pb.retain(fkey)
             self.writeback.enqueue(f"chunk/{ckey}", chunk,
+                                   seq=self._spill_put_seqs.pop(ckey, None),
                                    on_done=self._on_chunk_persisted)
         else:
             self.cos.put(f"chunk/{ckey}", chunk)
 
+    def _spill_abort_chunks(self) -> None:
+        """Kill pre-appended chunk/fragment journal records that were
+        never handed over (their fragment failed or the PUT aborted)."""
+        seqs, self._spill_put_seqs = self._spill_put_seqs, {}
+        fseqs, self._spill_put_frag_seqs = self._spill_put_frag_seqs, {}
+        if self.spill is not None:
+            for seq in list(seqs.values()) + list(fseqs.values()):
+                self.spill.mark_persisted(seq)
+
+    def _spill_drop_frag(self, fkey: str) -> None:
+        """The fragment's persistent-buffer entry fully drained (every
+        chunk persisted): truncate its journal payload record."""
+        if self.spill is None:
+            return
+        with self._lock:
+            seq = self._spill_frag_seqs.pop(fkey, None)
+        if seq is not None:
+            self.spill.mark_persisted(seq)
+
     def _on_chunk_persisted(self, cos_key: str, ok: bool) -> None:
-        """Writeback completion: drop the chunk's persistent-buffer ref.
+        """Writeback completion: drop the chunk's persistent-buffer ref
+        (the last drop also truncates the fragment's journal record).
         A write that exhausted its retries keeps the ref — the buffer
         stays the durable copy rather than silently losing data."""
         if ok:
             fkey = cos_key[len("chunk/"):].rsplit("#", 1)[0]
-            self.pb.release(fkey)
+            if self.pb.release(fkey):
+                self._spill_drop_frag(fkey)
 
     def _put_fragments(self, frags: List[Tuple[str, np.ndarray]]
                        ) -> Set[str]:
@@ -526,6 +777,24 @@ class InfiniStore:
                 # long-lived slab/COS chunk never pins the whole batch
                 groups.setdefault(fid, []).append((fkey, ckey,
                                                    chunk.copy()))
+        if self.spill is not None and self.cfg.async_writeback:
+            # journal each fragment's pre-EC payload ONCE (zero-copy u8
+            # view — the chunks are deterministically derivable) plus a
+            # tiny stub frame per chunk record, in one batched append.
+            # Replay re-encodes the fragment to regenerate stub chunks
+            # and restores the persistent-buffer entry. Stubs follow
+            # their fragment in the journal, so a torn tail can only
+            # cost stubs of the LAST (necessarily unacked) PUT its
+            # fragment record — acked data always survives.
+            ckeys = [ckey for items in groups.values()
+                     for _, ckey, _ in items]
+            seqs = self.spill.append_many(
+                [(f"frag/{fk}", frag) for fk, frag in frags]
+                + [(f"chunk/{ck}", b"") for ck in ckeys])
+            for (fkey, _), seq in zip(frags, seqs):
+                self._spill_put_frag_seqs[fkey] = seq
+            for ckey, seq in zip(ckeys, seqs[len(frags):]):
+                self._spill_put_seqs[ckey] = seq
         # phase 1: slab writes only, so a fragment can still fail before
         # anything about it becomes durable
         failed: Set[str] = set()
@@ -581,6 +850,25 @@ class InfiniStore:
                 slab.log_hash = log.last_hash
                 slab.diff_rank = log.diff_rank
                 self.daemon_view[fid] = log.piggyback()
+        # failed fragments' pre-appended journal records die here;
+        # surviving fragments' records commit (dropped when the buffer
+        # entry drains — _on_chunk_persisted / the ack-point release).
+        # Only the leftover CHUNK stubs are killed — _spill_abort_chunks
+        # would also void the surviving fragments' payload records,
+        # losing acked data on a crash (the mixed-failure-batch hole)
+        if self._spill_put_seqs:
+            seqs, self._spill_put_seqs = self._spill_put_seqs, {}
+            for seq in seqs.values():
+                self.spill.mark_persisted(seq)
+        if self._spill_put_frag_seqs:
+            frag_seqs, self._spill_put_frag_seqs = \
+                self._spill_put_frag_seqs, {}
+            for fkey, seq in frag_seqs.items():
+                if fkey in failed:
+                    self.spill.mark_persisted(seq)
+                else:
+                    with self._lock:
+                        self._spill_frag_seqs[fkey] = seq
         return failed
 
     # ------------------------------------------------------------------
@@ -1202,8 +1490,14 @@ class InfiniStore:
         self._warmup_tick()
         if self.cfg.async_writeback:
             self.writeback.drain(32)                  # §5.3.2 retry point
+        # expire temporary recovery placements past retain_seconds (§5.5.2)
+        self.recovery.sweep_expired(self.clock.now())
         # provider-side reclamation of long-idle instances
         self.sms.reclaim_idle(self.cfg.provider_idle_reclaim)
+        if self.spill is not None:
+            # group-commit any journal frames the tick produced
+            # (migration/compaction insertion-log appends)
+            self.spill.sync()
 
     def _warmup_tick(self) -> None:
         """No-op heartbeat per FMP: active buckets every active_warmup,
@@ -1248,7 +1542,9 @@ class InfiniStore:
                     "cos_fallback_reads": self.stats.cos_fallback_reads,
                     "decode_batches": self.stats.decode_batches,
                     "pending_migrations": len(self._pending_migrations),
-                    "prefetch": self.prefetcher.snapshot()}}
+                    "prefetch": self.prefetcher.snapshot()},
+                "spill": self.spill.snapshot()
+                if self.spill is not None else None}
 
 
 class ConcurrentPutError(RuntimeError):

@@ -159,15 +159,19 @@ class PersistentBuffer:
             if e is not None:
                 e.refs += 1
 
-    def release(self, key: str) -> None:
-        """Drop one ref; the entry is freed when the last ref drops."""
+    def release(self, key: str) -> bool:
+        """Drop one ref; the entry is freed when the last ref drops.
+        Returns True exactly when this call freed the entry (the spill
+        journal truncates the fragment record on that edge)."""
         with self._lock:
             e = self._buf.get(key)
             if e is None:
-                return
+                return False
             e.refs -= 1
             if e.refs <= 0:
                 self._buf.pop(key, None)
+                return True
+            return False
 
     def release_all(self, key: str) -> None:
         """Force-drop the entry regardless of refcount (failure paths)."""

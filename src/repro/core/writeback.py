@@ -17,6 +17,15 @@ the persistent buffer" contract at chunk granularity.
 Bounded depth gives backpressure (enqueue blocks when the queue is
 full), failures retry with exponential backoff, and `flush()` is the
 barrier checkpoint/shutdown paths use.
+
+With a `SpillJournal` attached, every enqueue is appended to the
+durable journal BEFORE it enters the queue (so before any ack), and the
+record is logically truncated when the write persists or is superseded
+— a write that exhausts its retries stays journaled so a daemon restart
+retries it. That closes the crash hole in the pure in-memory pending
+map: a client-daemon crash no longer loses acked-but-unpersisted
+writes; the constructing store replays the journal and re-enqueues them
+(passing the original `seq` so nothing is double-journaled).
 """
 from __future__ import annotations
 
@@ -60,6 +69,7 @@ class _Task:
     on_done: Optional[Callable[[str, bool], None]] = None
     attempts: int = 0
     not_before: float = 0.0           # wall time; retry backoff gate
+    seq: Optional[int] = None         # spill-journal record to truncate
 
 
 class WritebackQueue:
@@ -68,8 +78,11 @@ class WritebackQueue:
 
     def __init__(self, cos, *, max_depth: int = 256, max_retries: int = 8,
                  backoff_base_s: float = 0.005, backoff_cap_s: float = 0.5,
-                 start_thread: bool = True):
+                 start_thread: bool = True, spill=None):
         self.cos = cos
+        # optional SpillJournal: enqueues are journaled before ack and
+        # truncated on persistence (crash-consistent pending map)
+        self.spill = spill
         self.max_depth = max_depth
         self.max_retries = max_retries
         self.backoff_base_s = backoff_base_s
@@ -97,14 +110,19 @@ class WritebackQueue:
     # ---- producer side ----------------------------------------------------
 
     def enqueue(self, key: str, data, *,
-                on_done: Optional[Callable[[str, bool], None]] = None
-                ) -> None:
+                on_done: Optional[Callable[[str, bool], None]] = None,
+                seq: Optional[int] = None) -> None:
         """Queue one COS write. Blocks while the queue is at max_depth
-        (backpressure); the pending map serves reads immediately."""
+        (backpressure); the pending map serves reads immediately. With a
+        spill journal the write is made durable-on-disk FIRST (so before
+        the caller can ack); `seq` is passed by the restart replay path
+        for records already journaled."""
+        if self.spill is not None and seq is None:
+            seq = self.spill.append(key, data)
         with self._lock:
             while len(self._q) >= self.max_depth and not self._stop:
                 self._not_full.wait(timeout=0.1)
-            self._q.append(_Task(key, data, on_done))
+            self._q.append(_Task(key, data, on_done, seq=seq))
             self._pending[key] = data
             self.stats.enqueued += 1
             self.stats.peak_depth = max(self.stats.peak_depth,
@@ -219,11 +237,15 @@ class WritebackQueue:
         return None
 
     def _finalize(self, task: _Task, ok: bool, err: Optional[str]) -> None:
+        truncate = None
         with self._lock:
             self._inflight -= 1
             if ok or task.attempts > self.max_retries:
                 if ok:
                     self.stats.persisted += 1
+                    # journal truncation on persistence; a PERMANENT
+                    # failure keeps its record so a restart retries it
+                    truncate = task.seq
                 else:
                     self.stats.failures += 1
                     self._errors.append(f"{task.key}: {err}")
@@ -246,6 +268,8 @@ class WritebackQueue:
                 done = None
             if not self._q and not self._inflight:
                 self._idle.notify_all()
+        if truncate is not None and self.spill is not None:
+            self.spill.mark_persisted(truncate)
         if done is not None:
             done(task.key, ok)
 
@@ -262,6 +286,8 @@ class WritebackQueue:
                 if not self._q and not self._inflight:
                     self._idle.notify_all()
         if superseded:
+            if task.seq is not None and self.spill is not None:
+                self.spill.mark_persisted(task.seq)   # logically dead
             if task.on_done is not None:
                 task.on_done(task.key, True)
             return

@@ -77,6 +77,20 @@ def test_warmup_period_by_state():
     assert w.warmup_period(1) is None          # released
 
 
+def test_run_gc_never_duplicates_buckets():
+    """Regression: run_gc used to end with a guarded re-append of the
+    new bucket that would have duplicated it had it ever fired."""
+    w, clock = make_window(M=1, N=1, interval=10.0)
+    for step in range(8):
+        w.latest.add_function(step, step)
+        clock.advance(10.0)
+        w.run_gc()
+        ids = [id(b) for b in w._buckets]
+        assert len(ids) == len(set(ids))           # no duplicate objects
+        indexes = [b.index for b in w._buckets]
+        assert len(indexes) == len(set(indexes))   # no duplicate indexes
+
+
 def test_state_of_function_latest_wins():
     w, clock = make_window()
     w.latest.add_function(3, 0)

@@ -91,3 +91,66 @@ def test_recovered_data_served_during_recovery():
     st.inject_failure(fid)
     st.get("o5")
     assert st.recovery.stats.chunks_recovered > 0
+
+
+def test_temporary_placements_expire_after_retain_seconds():
+    """§5.5.2: recovery-group cache placements are TEMPORARY — after
+    retain_seconds the gc_tick sweep evicts them and drops the finished
+    session."""
+    cfg = StoreConfig(ec=ECConfig(k=4, p=2),
+                      function_capacity=64 * 1024 * 1024,
+                      gc=GCConfig(gc_interval=1e9),
+                      num_recovery_functions=4,
+                      recovery_retain_seconds=30.0)
+    clock = Clock()
+    st = InfiniStore(cfg, clock=clock)
+    rng = np.random.default_rng(2)
+    payloads = {f"o{i}": rng.bytes(20_000) for i in range(40)}
+    for k, v in payloads.items():
+        st.put(k, v)
+    st.flush_writeback()
+    fid = st.chunk_map["o0|1/f0#0"]
+    st.inject_failure(fid)
+    assert st.get("o0") == payloads["o0"]         # parallel recovery
+    session = st.recovery.sessions[fid]
+    assert session.done and session.placements
+    rfid, ckey = session.placements[0]
+    assert st.sms.get(rfid).cache.get(ckey) is not None
+    st.gc_tick()                                  # before expiry: retained
+    assert fid in st.recovery.sessions
+    clock.advance(31.0)
+    st.gc_tick()                                  # past retain_seconds
+    assert fid not in st.recovery.sessions        # session dropped
+    for rfid2, ckey2 in session.placements:
+        assert st.sms.get(rfid2).cache.get(ckey2) is None
+    # the restored storage function still serves the data
+    assert st.get("o0") == payloads["o0"]
+
+
+def test_close_shuts_down_recovery_pool():
+    """InfiniStore.close() must release the recovery worker threads (it
+    used to leak up to 8 recovery-* threads per store)."""
+    st = big_store(num_recovery=2)
+    # force the pool to actually spin up workers
+    st.recovery._pool.submit(lambda: None).result()
+    workers = list(st.recovery._pool._threads)
+    assert workers and any(t.is_alive() for t in workers)
+    st.close()
+    assert st.recovery._pool._shutdown
+    assert not any(t.is_alive() for t in workers)
+
+
+def test_was_dead_invoke_counts_as_detection():
+    """A reclaimed instance observed dead at invocation is a real
+    detection even when term/hash match (nothing was ever appended) —
+    the was_dead path used to bypass stats.detections."""
+    st = big_store()
+    st.put("a", b"x" * 20_000)
+    fid = next(iter(st.sms.slabs))
+    st.inject_failure(fid)
+    # daemon view agrees with the zeroed slab: check_failed sees nothing
+    from repro.core.insertion_log import Piggyback
+    st.daemon_view[fid] = Piggyback()
+    before = st.recovery.stats.detections
+    st._invoke(fid, 0, "request")
+    assert st.recovery.stats.detections == before + 1

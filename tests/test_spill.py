@@ -1,0 +1,401 @@
+"""Crash-consistent writeback spill journal (paper §5.3.2 durability):
+SpillJournal framing/truncation/rotation unit semantics, and the
+store-level kill/restart contract — a daemon crash between ack and COS
+persistence must lose nothing once the store is rebuilt on the same
+spill_dir, including when the crash tore the tail record."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Clock, InfiniStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+from repro.core.spill import SpillJournal
+
+MB = 1024 * 1024
+
+
+def make_store(spill_dir, **kw):
+    cfg = StoreConfig(ec=ECConfig(k=4, p=2),
+                      function_capacity=8 * MB,
+                      fragment_bytes=1 * MB,
+                      gc=GCConfig(gc_interval=1e9),
+                      num_recovery_functions=4,
+                      spill_dir=spill_dir, **kw)
+    return InfiniStore(cfg, clock=Clock())
+
+
+def newest_segment(d):
+    segs = sorted(p for p in os.listdir(d) if p.endswith(".wal"))
+    assert segs, f"no segments in {d}"
+    return os.path.join(d, segs[-1])
+
+
+# ---------------------------------------------------------------------------
+# SpillJournal unit semantics
+# ---------------------------------------------------------------------------
+
+def test_journal_append_replay_roundtrip(tmp_path):
+    j = SpillJournal(tmp_path)
+    s1 = j.append("a", b"payload-a")
+    s2 = j.append("b", np.frombuffer(b"payload-b", np.uint8))  # array path
+    assert s2 > s1
+    j.close(reclaim=False)
+    j2 = SpillJournal(tmp_path)
+    got = j2.take_pending()
+    assert [(k, bytes(p)) for _, k, p in got] == \
+        [("a", b"payload-a"), ("b", b"payload-b")]
+    assert j2.stats.replayed_records == 2
+
+
+def test_journal_mark_persisted_truncates(tmp_path):
+    j = SpillJournal(tmp_path)
+    s1 = j.append("a", b"1")
+    j.append("b", b"2")
+    assert j.mark_persisted(s1)
+    assert not j.mark_persisted(s1)              # idempotent no-op
+    j.close(reclaim=False)
+    j2 = SpillJournal(tmp_path)
+    assert [k for _, k, _ in j2.take_pending()] == ["b"]
+
+
+def test_journal_fully_persisted_reclaims_disk(tmp_path):
+    j = SpillJournal(tmp_path)
+    seqs = [j.append(f"k{i}", b"x" * 1000) for i in range(4)]
+    for s in seqs:
+        j.mark_persisted(s)
+    # nothing live: the active segment is truncated in place
+    assert j.pending_count == 0
+    assert os.path.getsize(newest_segment(tmp_path)) == 0
+    j.close()                                    # graceful: files deleted
+    assert [p for p in os.listdir(tmp_path) if p.endswith(".wal")] == []
+
+
+def test_journal_torn_tail_rejected_by_checksum(tmp_path):
+    j = SpillJournal(tmp_path)
+    j.append("good", b"g" * 500)
+    j.append("torn", b"t" * 500)
+    j.close(reclaim=False)
+    seg = newest_segment(tmp_path)
+    with open(seg, "r+b") as f:                  # crash mid-append: tear
+        f.truncate(os.path.getsize(seg) - 7)     # the tail record
+    j2 = SpillJournal(tmp_path)
+    assert [k for _, k, _ in j2.take_pending()] == ["good"]
+    assert j2.stats.torn_records == 1
+
+
+def test_journal_corrupt_payload_rejected_by_crc(tmp_path):
+    j = SpillJournal(tmp_path)
+    j.append("k", b"A" * 256)
+    j.close(reclaim=False)
+    seg = newest_segment(tmp_path)
+    with open(seg, "r+b") as f:                  # flip one payload byte
+        f.seek(os.path.getsize(seg) - 10)
+        f.write(b"Z")
+    j2 = SpillJournal(tmp_path)
+    assert j2.take_pending() == []
+    assert j2.stats.torn_records == 1
+
+
+def test_journal_segment_rotation_and_reclaim(tmp_path):
+    j = SpillJournal(tmp_path, segment_bytes=4096, compact_below=0)
+    seqs = [j.append(f"k{i}", b"d" * 2000) for i in range(8)]
+    assert j.stats.segments_created >= 3         # rotated several times
+    for s in seqs[:6]:
+        j.mark_persisted(s)
+    assert j.stats.segments_reclaimed >= 2       # drained segments deleted
+    j.close(reclaim=False)
+    j2 = SpillJournal(tmp_path)
+    assert [k for _, k, _ in j2.take_pending()] == ["k6", "k7"]
+
+
+def test_journal_same_key_append_supersedes(tmp_path):
+    j = SpillJournal(tmp_path)
+    j.append("k", b"v1")
+    j.append("k", b"v2")
+    assert j.pending_count == 1
+    j.close(reclaim=False)
+    j2 = SpillJournal(tmp_path)
+    assert [(k, bytes(p)) for _, k, p in j2.take_pending()] == [("k", b"v2")]
+
+
+def test_journal_compaction_rewrites_pinned_segment(tmp_path):
+    # a sealed segment pinned by one tiny live record is rewritten into
+    # the active segment and its file reclaimed
+    j = SpillJournal(tmp_path, segment_bytes=4096, compact_below=200)
+    big = [j.append("big0", b"B" * 1800), j.append("big1", b"B" * 1800)]
+    j.append("tiny", b"t" * 16)
+    big.append(j.append("big2", b"B" * 1800))    # crosses 4096: seals seg 1
+    for s in big:
+        j.mark_persisted(s)                      # leaves tiny pinning it
+    assert j.stats.segments_compacted >= 1
+    j.close(reclaim=False)
+    j2 = SpillJournal(tmp_path)
+    assert [(k, bytes(p)) for _, k, p in j2.take_pending()] == \
+        [("tiny", b"t" * 16)]
+
+
+def test_journal_hard_close_discards_unsynced_tail(tmp_path):
+    """Group-commit crash realism: frames appended after the last sync()
+    barrier live in the writer buffer; a hard close (SIGKILL stand-in)
+    must lose exactly those — and only those."""
+    j = SpillJournal(tmp_path, sync_each=False)
+    j.append("acked", b"A" * 500)
+    j.sync()                                     # the ack barrier
+    j.append("unacked", b"U" * 500)              # buffered, never synced
+    j.close(reclaim=False, hard=True)
+    j2 = SpillJournal(tmp_path)
+    assert [k for _, k, _ in j2.take_pending()] == ["acked"]
+
+
+# ---------------------------------------------------------------------------
+# store-level kill/restart durability
+# ---------------------------------------------------------------------------
+
+def put_acked_unpersisted(st, n=5, nbytes=150_000, seed=0):
+    """Acked writes held pre-persistence: pause the writer, PUT, verify
+    COS is empty."""
+    st.writeback.pause()
+    rng = np.random.default_rng(seed)
+    objs = {f"k{i}": rng.bytes(nbytes) for i in range(n)}
+    for k, v in objs.items():
+        assert st.put(k, v) == 1                 # ack point
+    assert st.cos.list_keys("chunk/") == []      # nothing persisted
+    return objs
+
+
+def test_daemon_crash_loses_no_acked_writes(tmp_path):
+    st = make_store(str(tmp_path))
+    objs = put_acked_unpersisted(st)
+    spill_dir = st.simulate_crash()              # queue + daemon dropped
+    st2 = make_store(spill_dir)
+    assert st2.stats.spill_replayed_writes > 0
+    assert st2.stats.spill_replayed_metas == len(objs)
+    # replayed pending data serves post-restart GETs like live pending
+    for k, v in objs.items():
+        assert st2.get(k) == v, f"lost {k} across daemon restart"
+    # ... and eventually becomes COS-persistent
+    assert st2.flush_writeback(timeout=30.0)
+    assert len(st2.cos.list_keys("chunk/")) == len(objs) * st2.cfg.ec.n
+    for k, v in objs.items():
+        assert st2.get(k) == v
+    st2.close()
+
+
+def test_daemon_crash_with_torn_tail_record(tmp_path):
+    """A torn tail frame is rejected by checksum and costs AT MOST the
+    final PUT — the one whose frames a real crash could actually tear
+    mid-append, i.e. one that never acked (the ack-point sync() flushes
+    every frame first). All earlier acked PUTs replay intact."""
+    st = make_store(str(tmp_path))
+    objs = put_acked_unpersisted(st)             # k0..k4, journaled order
+    spill_dir = st.simulate_crash()
+    seg = newest_segment(spill_dir)
+    with open(seg, "r+b") as f:                  # tear into the tail: the
+        f.truncate(os.path.getsize(seg) - 13)    # last PUT's meta frame
+    st2 = make_store(spill_dir)
+    assert st2.spill.stats.torn_records == 1
+    for k, v in objs.items():
+        if k == "k4":
+            continue                             # the torn-into PUT
+        assert st2.get(k) == v, f"lost {k} to the torn tail"
+    # the torn PUT is dropped CLEANLY: no half-restored version
+    assert st2.get("k4") is None
+    assert st2.flush_writeback(timeout=30.0)
+    for k, v in objs.items():
+        if k != "k4":
+            assert st2.get(k) == v
+    st2.close()
+
+
+def test_replayed_pending_feeds_recovery_download(tmp_path):
+    """RecoveryManager._download must see replayed pending chunks (the
+    pending map read-through) exactly like live pending chunks."""
+    st = make_store(str(tmp_path))
+    put_acked_unpersisted(st, n=2)
+    pending = [k[len("chunk/"):] for k in st.writeback.pending_keys()
+               if k.startswith("chunk/")]
+    spill_dir = st.simulate_crash()
+    # hold the new store's writer from the instant replay fills the
+    # queue, so nothing persists before the assertion (determinism)
+    orig = InfiniStore._replay_spill
+
+    def pause_then_replay(self):
+        self.writeback.pause()
+        orig(self)
+    InfiniStore._replay_spill = pause_then_replay
+    try:
+        st2 = make_store(spill_dir)
+    finally:
+        InfiniStore._replay_spill = orig
+    got = st2.recovery._download(pending)
+    assert set(got) == set(pending)              # COS has none of these
+    assert st2.cos.list_keys("chunk/") == []
+    st2.writeback.resume()
+    st2.close(flush=False)
+
+
+def test_graceful_close_then_restart_serves_from_cos(tmp_path):
+    """Metadata records outlive chunk persistence: after flush + close,
+    a store rebuilt on the same spill_dir + cos_root resolves the object
+    from the journaled metadata and reads chunks back from COS."""
+    spill_dir, cos_root = str(tmp_path / "spill"), str(tmp_path / "cos")
+    cfg = StoreConfig(ec=ECConfig(k=4, p=2), function_capacity=8 * MB,
+                      fragment_bytes=1 * MB, gc=GCConfig(gc_interval=1e9),
+                      num_recovery_functions=4, spill_dir=spill_dir)
+    st = InfiniStore(cfg, clock=Clock(), cos_root=cos_root)
+    data = np.random.default_rng(3).bytes(200_000)
+    st.put("x", data)
+    assert st.close()                            # flushes, keeps metadata
+    cfg2 = StoreConfig(ec=ECConfig(k=4, p=2), function_capacity=8 * MB,
+                       fragment_bytes=1 * MB, gc=GCConfig(gc_interval=1e9),
+                       num_recovery_functions=4, spill_dir=spill_dir)
+    st2 = InfiniStore(cfg2, clock=Clock(), cos_root=cos_root)
+    assert st2.stats.spill_replayed_metas == 1
+    assert st2.stats.spill_replayed_writes == 0  # all chunks persisted
+    assert st2.cos.exists("chunk/x|1/f0#0")      # restart adoption
+    assert st2.get("x") == data                  # COS fallback reads
+    st2.close()
+
+
+def test_flush_truncates_chunk_records(tmp_path):
+    st = make_store(str(tmp_path))
+    st.put("x", b"q" * 200_000)
+    assert st.flush_writeback(timeout=30.0)
+    # only the live version's metadata record stays journaled
+    assert st.spill.pending_keys() == ["meta/x|1"]
+    st.close(flush=False)
+
+
+def test_version_supersession_truncates_old_meta(tmp_path):
+    st = make_store(str(tmp_path))
+    st.writeback.pause()
+    st.put("k", b"a" * 50_000)
+    st.put("k", b"b" * 50_000)                   # supersedes version 1
+    metas = [k for k in st.spill.pending_keys() if k.startswith("meta/")]
+    assert metas == ["meta/k|2"]                 # v1 meta truncated
+    spill_dir = st.simulate_crash()
+    st2 = make_store(spill_dir)
+    assert st2.get("k") == b"b" * 50_000         # newest version wins
+    assert st2.flush_writeback(timeout=30.0)
+    assert st2.get("k") == b"b" * 50_000
+    st2.close(flush=False)
+
+
+def test_meta_journals_after_payload_frames(tmp_path):
+    """Ordering regression: the meta record must be appended AFTER its
+    version's fragment/stub frames, so a torn tail can never restore a
+    head version whose data frames were lost (which would shadow the
+    older durable version)."""
+    st = make_store(str(tmp_path))
+    st.writeback.pause()
+    st.put("k", b"d" * 100_000)
+    seq_of = {r.key: s for s, r in st.spill._records.items()}
+    payload_seqs = [s for k, s in seq_of.items()
+                    if k.startswith(("frag/", "chunk/"))]
+    assert payload_seqs and seq_of["meta/k|1"] > max(payload_seqs)
+    st.writeback.resume()
+    st.close()
+
+
+def test_mixed_failure_batch_keeps_surviving_frag_records(tmp_path):
+    """Regression: a batch where ONE key's fragment fails must kill only
+    that fragment's journal records — the surviving key's fragment
+    payload record stays live (else a crash loses acked data)."""
+    from repro.core.sms import Slab
+    st = make_store(str(tmp_path))
+    st.writeback.pause()
+    orig = Slab.store
+
+    def selective(self, key, data):
+        if isinstance(key, str) and key.startswith("bad|"):
+            return False                         # slab refuses bad's chunks
+        return orig(self, key, data)
+    Slab.store = selective
+    try:
+        out = st.put_many({"good": b"g" * 100_000, "bad": b"b" * 100_000})
+    finally:
+        Slab.store = orig
+    assert out["good"] == 1 and out["bad"] == -1
+    keys = st.spill.pending_keys()
+    assert "frag/good|1/f0" in keys              # survivor journaled
+    assert "meta/good|1" in keys
+    assert "frag/bad|1/f0" not in keys           # failed fragment dead
+    assert not any(k.startswith("chunk/bad|") for k in keys)
+    assert not any(k.startswith("meta/bad") for k in keys)
+    # and the survivor replays after a crash
+    spill_dir = st.simulate_crash()
+    st2 = make_store(spill_dir)
+    assert st2.get("good") == b"g" * 100_000
+    st2.close(flush=False)
+
+
+def test_spill_dir_none_restores_memory_only_behavior():
+    st = make_store(None)
+    assert st.spill is None and st.spill_dir is None
+    assert st.writeback.spill is None
+    st.writeback.pause()
+    st.put("x", b"m" * 100_000)
+    assert st.get("x") == b"m" * 100_000         # pending map still serves
+    st.writeback.resume()
+    assert st.flush_writeback(timeout=30.0)
+    st.close()
+
+
+def test_auto_spill_dir_created_and_reclaimed_on_close():
+    st = make_store("auto")
+    d = st.spill_dir
+    assert d is not None and os.path.isdir(d)
+    st.put("x", b"z" * 50_000)
+    st.close()
+    assert not os.path.exists(d)                 # tempdir reclaimed
+
+
+def test_ack_journals_before_return(tmp_path):
+    """The durability point: by the time put() returns, the journal
+    holds the object's metadata and every chunk + log write."""
+    st = make_store(str(tmp_path))
+    st.writeback.pause()
+    st.put("obj", b"d" * 120_000)
+    keys = st.spill.pending_keys()
+    assert "meta/obj|1" in keys
+    assert sum(k.startswith("chunk/obj|1") for k in keys) == st.cfg.ec.n
+    assert any(k.startswith("ilog/") for k in keys)
+    st.writeback.resume()
+    assert st.flush_writeback(timeout=30.0)
+    st.close()
+
+
+def test_failed_writeback_stays_journaled(tmp_path):
+    """A write that exhausts its retries keeps its journal record — the
+    restart, not /dev/null, owns it."""
+    st = make_store(str(tmp_path), writeback_retries=1)
+    st.writeback.pause()
+    st.put("x", b"w" * 100_000)
+    boom = RuntimeError("simulated COS outage")
+
+    def failing_put(key, data):
+        raise boom
+    st.cos.put = failing_put
+    st.writeback.resume()
+    assert st.flush_writeback(timeout=30.0) is False
+    assert st.writeback.stats.failures > 0
+    keys = st.spill.pending_keys()
+    # the fragment payload stays journaled (its buffer entry never
+    # drained), and every failed queue task keeps its own record
+    assert "frag/x|1/f0" in keys
+    failed = [k for k in keys if not k.startswith(("meta/", "frag/"))]
+    assert len(failed) == st.writeback.stats.failures
+    st.close(flush=False)
+
+
+def test_snapshot_metadata_surfaces_spill(tmp_path):
+    st = make_store(str(tmp_path))
+    st.put("x", b"s" * 50_000)
+    snap = st.snapshot_metadata()["spill"]
+    assert snap["appends"] > 0
+    assert snap["dir"] == str(tmp_path)
+    st.close()
+    assert make_store(None).snapshot_metadata()["spill"] is None
