@@ -40,6 +40,13 @@ from typing import Dict, Optional, Tuple
 from repro.core.clock import Clock
 from repro.core.payload import payload_nbytes
 
+# Negative-lookup cache bounds for the daemon-restart disk-adoption
+# probe: absent keys are re-stat'd at most once per TTL (wall time), so
+# an external writer sharing cos_root is seen within a TTL; the map is
+# capped so miss-heavy scans cannot grow it without bound.
+NEG_PROBE_TTL_S = 1.0
+NEG_PROBE_CAP = 65536
+
 
 @dataclass
 class COSStats:
@@ -68,6 +75,15 @@ class COS:
             self.root.mkdir(parents=True, exist_ok=True)
         self._mem: Dict[str, bytes] = {}
         self._visible_at: Dict[str, float] = {}
+        # key -> clock time of a daemon-restart disk probe that found it
+        # absent: the adoption check stats the filesystem at most once
+        # per key per NEG_PROBE_TTL_S, so hot miss loops (consistency-
+        # increasing GET retries, visibility-lag polls) don't hit the
+        # disk under the lock on every poll. Entries expire (another
+        # process may share cos_root and write the key later) and the
+        # map is capped (miss-heavy scans must not leak); this process's
+        # own put() clears its entry immediately.
+        self._probed_absent: Dict[str, float] = {}
         self._lock = threading.RLock()
         self.stats = COSStats()
         self.put_delay_base_s = put_delay_base_s
@@ -82,6 +98,31 @@ class COS:
     def _path(self, key: str) -> Path:
         h = hashlib.sha1(key.encode()).hexdigest()
         return self.root / h[:2] / h[2:]
+
+    def _adopt_locked(self, key: str) -> Optional[float]:
+        """Daemon-restart path (caller holds the lock): an object this
+        process never put may still exist on disk, persisted by a
+        previous process — its put predates this one, so any visibility
+        lag has long elapsed; adopt it as visible. The disk probe runs
+        at most once per absent key per TTL (see `_probed_absent`)."""
+        if self.root is None:
+            return None
+        # TTL on wall time, NOT self.clock: the logical clock only moves
+        # when a test advances it, which would freeze the TTL and hide
+        # an external writer's key forever.
+        now = time.monotonic()
+        probed = self._probed_absent.get(key)
+        if probed is not None and now - probed < NEG_PROBE_TTL_S:
+            return None
+        if self._path(key).exists():
+            self._probed_absent.pop(key, None)
+            vis = self.clock.now()
+            self._visible_at[key] = vis
+            return vis
+        if len(self._probed_absent) >= NEG_PROBE_CAP:
+            self._probed_absent.clear()
+        self._probed_absent[key] = now
+        return None
 
     def put(self, key: str, data) -> None:
         n = payload_nbytes(data)
@@ -101,6 +142,7 @@ class COS:
             self.stats.bytes_in += n
             if not self.root:
                 self._mem[key] = data
+            self._probed_absent.pop(key, None)
             self._visible_at[key] = self.clock.now() + self.visibility_lag
 
     def get(self, key: str):
@@ -109,12 +151,8 @@ class COS:
         with self._lock:
             self.stats.gets += 1
             vis = self._visible_at.get(key)
-            if vis is None and self.root and self._path(key).exists():
-                # daemon-restart path: the object was persisted by a
-                # previous process (its put predates this one, so any
-                # visibility lag has long elapsed) — adopt it as visible
-                vis = self.clock.now()
-                self._visible_at[key] = vis
+            if vis is None:
+                vis = self._adopt_locked(key)
             if vis is None or self.clock.now() < vis:
                 self.stats.get_misses += 1
                 return None
@@ -139,10 +177,8 @@ class COS:
     def exists(self, key: str) -> bool:
         with self._lock:
             vis = self._visible_at.get(key)
-            if vis is None and self.root and self._path(key).exists():
-                # same daemon-restart adoption as get()
-                vis = self.clock.now()
-                self._visible_at[key] = vis
+            if vis is None:
+                vis = self._adopt_locked(key)
             return vis is not None and self.clock.now() >= vis
 
     def delete(self, key: str) -> None:

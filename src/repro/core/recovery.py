@@ -76,6 +76,10 @@ class RecoveryManager:
         # function each, §5.5.2 phase 1)
         self._busy_recovery: Set[int] = set()
         self.sessions: Dict[int, RecoverySession] = {}
+        # sessions displaced from `sessions` by a same-fid re-failure
+        # while still running: their placements are still being
+        # appended, so they are parked here and swept once done
+        self._orphans: List[RecoverySession] = []
 
     def _now(self) -> float:
         return self.clock.now() if self.clock is not None \
@@ -195,7 +199,24 @@ class RecoveryManager:
         session = RecoverySession(fid=slab.fid, group=group,
                                   pending=set(missing))
         with self._lock:
+            # a prior session for this fid (re-failure inside
+            # retain_seconds) leaves the dict here and would never be
+            # swept — evict its temporary placements now. If it is
+            # still RUNNING its workers are still appending placements
+            # (an eviction now would miss the later ones): park it on
+            # the orphan list for sweep_expired instead.
+            prior = self.sessions.get(slab.fid)
+            prior_placements: List[tuple] = []
+            if prior is not None:
+                if prior.done:
+                    prior_placements = list(prior.placements)
+                else:
+                    self._orphans.append(prior)
             self.sessions[slab.fid] = session
+        for rfid, key in prior_placements:
+            rslab = self.sms.slabs.get(rfid)
+            if rslab is not None:
+                rslab.cache_delete(key)
 
         def worker(i: int) -> Dict[str, bytes]:
             mine = [k for k in missing if _chunk_shard(k, R) == i]
@@ -254,6 +275,14 @@ class RecoveryManager:
                        if s.done and s.completed_at is not None
                        and now - s.completed_at >= self.retain_seconds]
             swept = [self.sessions.pop(fid) for fid in expired]
+            keep: List[RecoverySession] = []
+            for s in self._orphans:           # displaced sessions expire
+                if s.done and s.completed_at is not None \
+                        and now - s.completed_at >= self.retain_seconds:
+                    swept.append(s)
+                else:
+                    keep.append(s)
+            self._orphans = keep
         for session in swept:
             for rfid, key in session.placements:
                 rslab = self.sms.slabs.get(rfid)

@@ -87,6 +87,8 @@ class Slab:
             self.alive = False
             self.storage.clear()
             self.cache.clear()
+            self.stats.stored_bytes = 0
+            self.stats.cached_bytes = 0
             self.term = 0
             self.log_hash = ""
             self.diff_rank = 0
@@ -129,8 +131,15 @@ class Slab:
 
     def delete(self, key: str) -> bool:
         with self._lock:
-            return self.storage.pop(key, None) is not None \
-                or self.cache.pop(key, None) is not None
+            if self.storage.pop(key, None) is not None:
+                self.stats.stored_bytes = self.used
+                return True
+            v = self.cache.pop(key, None)
+            if v is None:
+                return False
+            self.stats.cached_bytes = max(
+                0, self.stats.cached_bytes - _nbytes(v))
+            return True
 
     # ---- cache space (demand-cached chunks, §5.3.3/§5.4) --------------------
 
@@ -154,13 +163,19 @@ class Slab:
         """Drop a cache-space entry WITHOUT touching the storage
         partition (expired temporary recovery placements, §5.5.2)."""
         with self._lock:
-            return self.cache.pop(key, None) is not None
+            v = self.cache.pop(key, None)
+            if v is None:
+                return False
+            self.stats.cached_bytes = max(
+                0, self.stats.cached_bytes - _nbytes(v))
+            return True
 
     def _evict_cache(self, needed: int) -> None:
         freed = 0
         while self.cache and freed < needed:
             _, v = self.cache.popitem(last=False)
             freed += _nbytes(v)
+        self.stats.cached_bytes = max(0, self.stats.cached_bytes - freed)
 
     def keys(self) -> Iterable[str]:
         with self._lock:

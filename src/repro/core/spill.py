@@ -67,6 +67,11 @@ import os
 import struct
 import threading
 import zlib
+
+try:
+    import fcntl                         # POSIX advisory locks
+except ImportError:                      # pragma: no cover - non-POSIX
+    fcntl = None
 from collections import deque
 from dataclasses import dataclass
 from pathlib import Path
@@ -169,6 +174,23 @@ class SpillJournal:
                  sync_each: bool = True, async_writer: bool = False):
         self.dir = Path(path)
         self.dir.mkdir(parents=True, exist_ok=True)
+        # inter-process exclusivity: two journals on the same directory
+        # (a restart racing a not-yet-dead daemon) would both replay and
+        # rewrite/unlink each other's segments. Fail fast instead. A
+        # real crash releases the flock with the process, so restart
+        # always succeeds; close() releases it explicitly.
+        self._lockf = None
+        if fcntl is not None:
+            lockf = open(self.dir / ".lock", "wb")
+            try:
+                fcntl.flock(lockf.fileno(),
+                            fcntl.LOCK_EX | fcntl.LOCK_NB)
+            except OSError as e:
+                lockf.close()
+                raise RuntimeError(
+                    f"spill journal directory {self.dir} is locked by "
+                    "another live journal (concurrent daemon?)") from e
+            self._lockf = lockf
         self.segment_bytes = segment_bytes
         self.fsync = fsync
         self.compact_below = compact_below
@@ -183,11 +205,15 @@ class SpillJournal:
         self._seg_live_bytes: Dict[int, int] = {}  # seg -> live frame bytes
         self._next_seq = 1
         self._replayed: List[Tuple[int, str, bytes]] = []
-        max_seg = self._replay()
-        self._active_id = max_seg + 1
-        self._active_size = 0
-        self._f = open(self._seg_path(self._active_id), "wb",
-                       buffering=64 * 1024)
+        try:
+            max_seg = self._replay()
+            self._active_id = max_seg + 1
+            self._active_size = 0
+            self._f = open(self._seg_path(self._active_id), "wb",
+                           buffering=64 * 1024)
+        except BaseException:
+            self._release_dir_lock()
+            raise
         # executor-side counters for the ACTIVE file: bytes written vs
         # bytes known flushed (hard close truncates to the latter)
         self._written = self._synced = 0
@@ -468,6 +494,12 @@ class SpillJournal:
             for off, ln in entries:
                 self._f.write(data[off:off + ln])
                 self._written += ln
+            # The copies are about to become the ONLY durable frames for
+            # these records: flush them (honoring fsync) before the
+            # sealed source is destroyed, else a crash in between loses
+            # acked data. _do_flush also advances _synced so a hard
+            # close cannot truncate the compacted frames away.
+            self._do_flush()
             src.unlink(missing_ok=True)
 
     def _do_flush(self) -> None:
@@ -537,6 +569,15 @@ class SpillJournal:
 
     # ---- lifecycle / introspection ----------------------------------------
 
+    def _release_dir_lock(self) -> None:
+        lockf, self._lockf = self._lockf, None
+        if lockf is not None:
+            try:
+                fcntl.flock(lockf.fileno(), fcntl.LOCK_UN)
+            except OSError:
+                pass
+            lockf.close()
+
     def close(self, *, reclaim: bool = True, hard: bool = False) -> None:
         """Drain, flush, and close. With `reclaim` (graceful shutdown), a
         journal with zero live records deletes its files. `hard=True` is
@@ -559,6 +600,7 @@ class SpillJournal:
                 os.truncate(self._seg_path(self._active_id), synced)
             except OSError:                       # would have lost
                 pass
+            self._release_dir_lock()              # as process death would
             return
         self._f.flush()
         if self.fsync:
@@ -568,6 +610,7 @@ class SpillJournal:
             if reclaim and not self._records:
                 for seg_id in self._segment_ids():
                     self._seg_path(seg_id).unlink(missing_ok=True)
+        self._release_dir_lock()
 
     @property
     def pending_count(self) -> int:

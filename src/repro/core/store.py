@@ -401,6 +401,22 @@ class InfiniStore:
             else:
                 self.writeback.enqueue(key, data, seq=seq)
                 self.stats.spill_replayed_writes += 1
+        # A superseded meta can be resurrected alongside its successor
+        # when the PERSIST frame truncating it was lost (torn tail): the
+        # live put path only ever truncates the current head's
+        # predecessor, so a non-head record restored here would pin its
+        # segment (and be replayed, and re-compacted) forever. Re-drop
+        # everything below each key's restored head now.
+        with self._lock:
+            restored = list(self._spill_meta_seqs)
+        heads: Dict[str, int] = {}
+        for obj in restored:
+            key, ver = obj.rsplit("|", 1)
+            heads[key] = max(heads.get(key, 0), int(ver))
+        for obj in restored:
+            key, ver = obj.rsplit("|", 1)
+            if int(ver) < heads[key]:
+                self._spill_drop_meta(obj)
         live = []                                 # (fkey, u8, stub items)
         for fkey, seq in frag_seqs.items():
             items = stubs.pop(fkey, [])

@@ -123,8 +123,45 @@ def test_temporary_placements_expire_after_retain_seconds():
     assert fid not in st.recovery.sessions        # session dropped
     for rfid2, ckey2 in session.placements:
         assert st.sms.get(rfid2).cache.get(ckey2) is None
+    # the sweep's cache_delete kept cached_bytes honest (no over-report)
+    for rfid2, _ in session.placements:
+        slab = st.sms.get(rfid2)
+        assert slab.stats.cached_bytes == \
+            sum(len(v) for v in slab.cache.values())
     # the restored storage function still serves the data
     assert st.get("o0") == payloads["o0"]
+
+
+def test_refailure_overwrite_evicts_prior_session_placements():
+    """A re-failure of the same fid inside retain_seconds replaces the
+    finished session in `sessions`; the replaced session's temporary
+    placements must be evicted at that point — sweep_expired can no
+    longer reach them."""
+    cfg = StoreConfig(ec=ECConfig(k=4, p=2),
+                      function_capacity=64 * 1024 * 1024,
+                      gc=GCConfig(gc_interval=1e9),
+                      num_recovery_functions=4,
+                      recovery_retain_seconds=30.0)
+    st = InfiniStore(cfg, clock=Clock())
+    rng = np.random.default_rng(5)
+    payloads = {f"o{i}": rng.bytes(20_000) for i in range(40)}
+    for k, v in payloads.items():
+        st.put(k, v)
+    st.flush_writeback()
+    fid = st.chunk_map["o0|1/f0#0"]
+    st.inject_failure(fid)
+    assert st.get("o0") == payloads["o0"]
+    s1 = st.recovery.sessions[fid]
+    assert s1.done and s1.placements
+    # a placement the second recovery will NOT re-create: it must be
+    # gone after the overwrite, not stranded in the recovery slab
+    rfid, _ = s1.placements[0]
+    st.sms.get(rfid).cache_put("stale-recovery-chunk", b"z" * 64)
+    s1.placements.append((rfid, "stale-recovery-chunk"))
+    st.inject_failure(fid)
+    assert st.get("o0") == payloads["o0"]         # second recovery
+    assert st.recovery.sessions[fid] is not s1    # session replaced
+    assert st.sms.get(rfid).cache.get("stale-recovery-chunk") is None
 
 
 def test_close_shuts_down_recovery_pool():

@@ -137,6 +137,51 @@ def test_journal_compaction_rewrites_pinned_segment(tmp_path):
         [("tiny", b"t" * 16)]
 
 
+def test_journal_crash_right_after_compaction_keeps_live_records(tmp_path):
+    """Compaction must flush the copied frames BEFORE unlinking the
+    sealed source: in group-commit mode nothing else flushes until the
+    next sync() barrier, so a crash immediately after a compaction
+    would otherwise lose the pinned (acked) record entirely."""
+    j = SpillJournal(tmp_path, segment_bytes=4096, compact_below=200,
+                     sync_each=False)
+    big = [j.append("big0", b"B" * 1800), j.append("big1", b"B" * 1800)]
+    j.append("tiny", b"t" * 16)
+    big.append(j.append("big2", b"B" * 1800))    # crosses 4096: seals seg 1
+    j.sync()                                     # the ack barrier
+    for s in big:
+        j.mark_persisted(s)                      # drains seg 1 down to tiny
+    assert j.stats.segments_compacted >= 1       # ... which compacted
+    j.close(reclaim=False, hard=True)            # SIGKILL right here
+    j2 = SpillJournal(tmp_path)
+    assert [(k, bytes(p)) for _, k, p in j2.take_pending()] == \
+        [("tiny", b"t" * 16)]
+
+
+def test_journal_dir_locked_against_concurrent_journal(tmp_path):
+    """A restart racing a not-yet-dead daemon on the same spill_dir must
+    fail fast, not corrupt the journal; close releases the lock."""
+    j = SpillJournal(tmp_path)
+    j.append("k", b"v")
+    with pytest.raises(RuntimeError, match="locked"):
+        SpillJournal(tmp_path)
+    j.close(reclaim=False)
+    j2 = SpillJournal(tmp_path)                  # lock released on close
+    assert [k for _, k, _ in j2.take_pending()] == ["k"]
+    j2.close()
+
+
+def test_journal_hard_close_releases_dir_lock(tmp_path):
+    """The crash-simulation close must release the lock the way real
+    process death would, so the kill/restart tests (and real restarts)
+    can rebuild on the same directory."""
+    j = SpillJournal(tmp_path)
+    j.append("k", b"v")
+    j.close(reclaim=False, hard=True)
+    j2 = SpillJournal(tmp_path)
+    assert [k for _, k, _ in j2.take_pending()] == ["k"]
+    j2.close()
+
+
 def test_journal_hard_close_discards_unsynced_tail(tmp_path):
     """Group-commit crash realism: frames appended after the last sync()
     barrier live in the writer buffer; a hard close (SIGKILL stand-in)
@@ -260,6 +305,35 @@ def test_graceful_close_then_restart_serves_from_cos(tmp_path):
     st2.close()
 
 
+def test_daemon_crash_right_after_compaction_resolves_all_versions(tmp_path):
+    """After a full writeback flush, the small journaled metadata
+    records pin sealed segments and get compacted into the active one; a
+    crash immediately afterwards must still resolve every acked object
+    version on restart (the compacted copy must be durable before the
+    sealed source is destroyed)."""
+    spill_dir, cos_root = str(tmp_path / "spill"), str(tmp_path / "cos")
+
+    def cfg():
+        return StoreConfig(ec=ECConfig(k=4, p=2),
+                           function_capacity=8 * MB, fragment_bytes=1 * MB,
+                           gc=GCConfig(gc_interval=1e9),
+                           num_recovery_functions=4, spill_dir=spill_dir,
+                           spill_segment_bytes=64 * 1024)
+    st = InfiniStore(cfg(), clock=Clock(), cos_root=cos_root)
+    rng = np.random.default_rng(11)
+    objs = {f"k{i}": rng.bytes(150_000) for i in range(4)}
+    for k, v in objs.items():
+        assert st.put(k, v) == 1
+    assert st.flush_writeback(timeout=30.0)       # chunk records truncate,
+    assert st.spill.stats.segments_compacted >= 1  # metas compact forward
+    st.simulate_crash()                           # SIGKILL right here
+    st2 = InfiniStore(cfg(), clock=Clock(), cos_root=cos_root)
+    assert st2.stats.spill_replayed_metas == len(objs)
+    for k, v in objs.items():
+        assert st2.get(k) == v, f"{k} unresolvable after post-compaction crash"
+    st2.close()
+
+
 def test_flush_truncates_chunk_records(tmp_path):
     st = make_store(str(tmp_path))
     st.put("x", b"q" * 200_000)
@@ -282,6 +356,46 @@ def test_version_supersession_truncates_old_meta(tmp_path):
     assert st2.flush_writeback(timeout=30.0)
     assert st2.get("k") == b"b" * 50_000
     st2.close(flush=False)
+
+
+def test_replay_redrops_superseded_meta_resurrected_by_torn_persist(tmp_path):
+    """meta/k|2's APPEND lands before the PERSIST frame that truncates
+    meta/k|1, so a tail tear can resurrect BOTH on replay. The live put
+    path only ever truncates the head's direct predecessor, so the
+    restored v1 record must be re-dropped at replay or it pins its
+    segment (and is replayed, and re-compacted) forever."""
+    st = make_store(str(tmp_path))
+    st.writeback.pause()
+    st.put("k", b"a" * 50_000)
+    seq1 = {r.key: s for s, r in st.spill._records.items()}["meta/k|1"]
+    st.put("k", b"b" * 50_000)                   # supersedes: PERSIST(seq1)
+    spill_dir = st.simulate_crash()
+    seg = newest_segment(spill_dir)
+    with open(seg, "rb") as f:
+        data = f.read()
+    frames, off = [], 0
+    while off < len(data):                       # locate that PERSIST
+        fr = SpillJournal._parse_frame(data, off)
+        assert fr is not None
+        frames.append((off,) + fr)
+        off += fr[-1]
+    (t_off,) = [o for o, rtype, seq, *_ in frames if rtype == 2
+                and seq == seq1]
+    meta2 = [o for o, rtype, _, key, *_ in frames if rtype == 1
+             and key == "meta/k|2"]
+    assert meta2 and meta2[0] < t_off            # v2 survives the tear
+    with open(seg, "r+b") as f:
+        f.truncate(t_off)                        # tear from the PERSIST on
+    st2 = make_store(spill_dir)
+    metas = [k for k in st2.spill.pending_keys() if k.startswith("meta/")]
+    assert metas == ["meta/k|2"]                 # resurrected v1 re-dropped
+    assert st2.get("k") == b"b" * 50_000
+    assert st2.flush_writeback(timeout=30.0)
+    spill_dir2 = st2.simulate_crash()
+    st3 = make_store(spill_dir2)                 # ... and never comes back
+    assert st3.stats.spill_replayed_metas == 1
+    assert st3.get("k") == b"b" * 50_000
+    st3.close(flush=False)
 
 
 def test_meta_journals_after_payload_frames(tmp_path):
