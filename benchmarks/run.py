@@ -26,6 +26,8 @@ MODULES = [
                     "(writes BENCH_put_async.json)"),
     ("get_latency", "serial vs pipelined GET latency "
                     "(writes BENCH_get.json)"),
+    ("shard_scaleout", "sharded multi-daemon PUT/GET scale-out "
+                       "(writes BENCH_shard_smoke.json)"),
     ("kernels", "kernel microbenchmarks"),
     ("roofline", "§Roofline summary (reads experiments/dryrun.jsonl)"),
 ]

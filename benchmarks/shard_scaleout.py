@@ -1,0 +1,315 @@
+"""Sharded multi-daemon scale-out benchmark (`repro.core.shard`).
+
+Three questions the keyspace-partitioned `ShardedStore` must answer
+with numbers:
+
+1. **PUT-ack throughput vs shard count** — sustained acked MB/s from 8
+   concurrent client threads under an S3-like COS latency model
+   (bounded writeback depth, so the steady state is the real pipeline:
+   client -> shard daemon -> journal -> slab ack -> background COS
+   drain). Acceptance: aggregate PUT-ack throughput scales >= 2.5x
+   from 1 -> 4 shards on the uniform-key workload. The smoke gate
+   fails CI outright if 4 shards regress below 1 shard.
+2. **Skew sensitivity** — the same workload with every key routed to
+   ONE hot shard (the adversarial case for hash partitioning): extra
+   shards cannot help, so the skewed curve shows the honest lower
+   bound and the uniform/skew gap isolates what partitioning buys.
+3. **Crash-one-shard replay** — with writebacks held pending, one
+   shard's daemon is killed mid-stream; the surviving shards must keep
+   serving their keyspaces, and a timed `restart_shard` must replay
+   the dead shard's journal with ZERO acked-write loss.
+
+GET throughput (warm, slab-resident reads through the scatter/join
+fan-out) is reported per shard count as well.
+
+Full runs write ``BENCH_shard.json`` at the repo root; ``--smoke`` runs
+write ``BENCH_shard_smoke.json`` so CI never clobbers it.
+
+Usage: PYTHONPATH=src python benchmarks/shard_scaleout.py [--smoke] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import threading
+import time
+
+if __package__ in (None, ""):                      # direct-script invocation
+    _HERE = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, os.path.join(_HERE, ".."))
+    sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+
+import numpy as np
+
+from repro.core import Clock, ShardedStore, StoreConfig
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+
+MB = 1024 * 1024
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+# S3-like COS model (same family as put_latency/spill_overhead): the
+# background writers pay it, so sustained ack throughput reflects the
+# whole pipeline, not just the daemon CPU path
+COS_PUT_BASE_S = 0.002
+COS_PUT_PER_BYTE_S = 1.0 / (100 * MB)
+
+CLIENTS = 8                       # concurrent client threads
+
+
+def make_sharded(num_shards: int, spill_root: str, *,
+                 depth: int = 16) -> ShardedStore:
+    cfg = StoreConfig(
+        ec=ECConfig(k=4, p=2),
+        function_capacity=512 * MB,
+        fragment_bytes=4 * MB,
+        gc=GCConfig(gc_interval=1e12),
+        num_recovery_functions=4,
+        writeback_depth=depth,                 # backpressure: sustained
+        spill_dir=spill_root,                  # journaled ack path
+    )
+    st = ShardedStore(cfg, num_shards=num_shards, clock=Clock())
+    st.cos.put_delay_base_s = COS_PUT_BASE_S
+    st.cos.put_delay_per_byte_s = COS_PUT_PER_BYTE_S
+    return st
+
+
+def _skewed_key(st: ShardedStore, t: int, i: int) -> str:
+    """Rejection-sample a key that routes to shard 0 (the hot shard)."""
+    n = 0
+    while True:
+        key = f"hot/{t}/{i}/{n}"
+        if st.router.shard_of(key) == 0:
+            return key
+        n += 1
+
+
+def _run_clients(fn) -> float:
+    """Run `fn(t)` on CLIENTS threads behind a start barrier; return
+    the wall seconds from barrier release to the last join."""
+    barrier = threading.Barrier(CLIENTS + 1)
+    errors: list = []
+
+    def wrap(t):
+        barrier.wait()
+        try:
+            fn(t)
+        except BaseException as e:             # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=wrap, args=(t,))
+               for t in range(CLIENTS)]
+    for th in threads:
+        th.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for th in threads:
+        th.join()
+    if errors:
+        raise errors[0]
+    return time.perf_counter() - t0
+
+
+def bench_workload(num_shards: int, *, skewed: bool, per_thread: int,
+                   size: int) -> dict:
+    """One shard-count point: sustained PUT-ack throughput, then (after
+    a full writeback flush) warm batched-GET throughput on the same
+    keys, plus the shard-balance histogram."""
+    root = tempfile.mkdtemp(prefix=f"shard-bench-{num_shards}-")
+    st = make_sharded(num_shards, root)
+    rng = np.random.default_rng(num_shards)
+    payloads = [rng.bytes(size) for _ in range(4)]
+    if skewed:
+        keys = [[_skewed_key(st, t, i) for i in range(per_thread)]
+                for t in range(CLIENTS)]
+    else:
+        keys = [[f"u/{t}/{i}" for i in range(per_thread)]
+                for t in range(CLIENTS)]
+
+    def put_client(t):
+        futs = [st.put_async(k, payloads[i % 4])
+                for i, k in enumerate(keys[t])]
+        for f in futs:
+            assert f.result() == 1
+
+    put_s = _run_clients(put_client)
+    total = CLIENTS * per_thread * size
+    assert st.flush_writeback(timeout=600.0)
+
+    def get_client(t):
+        mine = keys[t]
+        for i in range(0, len(mine), 8):
+            got = st.get_many(mine[i:i + 8])
+            assert all(v is not None for v in got.values())
+
+    get_s = _run_clients(get_client)
+    balance = st.shard_balance()
+    stats = st.stats
+    out = {"shards": num_shards,
+           "workload": "skewed" if skewed else "uniform",
+           "clients": CLIENTS,
+           "objects": CLIENTS * per_thread,
+           "object_mb": size / MB,
+           "total_mb": round(total / MB, 1),
+           "put_ack_MBps": round(total / MB / put_s, 1),
+           "put_acks_per_s": round(CLIENTS * per_thread / put_s, 1),
+           "get_MBps": round(total / MB / get_s, 1),
+           "balance": balance,
+           "gather_invokes": stats.gather_invokes,
+           "commit_tickets": stats.commit_tickets}
+    st.close()
+    shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+def bench_crash_replay(num_shards: int = 4, *, objects: int = 48,
+                       size: int = 512 * 1024) -> dict:
+    """Kill one shard with every write acked-but-unpersisted, check the
+    survivors keep serving mid-outage, then time the journal replay and
+    verify zero acked loss."""
+    root = tempfile.mkdtemp(prefix="shard-crash-")
+    st = make_sharded(num_shards, root, depth=4096)
+    st.pause_writeback()                      # hold everything pending
+    rng = np.random.default_rng(7)
+    vals = {f"c{i}": rng.bytes(size) for i in range(objects)}
+    for k, v in vals.items():
+        assert st.put(k, v) == 1
+    victim = 0
+    dead = [k for k in vals if st.router.shard_of(k) == victim]
+    st.simulate_crash(shard=victim)
+    # mid-outage: every surviving shard's keyspace still serves
+    survivors_ok = all(st.get(k) == vals[k] for k in vals
+                       if st.router.shard_of(k) != victim)
+    t0 = time.perf_counter()
+    st.restart_shard(victim)
+    replay_s = time.perf_counter() - t0
+    lost = sum(1 for k, v in vals.items() if st.get(k) != v)
+    replayed = st.shards[victim].stats.spill_replayed_writes
+    st.resume_writeback()
+    persisted = st.flush_writeback(timeout=600.0)
+    out = {"shards": num_shards,
+           "acked_objects": objects,
+           "object_kb": size // 1024,
+           "victim_shard": victim,
+           "victim_objects": len(dead),
+           "survivors_served_during_outage": bool(survivors_ok),
+           "replay_ms": round(replay_s * 1e3, 2),
+           "replayed_writes": replayed,
+           "lost_after_restart": lost,
+           "all_cos_persistent": bool(persisted)}
+    st.close()
+    shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+def run_bench(smoke: bool) -> dict:
+    if smoke:
+        shard_counts, per_thread, size = (1, 4), 6, 512 * 1024
+        skew_counts = (4,)
+        crash = bench_crash_replay(objects=16, size=256 * 1024)
+    else:
+        shard_counts, per_thread, size = (1, 2, 4, 8), 16, 1 * MB
+        skew_counts = shard_counts
+        crash = bench_crash_replay()
+    uniform = [bench_workload(s, skewed=False, per_thread=per_thread,
+                              size=size) for s in shard_counts]
+    skewed = [bench_workload(s, skewed=True, per_thread=per_thread,
+                             size=size) for s in skew_counts]
+    by_shards = {pt["shards"]: pt for pt in uniform}
+    scale_4x = None
+    if 1 in by_shards and 4 in by_shards:
+        scale_4x = round(by_shards[4]["put_ack_MBps"]
+                         / by_shards[1]["put_ack_MBps"], 2)
+    return {"bench": "shard_scaleout", "smoke": smoke,
+            "ec": {"k": 4, "p": 2},
+            "cos_model": {"put_base_s": COS_PUT_BASE_S,
+                          "put_MBps": round(1.0 / COS_PUT_PER_BYTE_S / MB)},
+            "put_ack_scale_1_to_4": scale_4x,
+            "uniform": uniform, "skewed": skewed, "crash": crash}
+
+
+def check_gates(result: dict) -> list:
+    """CI gates: 4-shard uniform PUT-ack throughput must not regress
+    below 1 shard (smoke + full), and the crash scenario must lose
+    nothing while the survivors kept serving."""
+    problems = []
+    scale = result["put_ack_scale_1_to_4"]
+    if scale is not None and scale < 1.0:
+        problems.append(
+            f"4-shard PUT-ack throughput regressed below 1 shard "
+            f"({scale}x)")
+    crash = result["crash"]
+    if crash["lost_after_restart"] != 0:
+        problems.append(
+            f"crash replay lost {crash['lost_after_restart']} acked writes")
+    if not crash["survivors_served_during_outage"]:
+        problems.append("surviving shards failed reads during the outage")
+    return problems
+
+
+def _default_out(smoke: bool) -> str:
+    name = "BENCH_shard_smoke.json" if smoke else "BENCH_shard.json"
+    return os.path.join(ROOT, name)
+
+
+def _write(result: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+
+
+def run() -> list:
+    """benchmarks.run entry point (smoke sizes, CSV rows)."""
+    result = run_bench(smoke=True)
+    _write(result, _default_out(smoke=True))
+    rows = []
+    for pt in result["uniform"] + result["skewed"]:
+        rows.append(f"put_ack_{pt['workload']}_{pt['shards']}shard,"
+                    f"{pt['put_ack_MBps']},MB/s get={pt['get_MBps']}MB/s")
+    crash = result["crash"]
+    rows.append(f"shard_crash_replay,{crash['replay_ms']},"
+                f"ms lost={crash['lost_after_restart']}")
+    for p in check_gates(result):
+        rows.append(f"# GATE FAILED: {p}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 and 4 shards only, small objects (CI gate); "
+                         "writes BENCH_shard_smoke.json unless --out")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    result = run_bench(args.smoke)
+    out = args.out or _default_out(args.smoke)
+    _write(result, out)
+    for pt in result["uniform"] + result["skewed"]:
+        print(f"{pt['shards']:>2} shards | {pt['workload']:>7} | "
+              f"put ack {pt['put_ack_MBps']:>7.1f} MB/s "
+              f"({pt['put_acks_per_s']:>6.1f} acks/s) | "
+              f"get {pt['get_MBps']:>7.1f} MB/s | balance {pt['balance']}")
+    crash = result["crash"]
+    print(f"crash shard {crash['victim_shard']} "
+          f"({crash['victim_objects']}/{crash['acked_objects']} objects) | "
+          f"survivors served: {crash['survivors_served_during_outage']} | "
+          f"replay {crash['replay_ms']:.1f} ms | "
+          f"lost {crash['lost_after_restart']} | "
+          f"COS-persistent {crash['all_cos_persistent']}")
+    if result["put_ack_scale_1_to_4"] is not None:
+        print(f"PUT-ack scaling 1 -> 4 shards: "
+              f"{result['put_ack_scale_1_to_4']}x (uniform)")
+    problems = check_gates(result)
+    print(f"wrote {os.path.relpath(out)}")
+    if problems:
+        for p in problems:
+            print(f"GATE FAILED: {p}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,3 +17,7 @@ python benchmarks/put_latency.py --smoke
 python benchmarks/get_latency.py --smoke
 # spill-journal overhead + kill/restart replay (crash-consistent writeback)
 python benchmarks/spill_overhead.py --smoke
+# sharded multi-daemon scale-out: fails if 4-shard aggregate PUT-ack
+# throughput regresses below 1 shard, or the crash-one-shard replay
+# loses an acked write (writes BENCH_shard_smoke.json)
+python benchmarks/shard_scaleout.py --smoke

@@ -31,7 +31,7 @@ import jax
 import numpy as np
 
 from repro.core.payload import as_u8
-from repro.core.store import InfiniStore, StoreConfig
+from repro.core.store import StoreFrontend
 
 PyTree = Any
 
@@ -61,7 +61,14 @@ def _restore_dtype(name: str):
 
 
 class Checkpointer:
-    def __init__(self, store: InfiniStore,
+    """Works over any `StoreFrontend` — the singleton `InfiniStore` or
+    the keyspace-partitioned `ShardedStore`. Under a sharded store the
+    ordered `.../sN` shard keys scatter by the router, so save batches
+    fan out across every shard daemon (one multi-key CAS round per
+    shard per sub-batch, leader-sequenced when a batch spans shards)
+    and restores gather in parallel from all of them."""
+
+    def __init__(self, store: StoreFrontend,
                  cfg: CheckpointConfig = CheckpointConfig()):
         self.store = store
         self.cfg = cfg

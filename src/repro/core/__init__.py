@@ -17,10 +17,13 @@ from repro.core.placement import PlacementManager  # noqa: F401
 from repro.core.prefetch import (PrefetchConfig,  # noqa: F401
                                  SequentialPrefetcher)
 from repro.core.recovery import RecoveryManager  # noqa: F401
+from repro.core.shard import (HashRouter, RangeRouter,  # noqa: F401
+                              ShardedStore)
 from repro.core.sms import SMS, Slab  # noqa: F401
 from repro.core.spill import SpillJournal, SpillStats  # noqa: F401
-from repro.core.store import (ConcurrentPutError, InfiniStore,  # noqa: F401
-                              StoreConfig)
+from repro.core.store import (AtomicCounter,  # noqa: F401
+                              ConcurrentPutError, InfiniStore,
+                              StoreConfig, StoreFrontend, StoreStats)
 from repro.core.versioning import (MetadataTable, Meta,  # noqa: F401
                                    PersistentBuffer)
 from repro.core.writeback import (StoreFuture,  # noqa: F401

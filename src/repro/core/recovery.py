@@ -53,7 +53,8 @@ class RecoverySession:
 class RecoveryManager:
     def __init__(self, sms: SMS, cos: COS, logs: Dict[int, InsertionLog], *,
                  num_recovery_functions: int = 20, workers: int = 8,
-                 retain_seconds: float = 60.0, writeback=None, clock=None):
+                 retain_seconds: float = 60.0, writeback=None, clock=None,
+                 thread_prefix: str = "recovery"):
         self.sms = sms
         self.cos = cos
         # WritebackQueue (or None): chunks acked but not yet persisted to
@@ -67,8 +68,10 @@ class RecoveryManager:
         self.retain_seconds = retain_seconds
         self.clock = clock                    # store Clock, or wall time
         self.stats = RecoveryStats()
+        # per-shard prefix so a multi-daemon deployment's recovery pools
+        # are tell-apart-able in thread dumps
         self._pool = ThreadPoolExecutor(max_workers=workers,
-                                        thread_name_prefix="recovery")
+                                        thread_name_prefix=thread_prefix)
         self._lock = threading.RLock()
         # fid -> pre-selected recovery group (function ids)
         self.recovery_groups: Dict[int, List[int]] = {}

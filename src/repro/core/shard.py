@@ -1,0 +1,499 @@
+"""Sharded multi-daemon scale-out: a keyspace-partitioned front-end
+over N independent `InfiniStore` shards (ROADMAP "Multi-daemon
+scale-out").
+
+One `InfiniStore` funnels every mutation through a single client-daemon
+thread — the right model for the paper's single-client sections, but a
+throughput ceiling long before the function pool saturates. This is the
+contrast InfiniStore draws against shared-nothing partitioned designs
+(Anna's hash-partitioned actors, Faa$T's per-application hash-
+distributed cache): partition the METADATA TABLE and CHUNK MAP by key
+so independent daemons serve disjoint keyspaces.
+
+`ShardedStore` implements exactly that while preserving the whole
+`StoreFrontend` contract at the sharded surface:
+
+- **Partitioning**: a deterministic, pluggable `ShardRouter` (stable
+  CRC-32 `HashRouter` by default, contiguous `RangeRouter` for ordered
+  keyspaces) maps every object key to one shard. Each shard is a full
+  `InfiniStore` — its own client daemon, `WritebackQueue` writer,
+  `SpillJournal` under `<spill_dir>/shard-<i>/`, placement state, GC
+  window, and recovery manager — all sharing ONE `COS` backend (the
+  cloud object store is the global layer in the paper; everything
+  daemon-local is per-shard). Chunk keys derive from object keys, so
+  disjoint object keyspaces imply disjoint chunk/metadata/journal
+  keyspaces: shards never coordinate on the data path.
+- **Scatter/gather**: the batched APIs (`put_many_async`,
+  `get_many_async`, `get_many_arrays_async`) split a batch into
+  per-shard sub-batches, pipeline them on the shard daemons
+  concurrently, and join the sub-results into one `StoreFuture`.
+- **Cross-shard atomic `put_many`**: a multi-key batch spanning shards
+  commits via a leader-sequenced two-round protocol so a PREPARE-stage
+  failure is never half-visible (a failure inside round 2, after the
+  ticket issued, is the classic 2PC in-doubt window — see
+  `put_many_async`). The protocol provides failure atomicity, not read
+  isolation: while round 2 lands shard by shard, a concurrent reader
+  may observe some shards' new versions before the others commit.
+  Round 1 (prepare) runs each shard's sub-batch through
+  the shard's one multi-key CAS + fragment + slab/journal path but
+  stops BEFORE the ack point — the new versions stay PENDING,
+  invisible to readers and blocking same-key writers. The leader then
+  issues a commit ticket (one monotonic sequence across the store) and
+  round 2 finalizes every sub-batch (ack + metadata journal, ticket
+  stamped into each shard's journal record); if ANY shard fails to
+  prepare, every prepared shard aborts and readers keep seeing the
+  previous versions everywhere. Single-shard batches skip the protocol
+  entirely (the common, fast case).
+- **Failure domains**: `simulate_crash(shard=i)` kills one daemon; the
+  surviving shards keep serving their keyspaces and `restart_shard(i)`
+  rebuilds the dead one from its own spill journal (per-shard recovery
+  session) with zero acked loss — the PR-4 kill/restart contract per
+  failure domain. `flush_writeback` / `close` / `gc_tick` fan out.
+- **Observability**: `stats` aggregates every shard's `StoreStats`
+  (per-counter atomic reads — see the StoreStats consistency model;
+  the aggregate is not a consistent cut), `stats_per_shard` keeps the
+  breakdown, and `snapshot_metadata()` adds a shard-balance histogram
+  (distinct object keys per shard) plus the router description.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import itertools
+import os
+import shutil
+import tempfile
+import threading
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.clock import Clock
+from repro.core.cos import COS
+from repro.core.store import (_STAT_FIELDS, InfiniStore, StoreConfig,
+                              StoreStats)
+from repro.core.writeback import StoreFuture
+
+
+class HashRouter:
+    """Stable hash partitioning: CRC-32 of the key modulo the shard
+    count. Deterministic across processes and restarts (never Python's
+    salted `hash`), uniform for generic key populations."""
+
+    def __init__(self, num_shards: int):
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        self.num_shards = num_shards
+
+    def shard_of(self, key: str) -> int:
+        return zlib.crc32(key.encode()) % self.num_shards
+
+    def snapshot(self) -> Dict:
+        return {"kind": "hash", "num_shards": self.num_shards}
+
+
+class RangeRouter:
+    """Contiguous key-range partitioning: `boundaries` are the N-1
+    split points of an N-shard keyspace; shard i serves
+    [boundaries[i-1], boundaries[i]). Ordered keyspaces (checkpoint
+    shards, KV pages) stay shard-local per scan run — at the cost of
+    skew when the workload concentrates on one range."""
+
+    def __init__(self, boundaries: Sequence[str]):
+        self.boundaries = sorted(boundaries)
+        self.num_shards = len(self.boundaries) + 1
+
+    def shard_of(self, key: str) -> int:
+        return bisect.bisect_right(self.boundaries, key)
+
+    def snapshot(self) -> Dict:
+        return {"kind": "range", "num_shards": self.num_shards,
+                "boundaries": list(self.boundaries)}
+
+
+ShardRouter = Union[HashRouter, RangeRouter]
+
+
+class ShardedStore:
+    """Keyspace-partitioned `StoreFrontend` over N `InfiniStore` shards
+    (see the module docstring for the design)."""
+
+    def __init__(self, cfg: Optional[StoreConfig] = None, *,
+                 num_shards: int = 4,
+                 router: Union[str, ShardRouter] = "hash",
+                 range_boundaries: Optional[Sequence[str]] = None,
+                 clock: Optional[Clock] = None,
+                 cos_root: Optional[str] = None, seed: int = 0):
+        self.cfg = cfg = cfg if cfg is not None else StoreConfig()
+        self.clock = clock or Clock()
+        # ONE shared COS backend: the global persistence layer. Shards
+        # receive it pre-built and never shut it down (_owns_cos=False).
+        self.cos = COS(self.clock, visibility_lag=cfg.cos_visibility_lag,
+                       root=cos_root)
+        if isinstance(router, str):
+            if router == "hash":
+                router = HashRouter(num_shards)
+            elif router == "range":
+                if range_boundaries is None:
+                    raise ValueError("router='range' needs range_boundaries")
+                router = RangeRouter(range_boundaries)
+            else:
+                raise ValueError(f"unknown router {router!r}")
+        self.router = router
+        self.num_shards = router.num_shards
+        # per-shard spill layout: <root>/shard-<i>/ — each journal is a
+        # private failure domain. "auto" makes one private temp root
+        # (reclaimed on graceful close, like the single-store auto mode).
+        self._spill_auto = False
+        self._spill_root = cfg.spill_dir
+        if cfg.async_writeback and cfg.spill_dir == "auto":
+            self._spill_root = tempfile.mkdtemp(
+                prefix="infinistore-shards-")
+            self._spill_auto = True
+        self._seed = seed
+        self.shards: List[InfiniStore] = [
+            self._make_shard(i) for i in range(self.num_shards)]
+        # leader side: commit tickets are one monotonic sequence across
+        # the whole store (itertools.count: atomic under the GIL), and
+        # cross-shard batches coordinate on a small leader pool so
+        # put_many_async stays non-blocking for the caller
+        self._tickets = itertools.count(1)
+        self._leader = ThreadPoolExecutor(
+            max_workers=max(2, min(8, self.num_shards)),
+            thread_name_prefix="shard-leader")
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # shard lifecycle
+    # ------------------------------------------------------------------
+
+    def _shard_spill_dir(self, i: int) -> Optional[str]:
+        if self._spill_root is None:
+            return None
+        return os.path.join(self._spill_root, f"shard-{i}")
+
+    def _make_shard(self, i: int) -> InfiniStore:
+        scfg = dataclasses.replace(self.cfg,
+                                   spill_dir=self._shard_spill_dir(i))
+        return InfiniStore(scfg, clock=self.clock, cos=self.cos,
+                           seed=self._seed + i, name=f"s{i}")
+
+    def restart_shard(self, i: int) -> InfiniStore:
+        """Rebuild a (crashed) shard on its own spill journal: replays
+        surviving metadata + pending writes exactly like a single-store
+        daemon restart, while the other shards keep serving."""
+        self.shards[i] = self._make_shard(i)
+        return self.shards[i]
+
+    def simulate_crash(self, shard: Optional[int] = None):
+        """Kill one shard's daemon mid-flight (`shard=i`) — its journal
+        segments survive for `restart_shard(i)`, every other shard keeps
+        serving — or the whole store (`shard=None`), returning the spill
+        root a rebuilt `ShardedStore` would replay from."""
+        if shard is not None:
+            return self.shards[shard].simulate_crash()
+        for s in self.shards:
+            s.simulate_crash()
+        self._leader.shutdown(wait=False, cancel_futures=True)
+        self.cos.shutdown()
+        self._closed = True
+        return self._spill_root
+
+    def close(self, *, flush: bool = True) -> bool:
+        """Close every shard (drain daemons, flush writebacks), then the
+        leader pool and the shared COS. False if any shard left writes
+        unpersisted."""
+        if self._closed:
+            return True
+        self._closed = True
+        oks = [s.close(flush=flush) for s in self.shards]
+        self._leader.shutdown(wait=True)
+        self.cos.shutdown()
+        if self._spill_auto:
+            shutil.rmtree(self._spill_root, ignore_errors=True)
+        return all(oks)
+
+    # ------------------------------------------------------------------
+    # routing + scatter/join plumbing
+    # ------------------------------------------------------------------
+
+    def _shard(self, key: str) -> InfiniStore:
+        return self.shards[self.router.shard_of(key)]
+
+    def _scatter(self, keys) -> Dict[int, List[str]]:
+        groups: Dict[int, List[str]] = {}
+        for k in keys:
+            groups.setdefault(self.router.shard_of(k), []).append(k)
+        return groups
+
+    @staticmethod
+    def _join(futs: List[StoreFuture]) -> StoreFuture:
+        """Join per-shard dict futures into one: merge results, first
+        exception wins. Callbacks run on the shard daemons; the merge
+        is locked, the resolve happens exactly once."""
+        out = StoreFuture()
+        if not futs:
+            out._resolve({})
+            return out
+        merged: Dict = {}
+        lock = threading.Lock()
+        remaining = [len(futs)]
+
+        def on_done(f):
+            with lock:
+                if out.done():
+                    return
+                err = f.exception()
+                if err is not None:
+                    out.set_exception(err)
+                    return
+                merged.update(f.result())
+                remaining[0] -= 1
+                if remaining[0] == 0:
+                    out._resolve(merged)
+
+        for f in futs:
+            f.add_done_callback(on_done)
+        return out
+
+    # ------------------------------------------------------------------
+    # single-key API (pure delegation)
+    # ------------------------------------------------------------------
+
+    def put(self, key: str, value) -> int:
+        return self._shard(key).put(key, value)
+
+    def put_async(self, key: str, value) -> StoreFuture:
+        return self._shard(key).put_async(key, value)
+
+    def get(self, key: str):
+        return self._shard(key).get(key)
+
+    def get_async(self, key: str) -> StoreFuture:
+        return self._shard(key).get_async(key)
+
+    def get_array(self, key: str) -> Optional[np.ndarray]:
+        return self._shard(key).get_array(key)
+
+    # ------------------------------------------------------------------
+    # batched GET (scatter / join)
+    # ------------------------------------------------------------------
+
+    def get_many_async(self, keys) -> StoreFuture:
+        groups = self._scatter(dict.fromkeys(keys))
+        return self._join([self.shards[sid].get_many_async(sub)
+                           for sid, sub in groups.items()])
+
+    def get_many(self, keys) -> Dict[str, Optional[bytes]]:
+        return self.get_many_async(keys).result()
+
+    def get_many_arrays_async(self, keys) -> StoreFuture:
+        groups = self._scatter(dict.fromkeys(keys))
+        return self._join([self.shards[sid].get_many_arrays_async(sub)
+                           for sid, sub in groups.items()])
+
+    def get_many_arrays(self, keys) -> Dict[str, Optional[np.ndarray]]:
+        return self.get_many_arrays_async(keys).result()
+
+    # ------------------------------------------------------------------
+    # batched PUT (leader-sequenced two-round cross-shard commit)
+    # ------------------------------------------------------------------
+
+    def put_many(self, items, *, raise_on_conflict: bool = False
+                 ) -> Dict[str, int]:
+        return self.put_many_async(
+            items, raise_on_conflict=raise_on_conflict).result()
+
+    def put_many_async(self, items, *, raise_on_conflict: bool = False
+                       ) -> StoreFuture:
+        """Batch PUT across shards. A single-shard batch delegates to
+        that shard's one-CAS-round fast path; a cross-shard batch runs
+        the two-round protocol: per-shard CAS prepare (versions stay
+        PENDING/invisible), then a leader commit ticket finalizes every
+        shard — or, if any shard failed to prepare, every prepared
+        shard aborts. A prepare-stage failure is therefore never
+        half-visible: readers observe either no key or every key of
+        the batch (per-key CAS conflicts keep the single-store
+        contract: -1 for just that key, or `ConcurrentPutError`
+        aborting the whole batch when raise_on_conflict). A failure
+        inside the COMMIT round — after the ticket was issued — is the
+        classic 2PC in-doubt window: shards whose commit already ran
+        serve the new versions, the failing shard aborts its heads
+        back to the previous ones, and the error propagates so the
+        caller can retry the batch."""
+        items = list(items.items()) if isinstance(items, dict) \
+            else list(items)
+        if len({k for k, _ in items}) != len(items):
+            raise ValueError("duplicate keys in put_many batch")
+        # snapshot mutable payloads NOW (the caller may reuse buffers
+        # the moment this returns) — shards then see stable copies
+        items = [(k, InfiniStore._snapshot_value(v)) for k, v in items]
+        groups: Dict[int, List] = {}
+        for k, v in items:
+            groups.setdefault(self.router.shard_of(k), []).append((k, v))
+        if len(groups) == 1:
+            sid = next(iter(groups))
+            return self.shards[sid].put_many_async(
+                groups[sid], raise_on_conflict=raise_on_conflict)
+        fut = StoreFuture()
+        self._leader.submit(self._cross_shard_put, groups,
+                            raise_on_conflict, fut)
+        return fut
+
+    def _cross_shard_put(self, groups: Dict[int, List],
+                         raise_on_conflict: bool, fut: StoreFuture) -> None:
+        try:
+            fut._resolve(self._cross_shard_put_impl(groups,
+                                                    raise_on_conflict))
+        except BaseException as e:                    # noqa: BLE001
+            fut.set_exception(e)
+
+    def _cross_shard_put_impl(self, groups: Dict[int, List],
+                              raise_on_conflict: bool) -> Dict[str, int]:
+        # round 1: prepare on every touched shard, in parallel on the
+        # shard daemons. A shard that cannot prepare (daemon dead, CAS
+        # conflict under raise_on_conflict, encode/placement failure)
+        # fails the whole batch.
+        prep_futs: Dict[int, StoreFuture] = {}
+        errors: List[BaseException] = []
+        for sid, sub in groups.items():
+            try:
+                prep_futs[sid] = self.shards[sid].prepare_put_many_async(
+                    sub, raise_on_conflict=raise_on_conflict)
+            except BaseException as e:                # noqa: BLE001
+                errors.append(e)                      # dead daemon
+        preps: Dict[int, object] = {}
+        for sid, pf in prep_futs.items():
+            try:
+                preps[sid] = pf.result()
+            except BaseException as e:                # noqa: BLE001
+                errors.append(e)
+        if errors:
+            # round 2 (abort): no shard may expose its sub-batch
+            for sid, prep in preps.items():
+                try:
+                    self.shards[sid].abort_put_many_async(prep).result()
+                except BaseException:                 # noqa: BLE001
+                    pass         # aborting a shard that died meanwhile
+            raise errors[0]
+        # round 2 (commit): one leader ticket sequences this batch
+        # against every other cross-shard batch; shards stamp it into
+        # their journaled metadata records. Commit is submitted to
+        # EVERY prepared shard even if one submission/commit fails —
+        # skipping a live shard would strand its prepared heads, and a
+        # shard that died between prepare and commit is the classic
+        # in-doubt 2PC window: its in-memory heads die with it (no
+        # metadata was journaled at prepare), so a restart simply never
+        # shows the batch there.
+        ticket = next(self._tickets)
+        out: Dict[str, int] = {}
+        commit_errs: List[BaseException] = []
+        commits = []
+        for sid, prep in preps.items():
+            try:
+                commits.append(self.shards[sid].commit_put_many_async(
+                    prep, ticket=ticket))
+            except BaseException as e:                # noqa: BLE001
+                commit_errs.append(e)                 # daemon died
+        for cf in commits:
+            try:
+                out.update(cf.result())
+            except BaseException as e:                # noqa: BLE001
+                # the shard's commit path aborted its unfinalized heads
+                # before raising (commit_put_many_async guard)
+                commit_errs.append(e)
+        if commit_errs:
+            raise commit_errs[0]
+        return out
+
+    # ------------------------------------------------------------------
+    # maintenance fan-out
+    # ------------------------------------------------------------------
+
+    def flush_writeback(self, timeout: Optional[float] = None) -> bool:
+        """Barrier across every shard's writeback queue. The timeout is
+        a SHARED deadline — each shard gets what remains of it, so the
+        call honors the caller's bound instead of num_shards x timeout."""
+        deadline = None if timeout is None \
+            else time.monotonic() + timeout
+        ok = True
+        for s in self.shards:
+            remaining = None if deadline is None \
+                else max(0.0, deadline - time.monotonic())
+            ok = s.flush_writeback(timeout=remaining) and ok
+        return ok
+
+    def gc_tick(self) -> None:
+        for s in self.shards:
+            s.gc_tick()
+
+    def pause_writeback(self) -> None:
+        """Hold every shard's COS writes in-queue (tests/benchmarks)."""
+        for s in self.shards:
+            s.writeback.pause()
+
+    def resume_writeback(self) -> None:
+        for s in self.shards:
+            s.writeback.resume()
+
+    def cos_keys(self, prefix: str = "") -> List[str]:
+        keys = set()
+        for s in self.shards:
+            keys.update(s.cos_keys(prefix))
+        return sorted(keys)
+
+    def num_functions(self, state=None) -> int:
+        return sum(s.num_functions(state) for s in self.shards)
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
+    @property
+    def stats(self) -> StoreStats:
+        """Aggregate of every shard's counters. Each underlying read is
+        atomic; the aggregate is NOT a consistent cut across shards or
+        counters (see StoreStats). The sums are seeded directly — the
+        aggregate is a fresh snapshot object, not a live multi-writer
+        counter, so no atomic increments are needed."""
+        return StoreStats(**{
+            f: sum(getattr(s.stats, f) for s in self.shards)
+            for f in _STAT_FIELDS})
+
+    def stats_per_shard(self) -> List[Dict[str, int]]:
+        return [s.stats.as_dict() for s in self.shards]
+
+    def shard_balance(self) -> List[int]:
+        """Distinct object keys (metadata heads) per shard — the
+        router-quality histogram."""
+        out = []
+        for s in self.shards:
+            snap = s.mt.snapshot()
+            out.append(sum(1 for k in snap if "|" not in k))
+        return out
+
+    def tickets_issued(self) -> int:
+        """Cross-shard commit tickets handed out so far."""
+        return self._tickets.__reduce__()[1][0] - 1
+
+    def ledger_dollars(self) -> Dict[str, float]:
+        """Summed cost breakdown across shards."""
+        out: Dict[str, float] = {}
+        for s in self.shards:
+            for k, v in s.ledger.dollars().items():
+                out[k] = out.get(k, 0.0) + v
+        return out
+
+    def snapshot_metadata(self):
+        """Aggregated snapshot: router + balance histogram + per-shard
+        breakdowns. Same consistency model as the per-shard snapshot —
+        atomic counter reads, no global cut."""
+        return {"router": self.router.snapshot(),
+                "num_shards": self.num_shards,
+                "balance": self.shard_balance(),
+                "commit_tickets_issued": self.tickets_issued(),
+                "stats": self.stats.as_dict(),
+                "shards": [s.snapshot_metadata() for s in self.shards]}

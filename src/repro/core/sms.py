@@ -61,6 +61,13 @@ class Slab:
         self.clock = clock
         self.storage: Dict[str, bytes] = {}
         self.cache: "OrderedDict[str, bytes]" = OrderedDict()
+        # incremental byte accounting: `used`/cache totals used to be
+        # recomputed by summing every entry on EVERY store/trim — O(n)
+        # per chunk write on the PUT hot path, pure-Python and
+        # GIL-bound, which throttled multi-daemon scale-out long before
+        # the encode did. Maintained on each insert/delete instead.
+        self._used = 0
+        self._cached = 0
         self.alive = True                  # False = reclaimed by provider
         self.term = 0                      # insertion-log term (§5.5.1)
         self.log_hash = ""
@@ -87,6 +94,8 @@ class Slab:
             self.alive = False
             self.storage.clear()
             self.cache.clear()
+            self._used = 0
+            self._cached = 0
             self.stats.stored_bytes = 0
             self.stats.cached_bytes = 0
             self.term = 0
@@ -97,7 +106,7 @@ class Slab:
 
     @property
     def used(self) -> int:
-        return sum(_nbytes(v) for v in self.storage.values())
+        return self._used
 
     def store(self, key: str, data) -> bool:
         """data: bytes payload, or a `Ref` for device-resident chunks.
@@ -108,14 +117,18 @@ class Slab:
             if not self.alive:
                 return False
             needed = _nbytes(data)
-            if self.used >= self.hardcap:
+            if self._used >= self.hardcap:
                 return False
-            if self.used + needed > self.capacity:
+            if self._used + needed > self.capacity:
                 self._evict_cache(needed)                # paper §5.4
-                if self.used + needed > self.capacity:
+                if self._used + needed > self.capacity:
                     return False
+            old = self.storage.get(key)
+            if old is not None:                # same-key overwrite
+                self._used -= _nbytes(old)
             self.storage[key] = data
-            self.stats.stored_bytes = self.used
+            self._used += needed
+            self.stats.stored_bytes = self._used
             return True
 
     def load(self, key: str) -> Optional[bytes]:
@@ -131,14 +144,16 @@ class Slab:
 
     def delete(self, key: str) -> bool:
         with self._lock:
-            if self.storage.pop(key, None) is not None:
-                self.stats.stored_bytes = self.used
+            v = self.storage.pop(key, None)
+            if v is not None:
+                self._used = max(0, self._used - _nbytes(v))
+                self.stats.stored_bytes = self._used
                 return True
             v = self.cache.pop(key, None)
             if v is None:
                 return False
-            self.stats.cached_bytes = max(
-                0, self.stats.cached_bytes - _nbytes(v))
+            self._cached = max(0, self._cached - _nbytes(v))
+            self.stats.cached_bytes = self._cached
             return True
 
     # ---- cache space (demand-cached chunks, §5.3.3/§5.4) --------------------
@@ -147,17 +162,21 @@ class Slab:
         with self._lock:
             if not self.alive:
                 return
+            old = self.cache.get(key)
+            if old is not None:
+                self._cached -= _nbytes(old)
             self.cache[key] = data
             self.cache.move_to_end(key)
+            self._cached += _nbytes(data)
             budget = self.capacity - self.hardcap
             self._trim_cache(budget)
 
     def _trim_cache(self, budget: int) -> None:
-        total = sum(_nbytes(v) for v in self.cache.values())
-        while self.cache and total > budget:
+        while self.cache and self._cached > budget:
             _, v = self.cache.popitem(last=False)
-            total -= _nbytes(v)
-        self.stats.cached_bytes = total
+            self._cached -= _nbytes(v)
+        self._cached = max(0, self._cached)
+        self.stats.cached_bytes = self._cached
 
     def cache_delete(self, key: str) -> bool:
         """Drop a cache-space entry WITHOUT touching the storage
@@ -166,8 +185,8 @@ class Slab:
             v = self.cache.pop(key, None)
             if v is None:
                 return False
-            self.stats.cached_bytes = max(
-                0, self.stats.cached_bytes - _nbytes(v))
+            self._cached = max(0, self._cached - _nbytes(v))
+            self.stats.cached_bytes = self._cached
             return True
 
     def _evict_cache(self, needed: int) -> None:
@@ -175,7 +194,8 @@ class Slab:
         while self.cache and freed < needed:
             _, v = self.cache.popitem(last=False)
             freed += _nbytes(v)
-        self.stats.cached_bytes = max(0, self.stats.cached_bytes - freed)
+        self._cached = max(0, self._cached - freed)
+        self.stats.cached_bytes = self._cached
 
     def keys(self) -> Iterable[str]:
         with self._lock:

@@ -551,9 +551,33 @@ class SpillJournal:
         self._submit(("compact", self._seg_path(seg_id), entries))
         self.stats.segments_compacted += 1
 
+    def rotate(self) -> int:
+        """Force-seal the active segment and open a new one — the
+        journal-GENERATION boundary the metadata-snapshot scheme uses:
+        the snapshot becomes the first record of the fresh generation,
+        and everything it supersedes sits in sealed segments that
+        reclaim or compact away on their own. Returns the new active
+        segment id (== `generation`). No-op on an empty active segment
+        or a closed journal."""
+        with self._lock:
+            if self._closed or self._active_size == 0:
+                return self._active_id
+            self._rotate_locked()
+            return self._active_id
+
+    @property
+    def generation(self) -> int:
+        """The active segment id — advances on every rotation (size-
+        triggered or a forced `rotate()` generation boundary)."""
+        with self._lock:
+            return self._active_id
+
     def _maybe_rotate(self) -> None:
         if self._active_size < self.segment_bytes:
             return
+        self._rotate_locked()
+
+    def _rotate_locked(self) -> None:
         old = self._active_id
         delete_old = self._seg_live.get(old, 0) == 0
         if delete_old:

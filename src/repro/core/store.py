@@ -57,6 +57,7 @@ accounting.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import shutil
 import tempfile
@@ -65,7 +66,8 @@ import time
 from concurrent.futures import (FIRST_COMPLETED, Future,
                                 ThreadPoolExecutor, wait)
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import (Dict, List, Optional, Protocol, Sequence, Set, Tuple,
+                    runtime_checkable)
 
 import numpy as np
 
@@ -86,6 +88,10 @@ from repro.core.versioning import Meta, MetadataTable, PersistentBuffer
 from repro.core.writeback import StoreFuture, WritebackQueue
 
 MB = 1024 * 1024
+
+# sentinel seq for a metadata record whose durable copy lives inside the
+# journal's `metasnap` snapshot rather than an individual `meta/` frame
+_SNAP_COVERED = -1
 
 
 @dataclass
@@ -123,6 +129,15 @@ class StoreConfig:
     spill_dir: Optional[str] = "auto"
     spill_segment_bytes: int = 64 * MB
     spill_fsync: bool = False          # True: machine-crash durability
+    # size-bounded metadata log: once this many superseded-able metadata
+    # records (individual `meta/` frames + tombstones) accumulate in the
+    # journal, gc_tick snapshots the whole journaled metadata table into
+    # ONE `metasnap` record at a fresh journal generation (forced
+    # segment rotation) and truncates everything the snapshot covers —
+    # replay work for a long-lived daemon is capped at one snapshot plus
+    # the post-snapshot tail instead of growing with PUT history. 0
+    # disables snapshotting (the PR-4 retain-until-superseded baseline).
+    spill_meta_snapshot_records: int = 1024
     # temporary recovery placements (cache_put into the recovery group,
     # §5.5.2) expire this many seconds after the session completes
     recovery_retain_seconds: float = 60.0
@@ -143,27 +158,110 @@ class StoreConfig:
     prefetch_max_inflight: int = 64    # warm fetches in flight at once
 
 
-@dataclass
+class AtomicCounter:
+    """Lock-free monotonic counter that is safe under concurrent
+    writers in CPython: `add` advances an `itertools.count` — each step
+    is one C call, atomic under the GIL, so increments from any number
+    of threads never lose updates — and `value` snapshots the iterator
+    state via `__reduce__` (also a single C call) without consuming a
+    tick."""
+    __slots__ = ("_c",)
+
+    def __init__(self, start: int = 0):
+        self._c = itertools.count(start)
+
+    def add(self, n: int = 1) -> None:
+        if n == 1:
+            next(self._c)
+        else:
+            # n is small (chunks per fragment / items per sweep); each
+            # step is individually atomic, so concurrent adders
+            # interleave without losing increments
+            for _ in range(n):
+                next(self._c)
+
+    @property
+    def value(self) -> int:
+        return self._c.__reduce__()[1][0]
+
+
+class _Stat:
+    """Counter field of `StoreStats`: reads return the plain int value;
+    assignment RESEEDS the counter (single-writer sites only — the
+    prefetch mirror and stats aggregation)."""
+    __slots__ = ("attr",)
+
+    def __set_name__(self, owner, name) -> None:
+        self.attr = "_" + name
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return getattr(obj, self.attr).value
+
+    def __set__(self, obj, value) -> None:
+        setattr(obj, self.attr, AtomicCounter(int(value)))
+
+
+_STAT_FIELDS = (
+    "puts",
+    "gets",
+    "sms_chunk_hits",
+    "sms_chunk_misses",
+    "buffer_hits",
+    "migrations",
+    "compactions",
+    "degraded_hits",
+    "small_requests",
+    "large_requests",
+    "cas_rounds",             # multi-key CAS: metadata rounds issued
+    "gather_invokes",         # GET-side grouped per-function invokes
+    "array_payload_puts",     # PUTs that arrived as array payloads
+    "prefetch_hits",          # warmed chunks consumed by a GET
+    "prefetch_wasted",        # warmed chunks dropped unconsumed
+    "cos_fallback_reads",     # demand chunk reads sent to COS
+    "decode_batches",         # ready-order decode_many calls
+    "spill_replayed_writes",  # journal records re-enqueued at open
+    "spill_replayed_metas",   # metadata records restored at open
+    "spill_meta_snapshots",   # metadata-table snapshots journaled
+    "commit_tickets",         # leader-sequenced cross-shard commits
+)
+
+
 class StoreStats:
-    puts: int = 0
-    gets: int = 0
-    sms_chunk_hits: int = 0
-    sms_chunk_misses: int = 0
-    buffer_hits: int = 0
-    migrations: int = 0
-    compactions: int = 0
-    degraded_hits: int = 0
-    small_requests: int = 0
-    large_requests: int = 0
-    cas_rounds: int = 0            # multi-key CAS: metadata rounds issued
-    gather_invokes: int = 0        # GET-side grouped per-function invokes
-    array_payload_puts: int = 0    # PUTs that arrived as array payloads
-    prefetch_hits: int = 0         # warmed chunks consumed by a GET
-    prefetch_wasted: int = 0       # warmed chunks dropped unconsumed
-    cos_fallback_reads: int = 0    # demand chunk reads sent to COS
-    decode_batches: int = 0        # ready-order decode_many calls
-    spill_replayed_writes: int = 0  # journal records re-enqueued at open
-    spill_replayed_metas: int = 0   # metadata records restored at open
+    """Store counters, every field an `AtomicCounter`.
+
+    Consistency model: each counter is individually atomic and
+    monotonic — increments come from the client-daemon thread, the
+    writeback writer, and GET I/O workers WITHOUT the store lock, and
+    none are lost. Reads (attribute access, `snapshot_metadata()`, the
+    sharded aggregation) are per-counter atomic but NOT a consistent
+    cut across counters: a reader racing a PUT may observe `puts`
+    already bumped while `cas_rounds` is not yet. Derived ratios are
+    therefore approximate while traffic is in flight and exact once the
+    store is quiescent."""
+
+    for _f in _STAT_FIELDS:
+        locals()[_f] = _Stat()
+    del _f
+
+    def __init__(self, **kw):
+        for f in _STAT_FIELDS:
+            setattr(self, f, kw.pop(f, 0))
+        if kw:
+            raise TypeError(f"unknown StoreStats fields: {sorted(kw)}")
+
+    def inc(self, name: str, n: int = 1) -> None:
+        """Atomically add `n` to one counter (lock-free, multi-writer
+        safe — see the class docstring)."""
+        getattr(self, "_" + name).add(n)
+
+    def as_dict(self) -> Dict[str, int]:
+        return {f: getattr(self, f) for f in _STAT_FIELDS}
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{f}={getattr(self, f)}" for f in _STAT_FIELDS)
+        return f"StoreStats({body})"
 
     @property
     def hit_ratio(self) -> float:
@@ -171,17 +269,70 @@ class StoreStats:
         return self.sms_chunk_hits / tot if tot else 0.0
 
 
+@dataclass
+class _PreparedBatch:
+    """Round-1 state of a (possibly cross-shard) PUT batch: everything
+    `_put_many_prepare` installed, for `_put_many_commit` to finalize or
+    `_put_many_abort` to roll back. Opaque to callers."""
+    raise_on_conflict: bool = False
+    conflicted: List[str] = field(default_factory=list)
+    # (key, value, candidate Meta) CAS-installed as PENDING heads
+    installed: List[Tuple[str, object, object]] = field(default_factory=list)
+    # (key, candidate Meta, version, fragment keys)
+    metas: List[Tuple[str, object, int, List[str]]] = \
+        field(default_factory=list)
+    failed: Set[str] = field(default_factory=set)  # fragments that failed
+    resolved: bool = False            # committed or aborted
+
+
+@runtime_checkable
+class StoreFrontend(Protocol):
+    """The client-facing store surface shared by the singleton
+    `InfiniStore` and the keyspace-partitioned `ShardedStore`
+    (`repro.core.shard`). Anything program-level — checkpointing, KV
+    eviction, benchmarks — should accept this protocol rather than a
+    concrete store so it runs unchanged on one daemon or many."""
+
+    def put(self, key: str, value) -> int: ...
+    def put_async(self, key: str, value) -> StoreFuture: ...
+    def put_many(self, items, *, raise_on_conflict: bool = False
+                 ) -> Dict[str, int]: ...
+    def put_many_async(self, items, *, raise_on_conflict: bool = False
+                       ) -> StoreFuture: ...
+    def get(self, key: str) -> Optional[bytes]: ...
+    def get_async(self, key: str) -> StoreFuture: ...
+    def get_many(self, keys) -> Dict[str, Optional[bytes]]: ...
+    def get_many_async(self, keys) -> StoreFuture: ...
+    def get_array(self, key: str) -> Optional[np.ndarray]: ...
+    def get_many_arrays(self, keys) -> Dict[str, Optional[np.ndarray]]: ...
+    def get_many_arrays_async(self, keys) -> StoreFuture: ...
+    def flush_writeback(self, timeout: Optional[float] = None) -> bool: ...
+    def close(self, *, flush: bool = True) -> bool: ...
+    def gc_tick(self) -> None: ...
+    def cos_keys(self, prefix: str = "") -> List[str]: ...
+    def snapshot_metadata(self): ...
+
+
 class InfiniStore:
     def __init__(self, cfg: Optional[StoreConfig] = None, *,
                  clock: Optional[Clock] = None,
-                 cos_root: Optional[str] = None, seed: int = 0):
+                 cos_root: Optional[str] = None, seed: int = 0,
+                 cos: Optional[COS] = None, name: str = ""):
         # NOTE: cfg default must be constructed per-instance — a dataclass
         # default in the signature would be shared (and cross-mutated)
         # between every default-constructed store.
         self.cfg = cfg = cfg if cfg is not None else StoreConfig()
         self.clock = clock or Clock()
-        self.cos = COS(self.clock, visibility_lag=cfg.cos_visibility_lag,
-                       root=cos_root)
+        # `name` tags this store's threads (and nothing else) so a
+        # multi-shard deployment is debuggable; `cos` shares one COS
+        # backend between shards — a store that did not construct its
+        # COS must not shut it down either (the front-end owns it)
+        self.name = name
+        tag = f"-{name}" if name else ""
+        self._owns_cos = cos is None
+        self.cos = cos if cos is not None else \
+            COS(self.clock, visibility_lag=cfg.cos_visibility_lag,
+                root=cos_root)
         self.sms = SMS(self.clock)
         self.window = SlidingWindow(cfg.gc, self.clock)
         self.codec = RSCodec(cfg.ec)
@@ -199,6 +350,12 @@ class InfiniStore:
         # of each live object version's metadata record, truncated when
         # the version is superseded or the PUT aborts:
         self._spill_meta_seqs: Dict[str, int] = {}
+        # metadata-snapshot generation state (size-bounded replay): the
+        # live `metadrop/` tombstone seqs the NEXT snapshot truncates.
+        # (The snapshot record itself needs no tracked seq — `metasnap`
+        # is a constant key, so the journal's same-key supersession
+        # retires the previous snapshot on every new append.)
+        self._spill_tombstones: List[int] = []
         self.spill: Optional[SpillJournal] = None
         self._spill_auto = False
         spill_dir = cfg.spill_dir
@@ -218,7 +375,8 @@ class InfiniStore:
             max_retries=cfg.writeback_retries,
             backoff_base_s=cfg.writeback_backoff_s,
             start_thread=cfg.async_writeback,
-            spill=self.spill)
+            spill=self.spill,
+            name=f"cos-writeback{tag}")
         # chunk key -> function id (the daemon's chunk-function mapping)
         self.chunk_map: Dict[str, int] = {}
         # daemon's piggybacked view of each function's insertion state
@@ -233,20 +391,21 @@ class InfiniStore:
             num_recovery_functions=cfg.num_recovery_functions,
             retain_seconds=cfg.recovery_retain_seconds,
             clock=self.clock,
-            writeback=self.writeback)
+            writeback=self.writeback,
+            thread_prefix=f"recovery{tag}")
         self._pending_records: Dict[int, List[PutRecord]] = {}
         # the client-daemon thread: every mutating request runs here, in
         # submission order — async callers pipeline, sync callers block
         self._daemon_ident: Optional[int] = None
         self._exec = ThreadPoolExecutor(
-            max_workers=1, thread_name_prefix="store-client",
+            max_workers=1, thread_name_prefix=f"store-client{tag}",
             initializer=self._register_daemon)
         # GET-side I/O executor: COS demand reads + prefetch warms fan
         # out here while the daemon thread decodes (the workers only
         # touch thread-safe layers: writeback.peek / cos.get / clock)
         self._io = ThreadPoolExecutor(
             max_workers=max(1, cfg.get_io_workers),
-            thread_name_prefix="store-io")
+            thread_name_prefix=f"store-io{tag}")
         self.prefetcher = SequentialPrefetcher(PrefetchConfig(
             enabled=cfg.prefetch and cfg.pipelined_get,
             min_run=cfg.prefetch_min_run, depth=cfg.prefetch_depth))
@@ -317,7 +476,8 @@ class InfiniStore:
         self._io.shutdown(wait=True)
         ok = self.writeback.close(flush=flush)
         self.recovery.shutdown()
-        self.cos.shutdown()
+        if self._owns_cos:          # a shared (front-end-owned) COS
+            self.cos.shutdown()     # outlives any one shard
         if self.spill is not None:
             self.spill.close()
             if self._spill_auto:
@@ -337,7 +497,8 @@ class InfiniStore:
         self._io.shutdown(wait=False, cancel_futures=True)
         self.writeback.close(flush=False)
         self.recovery.shutdown()
-        self.cos.shutdown()
+        if self._owns_cos:          # COS survives a one-shard crash
+            self.cos.shutdown()
         if self.spill is not None:
             # hard close: the journal's unsynced buffer tail is
             # discarded, as a real SIGKILL would — only frames an
@@ -349,30 +510,96 @@ class InfiniStore:
     # spill journal: metadata records + restart replay (§5.3.2)
     # ------------------------------------------------------------------
 
-    def _spill_journal_meta(self, key: str, c) -> None:
+    def _spill_journal_meta(self, key: str, c, *,
+                            ticket: Optional[int] = None) -> None:
         """Journal the committed metadata of one PUT ('meta/<key>|<ver>')
         — appended at commit, after the version's fragment/stub frames
         (replay does not depend on file order: metadata is restored
         during the scan, chunks re-enqueue afterwards). The record lives
-        until the version is superseded — it is what makes an acked
-        object *resolvable* after a restart."""
+        until the version is superseded (or folded into a `metasnap`
+        snapshot) — it is what makes an acked object *resolvable* after
+        a restart. A cross-shard commit stamps its leader ticket into
+        the record (diagnostic ordering evidence across shard journals)."""
         obj = f"{key}|{c.ver}"
-        rec = json.dumps({"key": key, "ver": c.ver, "prev_ver": c.prev_ver,
-                          "num_fragments": c.num_fragments,
-                          "size": c.size}).encode()
-        seq = self.spill.append(f"meta/{obj}", rec)
+        rec = {"key": key, "ver": c.ver, "prev_ver": c.prev_ver,
+               "num_fragments": c.num_fragments, "size": c.size}
+        if ticket is not None:
+            rec["ticket"] = ticket
+        seq = self.spill.append(f"meta/{obj}", json.dumps(rec).encode())
         with self._lock:
             self._spill_meta_seqs[obj] = seq
 
     def _spill_drop_meta(self, obj: str) -> None:
         """Logically truncate a metadata record (version superseded, PUT
-        failed, or PUT aborted mid-flight)."""
+        failed, or PUT aborted mid-flight). A record whose durable copy
+        lives inside the current `metasnap` snapshot cannot be
+        individually truncated — a `metadrop/` tombstone is journaled
+        instead (replayed in seq order, so it kills the snapshot's copy
+        but never a later re-PUT); the NEXT snapshot truncates the
+        tombstones it obsoletes."""
         if self.spill is None:
             return
         with self._lock:
             seq = self._spill_meta_seqs.pop(obj, None)
-        if seq is not None:
+        if seq is None:
+            return
+        if seq == _SNAP_COVERED:
+            ts = self.spill.append(f"metadrop/{obj}", b"")
+            with self._lock:
+                self._spill_tombstones.append(ts)
+        else:
             self.spill.mark_persisted(seq)
+
+    def _maybe_snapshot_meta(self) -> None:
+        """Size-bounded metadata log (gc_tick): once enough individual
+        `meta/` records + `metadrop/` tombstones accumulate, fold the
+        whole journaled metadata table into ONE `metasnap` record at a
+        fresh journal generation (forced segment rotation) and truncate
+        everything it supersedes. Caps a long-lived daemon's replay at
+        one snapshot plus the post-snapshot tail.
+
+        Crash-window ordering: the snapshot is appended FIRST; the
+        truncation (PERSIST) frames follow it into the same group
+        commit. A torn tail can therefore only lose truncations — replay
+        then sees both the snapshot and some superseded records, and the
+        seq-ordered merge (newest head wins, tombstones kill only older
+        registrations) converges to the same table. The `metasnap` key
+        is constant, so the journal's same-key supersession retires the
+        previous snapshot automatically even if its PERSIST frame tears."""
+        lim = self.cfg.spill_meta_snapshot_records
+        if self.spill is None or not lim:
+            return
+        with self._lock:
+            individual = sum(1 for s in self._spill_meta_seqs.values()
+                             if s != _SNAP_COVERED)
+            work = individual + len(self._spill_tombstones)
+        if work < lim:
+            return
+        with self._lock:
+            objs = list(self._spill_meta_seqs)
+        entries = []
+        for obj in objs:
+            m = self.mt.load(obj)
+            if m is None or not m.is_done_ok():
+                continue
+            entries.append({"key": m.key, "ver": m.ver,
+                            "prev_ver": m.prev_ver,
+                            "num_fragments": m.num_fragments,
+                            "size": m.size})
+        self.spill.rotate()               # new journal generation
+        # constant key: the journal's same-key supersession retires the
+        # previous snapshot the moment this one is appended
+        self.spill.append("metasnap", json.dumps(entries).encode())
+        with self._lock:
+            old_seqs = [s for s in self._spill_meta_seqs.values()
+                        if s != _SNAP_COVERED]
+            for obj in self._spill_meta_seqs:
+                self._spill_meta_seqs[obj] = _SNAP_COVERED
+            tombs, self._spill_tombstones = self._spill_tombstones, []
+        for s in old_seqs + tombs:
+            self.spill.mark_persisted(s)
+        self.spill.sync()
+        self.stats.inc("spill_meta_snapshots")
 
     def _replay_spill(self) -> None:
         """Re-enqueue every journal record that survived the previous
@@ -390,6 +617,15 @@ class InfiniStore:
         for seq, key, data in self.spill.take_pending():
             if key.startswith("meta/"):
                 self._spill_restore_meta(seq, data)
+            elif key == "metasnap":
+                # a metadata-table snapshot (one per journal generation):
+                # registers every contained meta as snapshot-covered
+                self._spill_restore_snapshot(seq, data)
+            elif key.startswith("metadrop/"):
+                # tombstone for a snapshot-covered meta superseded after
+                # the snapshot was taken — seq order guarantees it kills
+                # only registrations made before it
+                self._spill_replay_tombstone(seq, key[len("metadrop/"):])
             elif key.startswith("frag/"):
                 fkey = key[len("frag/"):]
                 frag_payloads[fkey] = data
@@ -400,7 +636,7 @@ class InfiniStore:
                                  []).append((seq, key))
             else:
                 self.writeback.enqueue(key, data, seq=seq)
-                self.stats.spill_replayed_writes += 1
+                self.stats.inc("spill_replayed_writes")
         # A superseded meta can be resurrected alongside its successor
         # when the PERSIST frame truncating it was lost (torn tail): the
         # live put path only ever truncates the current head's
@@ -441,31 +677,75 @@ class InfiniStore:
                 self.writeback.enqueue(cos_key, chunks[idx].copy(),
                                        seq=seq,
                                        on_done=self._on_chunk_persisted)
-                self.stats.spill_replayed_writes += 1
+                self.stats.inc("spill_replayed_writes")
         for items in stubs.values():              # stubs whose fragment
             for seq, _ in items:                  # is gone (corruption):
                 self.spill.mark_persisted(seq)    # unrecoverable, drop
 
-    def _spill_restore_meta(self, seq: int, data) -> None:
-        try:
-            d = json.loads(bytes(data))
-            key, ver = d["key"], int(d["ver"])
-            m = Meta(key, ver, int(d.get("prev_ver", 0)))
-            m.num_fragments = int(d.get("num_fragments", 1))
-            m.size = int(d.get("size", 0))
-        except (ValueError, KeyError, TypeError):
-            # malformed record: unrestorable — truncate it so it cannot
-            # pin its segment (and replay cost) forever
-            self.spill.mark_persisted(seq)
-            return
+    def _spill_register_meta(self, d: dict, seq: int) -> None:
+        """Install one replayed metadata entry (individual record or a
+        snapshot element): table entry, head if newest, seq
+        registration (`_SNAP_COVERED` when the durable copy is the
+        snapshot). Raises on malformed input — callers decide how to
+        truncate."""
+        key, ver = d["key"], int(d["ver"])
+        m = Meta(key, ver, int(d.get("prev_ver", 0)))
+        m.num_fragments = int(d.get("num_fragments", 1))
+        m.size = int(d.get("size", 0))
         m.done(True)
         self.mt.store(f"{key}|{ver}", m)
         head = self.mt.load(key)
         if head is None or head.ver <= ver:
             self.mt.store(key, m)
+        obj = f"{key}|{ver}"
         with self._lock:
-            self._spill_meta_seqs[f"{key}|{ver}"] = seq
-        self.stats.spill_replayed_metas += 1
+            old = self._spill_meta_seqs.get(obj)
+            self._spill_meta_seqs[obj] = seq
+        if old is not None and old != _SNAP_COVERED and old != seq:
+            # the same obj was already registered from an individual
+            # record whose truncation frame tore away (crash between a
+            # snapshot's append and its PERSIST frames): the new
+            # registration supersedes it — truncate the stale record or
+            # it pins its segment (and is re-replayed) forever
+            self.spill.mark_persisted(old)
+        self.stats.inc("spill_replayed_metas")
+
+    def _spill_restore_meta(self, seq: int, data) -> None:
+        try:
+            self._spill_register_meta(json.loads(bytes(data)), seq)
+        except (ValueError, KeyError, TypeError):
+            # malformed record: unrestorable — truncate it so it cannot
+            # pin its segment (and replay cost) forever
+            self.spill.mark_persisted(seq)
+
+    def _spill_restore_snapshot(self, seq: int, data) -> None:
+        """Restore a `metasnap` record: every contained meta registers
+        as snapshot-covered (supersession must tombstone, not truncate).
+        Malformed elements are skipped — each element is independent."""
+        try:
+            entries = json.loads(bytes(data))
+        except ValueError:
+            self.spill.mark_persisted(seq)        # unrestorable snapshot
+            return
+        if not isinstance(entries, list):
+            self.spill.mark_persisted(seq)
+            return
+        for d in entries:
+            try:
+                self._spill_register_meta(d, _SNAP_COVERED)
+            except (ValueError, KeyError, TypeError):
+                continue
+
+    def _spill_replay_tombstone(self, seq: int, obj: str) -> None:
+        """Apply a `metadrop/` tombstone during replay: kill the earlier
+        registration of `obj` (individual records additionally truncate
+        — a snapshot copy cannot). The tombstone itself stays live until
+        the next snapshot folds it away."""
+        with self._lock:
+            reg = self._spill_meta_seqs.pop(obj, None)
+            self._spill_tombstones.append(seq)
+        if reg is not None and reg != _SNAP_COVERED:
+            self.spill.mark_persisted(reg)
 
     def cos_keys(self, prefix: str = "") -> List[str]:
         """COS key listing that includes acked-but-not-yet-persisted
@@ -549,7 +829,14 @@ class InfiniStore:
         buffer — the store must already own a stable copy. bytes and
         device arrays are immutable and pass through zero-copy."""
         if needs_snapshot(value):
-            return as_u8(value).copy()
+            snap = as_u8(value).copy()
+            # the snapshot is store-owned and immutable by contract;
+            # marking it read-only makes a second snapshot pass (the
+            # sharded front-end snapshots at its surface, then delegates
+            # into a shard's put_many_async) a no-op instead of another
+            # full memcpy of the payload
+            snap.flags.writeable = False
+            return snap
         return value
 
     def put_async(self, key: str, value) -> StoreFuture:
@@ -589,34 +876,102 @@ class InfiniStore:
 
     def _put_many_impl(self, items, *, raise_on_conflict: bool = False
                        ) -> Dict[str, int]:
+        """Single-store PUT batch: prepare + immediate self-commit (the
+        degenerate one-shard case of the cross-shard protocol)."""
+        prep = self._put_many_prepare(items,
+                                      raise_on_conflict=raise_on_conflict)
+        try:
+            return self._put_many_commit(prep)
+        except BaseException:
+            # a commit-side failure (GC / journal I/O) must not leave
+            # PENDING heads behind — readers would block and later PUTs
+            # would conflict forever
+            self._put_many_abort(prep)
+            raise
+
+    def prepare_put_many_async(self, items, *,
+                               raise_on_conflict: bool = False
+                               ) -> StoreFuture:
+        """Round 1 of the cross-shard commit protocol: run this shard's
+        sub-batch up to (but NOT including) the ack point. The future
+        resolves to an opaque prepared-batch handle for
+        `commit_put_many_async` / `abort_put_many_async`. Until one of
+        those runs, the new versions are PENDING — invisible to readers
+        and un-acked. Same-key PUTs meanwhile wait on the pending head
+        exactly like any concurrent PUT."""
+        items = list(items.items()) if isinstance(items, dict) \
+            else list(items)
+        items = [(k, self._snapshot_value(v)) for k, v in items]
+        return self._submit(
+            lambda: self._put_many_prepare(
+                items, raise_on_conflict=raise_on_conflict))
+
+    def commit_put_many_async(self, prep: "_PreparedBatch", *,
+                              ticket: Optional[int] = None) -> StoreFuture:
+        """Round 2 (commit): finalize a prepared sub-batch under the
+        leader's commit ticket. Resolves to {key: version} like
+        `put_many`. A commit-side failure (journal I/O, GC) aborts the
+        batch's unfinalized heads before propagating — a PENDING head
+        left behind would block every later reader and writer of that
+        key forever."""
+        def run():
+            try:
+                return self._put_many_commit(prep, ticket=ticket)
+            except BaseException:
+                self._put_many_abort(prep)
+                raise
+        return self._submit(run)
+
+    def abort_put_many_async(self, prep: "_PreparedBatch") -> StoreFuture:
+        """Round 2 (abort): roll a prepared sub-batch back so none of
+        its versions ever becomes visible (another shard failed to
+        prepare — the batch must not be half-visible)."""
+        return self._submit(lambda: self._put_many_abort(prep))
+
+    def _put_many_prepare(self, items, *, raise_on_conflict: bool = False
+                          ) -> "_PreparedBatch":
+        """CAS-install the version heads (they stay PENDING), fragment,
+        store chunks into SMS slabs, journal payload + stub frames, and
+        hand chunk persistence to the writeback queue. Everything up to
+        — but excluding — the ack point: metadata completion, the meta
+        journal record, old-version GC, and the journal group-commit
+        all wait for `_put_many_commit`."""
         if len({k for k, _ in items}) != len(items):
             # a duplicate key would CAS against its own in-flight version
             raise ValueError("duplicate keys in put_many batch")
-        conflicted: List[str] = []
-        installed: List[Tuple[str, object, object]] = []
-        metas: List[Tuple[str, object, int, List[str]]] = []
+        prep = _PreparedBatch(raise_on_conflict=raise_on_conflict)
+        conflicted = prep.conflicted
+        installed = prep.installed
+        metas = prep.metas
         frags: List[Tuple[str, np.ndarray]] = []
-        out: Dict[str, int] = {}
         try:
             cands = []
             for key, value in items:
-                self.stats.puts += 1
+                self.stats.inc("puts")
                 if is_array_payload(value):
-                    self.stats.array_payload_puts += 1
+                    self.stats.inc("array_payload_puts")
                 self._track_queue(payload_nbytes(value))
                 cands.append((key, value, self.mt.prepare(key, 1)))
             # multi-key CAS: one metadata round per retry wave, not one
             # round per key
             pending = cands
             while pending:
-                self.stats.cas_rounds += 1
+                self.stats.inc("cas_rounds")
                 results = self.mt.cas_many([(k, c) for k, _, c in pending])
                 nxt = []
                 for (key, value, c), (m, ok) in zip(pending, results):
                     if ok:
+                        # prepared-but-uncommitted until _put_many_commit
+                        # (see Meta.prepared; cleared by done())
+                        c.prepared = True
                         installed.append((key, value, c))
                     elif not m.is_done():         # concurrent PUT in flight
-                        m.wait(timeout=5.0)
+                        # a prepared 2PC head resolves via a commit task
+                        # queued BEHIND us on this same daemon — waiting
+                        # would stall the whole shard until the timeout,
+                        # so conflict immediately on those
+                        if not m.prepared:
+                            m.wait(timeout=5.0)
                         if raise_on_conflict:
                             raise ConcurrentPutError(key)
                         conflicted.append(key)
@@ -649,36 +1004,7 @@ class InfiniStore:
                     self.pb.create(fkey, frag)
                     fkeys.append(fkey)
                     frags.append((fkey, frag))
-            failed = self._put_fragments(frags)
-            # ACK POINT: chunks are in SMS slabs, fragments in the
-            # persistent buffer, insertion logs appended. COS chunk
-            # persistence drains asynchronously from the writeback queue;
-            # the buffer entry lives until its last chunk persists.
-            for key, c, ver, fkeys in metas:
-                frag_failed = any(fk in failed for fk in fkeys)
-                for fkey in fkeys:
-                    if frag_failed:
-                        self.pb.release_all(fkey)
-                        self._spill_drop_frag(fkey)
-                    elif self.pb.release(fkey):   # drop the PUT's own ref
-                        self._spill_drop_frag(fkey)
-                ok = c.done(not frag_failed)
-                if ok and self.spill is not None:
-                    # journal the metadata AFTER the version's payload
-                    # frames (they were appended in _put_fragments): a
-                    # torn tail then can only lose the meta of a PUT
-                    # whose data frames are also gone — replay can never
-                    # restore a head version with no recoverable data,
-                    # which would shadow the older durable version
-                    self._spill_journal_meta(key, c)
-                if ok and c.prev_ver > 0:
-                    self._gc_old_version(key, c.prev_ver)
-                out[key] = ver if ok else -1
-            if self.spill is not None:
-                # ACK DURABILITY POINT: group-commit every journal frame
-                # this batch appended (metadata + chunk + log records)
-                # before any caller observes the ack
-                self.spill.sync()
+            prep.failed = self._put_fragments(frags)
         except BaseException:
             # finalize every CAS-installed key that hasn't completed as
             # failed so no metadata head stays PENDING forever (readers
@@ -696,9 +1022,92 @@ class InfiniStore:
                 if not c.is_done():               # installed, not fragmented
                     c.done(False)
             raise
-        for key in conflicted:
+        return prep
+
+    def _put_many_commit(self, prep: "_PreparedBatch", *,
+                         ticket: Optional[int] = None) -> Dict[str, int]:
+        """The ACK POINT: chunks are in SMS slabs, fragments in the
+        persistent buffer, insertion logs appended — mark each version
+        done, journal its metadata, GC the superseded version, and
+        group-commit the journal. COS chunk persistence keeps draining
+        asynchronously from the writeback queue; the buffer entry lives
+        until its last chunk persists. `ticket` is the leader-issued
+        cross-shard commit sequence (recorded in the journaled
+        metadata); None for single-store batches."""
+        if prep.resolved:                     # double-commit is a bug
+            raise RuntimeError("prepared batch already resolved")
+        out: Dict[str, int] = {}
+        for key, c, ver, fkeys in prep.metas:
+            frag_failed = any(fk in prep.failed for fk in fkeys)
+            for fkey in fkeys:
+                if frag_failed:
+                    self.pb.release_all(fkey)
+                    self._spill_drop_frag(fkey)
+                elif self.pb.release(fkey):   # drop the PUT's own ref
+                    self._spill_drop_frag(fkey)
+            ok = c.done(not frag_failed)
+            if ok and self.spill is not None:
+                # journal the metadata AFTER the version's payload
+                # frames (they were appended in _put_fragments): a
+                # torn tail then can only lose the meta of a PUT
+                # whose data frames are also gone — replay can never
+                # restore a head version with no recoverable data,
+                # which would shadow the older durable version
+                self._spill_journal_meta(key, c, ticket=ticket)
+            if ok and c.prev_ver > 0:
+                self._gc_old_version(key, c.prev_ver)
+            out[key] = ver if ok else -1
+        if ticket is not None:
+            self.stats.inc("commit_tickets")
+        if self.spill is not None:
+            # ACK DURABILITY POINT: group-commit every journal frame
+            # this batch appended (metadata + chunk + log records)
+            # before any caller observes the ack
+            self.spill.sync()
+        for key in prep.conflicted:
             out[key] = -1
+        prep.resolved = True
         return out
+
+    def _put_many_abort(self, prep: "_PreparedBatch") -> None:
+        """Roll a prepared batch back: no version of it may ever become
+        visible. Persistent-buffer entries and journal payload records
+        are dropped, slab chunks rolled back out, heads finalized as
+        failed (readers fall through to the previous version). Chunks
+        already handed to the writeback queue may still persist as
+        orphans in COS — they are unreachable: no committed metadata
+        references them. Idempotent: aborting an already-resolved batch
+        (the leader's best-effort abort fan-out) is a no-op."""
+        if prep.resolved:
+            return
+        for key, c, ver, fkeys in prep.metas:
+            if c.is_done():                       # already finalized
+                continue
+            for fkey in fkeys:
+                self.pb.release_all(fkey)
+                self._spill_drop_frag(fkey)
+                for idx in range(self.cfg.ec.n):
+                    self._free_chunk(f"{fkey}#{idx}")
+            c.done(False)
+        for _, _, c in prep.installed:
+            if not c.is_done():
+                c.done(False)
+        if self.spill is not None:
+            self.spill.sync()                     # persist the truncations
+        prep.resolved = True
+
+    def _free_chunk(self, ckey: str) -> None:
+        """Drop one chunk from the daemon's chunk map and its slab,
+        releasing the placement bytes — the rollback shared by
+        superseded-version GC and 2PC batch abort."""
+        with self._lock:
+            fid = self.chunk_map.pop(ckey, None)
+        if fid is not None and fid in self.sms.slabs:
+            slab = self.sms.get(fid)
+            data = slab.load(ckey)
+            if slab.delete(ckey) and data is not None:
+                self.placement.release(fid, len(data))
+        self.window.unmark(ckey)
 
     def _gc_old_version(self, key: str, ver: int) -> None:
         """Free the superseded version's SMS chunks (COS retains them for
@@ -708,14 +1117,7 @@ class InfiniStore:
         nfrags = m.num_fragments if m is not None else 1
         for fi in range(nfrags):
             for idx in range(self.cfg.ec.n):
-                ckey = f"{key}|{ver}/f{fi}#{idx}"
-                fid = self.chunk_map.pop(ckey, None)
-                if fid is not None and fid in self.sms.slabs:
-                    slab = self.sms.get(fid)
-                    data = slab.load(ckey)
-                    if slab.delete(ckey) and data is not None:
-                        self.placement.release(fid, len(data))
-                self.window.unmark(ckey)
+                self._free_chunk(f"{key}|{ver}/f{fi}#{idx}")
 
     def _place_chunk(self, idx: int, nbytes: int) -> int:
         """PlaceChunk with the SLAB as the authority on fullness: if the
@@ -783,16 +1185,20 @@ class InfiniStore:
             return set()
         all_chunks = self.codec.encode_many([frag for _, frag in frags],
                                             as_arrays=True)
+        # single-fragment batches skip the compaction memcpy: the stacked
+        # encode buffer IS that fragment's chunk set (data rows + parity,
+        # ~(k+p)/k of the payload), so aliasing it pins nothing foreign —
+        # and the copy was GIL-held time that throttled multi-daemon
+        # scale-out. Multi-fragment batches still compact each chunk out
+        # so one long-lived chunk never pins the whole batch buffer.
+        compact = len(frags) > 1
         groups: Dict[int, List[Tuple[str, str, object]]] = {}
         for (fkey, _), chunks in zip(frags, all_chunks):
             for idx, chunk in enumerate(chunks):
                 ckey = f"{fkey}#{idx}"
                 fid = self._place_chunk(idx, len(chunk))
-                # compact the chunk out of the batch-wide stacked encode
-                # buffer (one memcpy, as the legacy tobytes did) so a
-                # long-lived slab/COS chunk never pins the whole batch
-                groups.setdefault(fid, []).append((fkey, ckey,
-                                                   chunk.copy()))
+                groups.setdefault(fid, []).append(
+                    (fkey, ckey, chunk.copy() if compact else chunk))
         if self.spill is not None and self.cfg.async_writeback:
             # journal each fragment's pre-EC payload ONCE (zero-copy u8
             # view — the chunks are deterministically derivable) plus a
@@ -934,7 +1340,7 @@ class InfiniStore:
         plans: List[Tuple[str, object, List[object]]] = []
         gather_fkeys: List[str] = []
         for key in keys:
-            self.stats.gets += 1
+            self.stats.inc("gets")
             m = self._resolve_meta(key)
             if m is None:
                 out[key] = None
@@ -944,7 +1350,7 @@ class InfiniStore:
                 fkey = f"{key}|{m.ver}/f{fi}"
                 buf = self.pb.load(fkey)             # read-after-write
                 if buf is not None:
-                    self.stats.buffer_hits += 1
+                    self.stats.inc("buffer_hits")
                     parts.append(buf)
                 else:
                     parts.append(fkey)
@@ -1099,7 +1505,7 @@ class InfiniStore:
                 # no readahead in flight for this chunk — issue the read.
                 # Adopted warms are counted as hits only when their data
                 # actually arrives (stage 3), never at adoption time
-                self.stats.cos_fallback_reads += 1
+                self.stats.inc("cos_fallback_reads")
                 fut = self._io.submit(self._cos_fetch_task,
                                       f"chunk/{ckey}")
             futs[fut] = (fkey, idx, ckey)
@@ -1129,7 +1535,7 @@ class InfiniStore:
                 batch, queue = queue[:batch_size], queue[batch_size:]
                 vals = self.codec.decode_many([have[f] for f in batch],
                                               as_arrays=as_arrays)
-                self.stats.decode_batches += 1
+                self.stats.inc("decode_batches")
                 out.update(zip(batch, vals))
                 continue
             ready, _ = wait(list(futs), return_when=FIRST_COMPLETED)
@@ -1182,11 +1588,15 @@ class InfiniStore:
         return val[:size] if size else val
 
     def _resolve_meta(self, key: str):
-        """Follow the version chain to the newest done-ok metadata."""
+        """Follow the version chain to the newest done-ok metadata. A
+        head prepared by an uncommitted cross-shard batch is NOT waited
+        on (its commit is queued behind this GET on the same daemon):
+        uncommitted data is invisible, so the read falls through to the
+        previous version immediately."""
         m = self.mt.load(key)
         attempts = 0
         while m is not None and not m.is_done_ok() and attempts < 8:
-            if not m.is_done():                       # concurrent PUT
+            if not m.is_done() and not m.prepared:    # concurrent PUT
                 m.wait(timeout=5.0)
             if m.is_done_ok():
                 break
@@ -1220,7 +1630,7 @@ class InfiniStore:
                     if idx in got:
                         continue
                     ckey = f"{fkey}#{idx}"
-                    self.stats.cos_fallback_reads += 1
+                    self.stats.inc("cos_fallback_reads")
                     data = self._cos_read_consistent(f"chunk/{ckey}")
                     if data is not None:
                         got[idx] = data
@@ -1239,15 +1649,15 @@ class InfiniStore:
         out: List[Tuple[str, int, object]] = []
         slab = self.sms.slabs.get(fid)
         if slab is None:                              # function released
-            self.stats.sms_chunk_misses += len(items)
+            self.stats.inc("sms_chunk_misses", len(items))
             return out
         state = self.window.state_of_function(fid)
         if state is None or state == BucketState.RELEASED:
-            self.stats.sms_chunk_misses += len(items)
+            self.stats.inc("sms_chunk_misses", len(items))
             return out
         if fid not in invoked:
             self._invoke(fid, 0, "request")
-            self.stats.gather_invokes += 1
+            self.stats.inc("gather_invokes")
             invoked.add(fid)
         nbytes = 0
         for fkey, idx, ckey in items:
@@ -1255,15 +1665,15 @@ class InfiniStore:
             if data is None:
                 data = slab.load(ckey)
             if data is None:
-                self.stats.sms_chunk_misses += 1
+                self.stats.inc("sms_chunk_misses")
                 continue
-            self.stats.sms_chunk_hits += 1
+            self.stats.inc("sms_chunk_hits")
             self.prefetcher.consume(ckey)
             nbytes += len(data)
             # mark re-accessed data for compaction (§5.3.3)
             self.window.mark(ckey)
             if state == BucketState.DEGRADED:
-                self.stats.degraded_hits += 1
+                self.stats.inc("degraded_hits")
                 degraded_out.append(ckey)
             out.append((fkey, idx, data))
         if nbytes:
@@ -1419,7 +1829,7 @@ class InfiniStore:
         self.sms.get(fid).cache_put(ckey, data)
         with self._lock:
             self.chunk_map[ckey] = fid
-        self.stats.migrations += 1
+        self.stats.inc("migrations")
 
     def _migrate_chunks(self, ckeys: List[str]) -> None:
         """Compaction: move marked/hit chunks into the latest GC-bucket by
@@ -1473,7 +1883,7 @@ class InfiniStore:
                     log.term, log.last_hash, log.diff_rank
                 self.daemon_view[fid] = log.piggyback()
                 self.window.unmark(ckey)
-                self.stats.compactions += 1
+                self.stats.inc("compactions")
 
     def gc_tick(self) -> None:
         """Run due GC + one compaction round + warmups + a writeback
@@ -1510,6 +1920,9 @@ class InfiniStore:
         self.recovery.sweep_expired(self.clock.now())
         # provider-side reclamation of long-idle instances
         self.sms.reclaim_idle(self.cfg.provider_idle_reclaim)
+        # size-bounded metadata log: fold accumulated meta records +
+        # tombstones into one snapshot at a new journal generation
+        self._maybe_snapshot_meta()
         if self.spill is not None:
             # group-commit any journal frames the tick produced
             # (migration/compaction insertion-log appends)
@@ -1534,9 +1947,9 @@ class InfiniStore:
 
     def _track_queue(self, nbytes: int) -> None:
         if nbytes <= self.cfg.small_request_bytes:
-            self.stats.small_requests += 1
+            self.stats.inc("small_requests")
         else:
-            self.stats.large_requests += 1
+            self.stats.inc("large_requests")
 
     def inject_failure(self, fid: int) -> None:
         """Simulate provider reclaiming an instance (tests/benchmarks)."""
@@ -1549,6 +1962,20 @@ class InfiniStore:
                    for b in self.window.buckets(state))
 
     def snapshot_metadata(self):
+        """Point-in-time view of the daemon's tables and counters.
+
+        Consistency model: every counter read is individually atomic
+        (see `StoreStats`), but the snapshot is NOT a consistent cut —
+        it is assembled without the store lock while the daemon, the
+        writeback writer, and GET I/O workers keep mutating, so
+        counters may be mutually skewed by whatever was in flight.
+        Structural maps (`mt`, `chunk_map`) are copied under their own
+        locks and are internally consistent."""
+        with self._lock:
+            meta_records = sum(1 for s in self._spill_meta_seqs.values()
+                               if s != _SNAP_COVERED)
+            snap_covered = len(self._spill_meta_seqs) - meta_records
+            tombstones = len(self._spill_tombstones)
         return {"mt": self.mt.snapshot(),
                 "chunk_map": dict(self.chunk_map),
                 "get_pipeline": {
@@ -1559,6 +1986,13 @@ class InfiniStore:
                     "decode_batches": self.stats.decode_batches,
                     "pending_migrations": len(self._pending_migrations),
                     "prefetch": self.prefetcher.snapshot()},
+                "meta_log": {
+                    "individual_records": meta_records,
+                    "snapshot_covered": snap_covered,
+                    "tombstones": tombstones,
+                    "snapshots_taken": self.stats.spill_meta_snapshots,
+                    "generation": self.spill.generation
+                    if self.spill is not None else None},
                 "spill": self.spill.snapshot()
                 if self.spill is not None else None}
 

@@ -32,6 +32,15 @@ class Meta:
         self._event = threading.Event()
         self.num_fragments = 1
         self.size = 0
+        # True while this head sits prepared-but-uncommitted in a
+        # cross-shard two-round batch. Readers and conflicting writers
+        # must NOT block on such a head (the commit/abort that resolves
+        # it is queued BEHIND them on the same single-threaded shard
+        # daemon — waiting would stall the whole shard until timeout):
+        # reads fall through to the previous version (uncommitted data
+        # is invisible), writers conflict immediately. Cleared by
+        # `done()` on commit and abort alike.
+        self.prepared = False
 
     # Fig. 24 primitives ----------------------------------------------------
 
@@ -46,6 +55,7 @@ class Meta:
 
     def done(self, ok: bool) -> bool:
         self.status = MetaStatus.DONE_OK if ok else MetaStatus.DONE_FAIL
+        self.prepared = False
         self._event.set()
         return ok
 

@@ -78,7 +78,8 @@ class WritebackQueue:
 
     def __init__(self, cos, *, max_depth: int = 256, max_retries: int = 8,
                  backoff_base_s: float = 0.005, backoff_cap_s: float = 0.5,
-                 start_thread: bool = True, spill=None):
+                 start_thread: bool = True, spill=None,
+                 name: str = "cos-writeback"):
         self.cos = cos
         # optional SpillJournal: enqueues are journaled before ack and
         # truncated on persistence (crash-consistent pending map)
@@ -102,8 +103,9 @@ class WritebackQueue:
         self._errors: List[str] = []
         self._thread: Optional[threading.Thread] = None
         if start_thread:
+            # `name` tags the writer thread per store instance (shard)
             self._thread = threading.Thread(target=self._writer_loop,
-                                            name="cos-writeback",
+                                            name=name,
                                             daemon=True)
             self._thread.start()
 

@@ -9,6 +9,15 @@ on device (`sms.Ref` entries); a host-side COS copy enables eviction +
 on-demand restore when an evicted sequence resumes — the paper's
 on-demand migration.
 
+The eviction tier is pluggable: by default pages round-trip through a
+private raw `COS`, but passing `store=` (any `StoreFrontend` —
+`InfiniStore` or the keyspace-partitioned `ShardedStore`) routes
+evict/restore through the full store data path instead: erasure-coded,
+versioned, crash-journaled, and — under a `ShardedStore` — served by
+whichever shard daemon owns each `kv/<seq>/p<j>` key, so KV eviction
+traffic from many sequences fans out across daemons instead of
+serializing on one.
+
 The device pool uses the same layout the dry-run lowers:
 k/v (L, B, P, ps, K, hd) with per-sequence block tables (B, P) mapping
 logical page -> physical slot within the sequence's region.
@@ -47,13 +56,19 @@ class SMSPagedKV:
                  max_len: int, page_size: int = 64,
                  gc: Optional[GCConfig] = None,
                  pages_per_slab: int = 64,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None,
+                 store=None):
         self.cfg = cfg
         self.B = batch_slots
         self.ps = page_size
         self.P = -(-max_len // page_size)
         self.clock = clock or Clock()
-        self.cos = COS(self.clock)
+        # optional StoreFrontend eviction tier (see module docstring);
+        # None keeps the raw private-COS baseline. With a store, the
+        # private COS (and its worker pool) is never built — every
+        # evict/restore path routes through the store instead.
+        self.store = store
+        self.cos = COS(self.clock) if store is None else None
         self.sms = SMS(self.clock)
         gc = gc or GCConfig(gc_interval=60.0, active_intervals=2,
                             degraded_intervals=2)
@@ -124,7 +139,12 @@ class SMSPagedKV:
         b, j, phys, fid = self.pages[key]
         payload = np.concatenate([as_u8(self.k_pool[:, b, phys]),
                                   as_u8(self.v_pool[:, b, phys])])
-        self.cos.put(key, payload)
+        if self.store is not None:
+            # store-backed tier: versioned, erasure-coded, journaled;
+            # under a sharded store the owning shard daemon serves it
+            self.store.put(key, payload)
+        else:
+            self.cos.put(key, payload)
         self._free[b].add(phys)
         slab = self.sms.slabs.get(fid)
         if slab is not None:
@@ -136,7 +156,8 @@ class SMSPagedKV:
         """On-demand migration: bring an evicted page back from COS into
         a free slot of region b (paper §5.3.3)."""
         key = self._key(seq_id, j)
-        raw = self.cos.get(key)
+        raw = self.store.get_array(key) if self.store is not None \
+            else self.cos.get(key)
         if raw is None:
             raise KeyError(f"page {key} not in COS")
         return self._install_page(b, seq_id, j, raw)
@@ -150,6 +171,17 @@ class SMSPagedKV:
                 if self._key(seq_id, j) not in self.pages]
         if not todo:
             return 0
+        if self.store is not None:
+            # one batched gather: the store groups SMS reads per
+            # function, fans COS fallbacks out on its I/O executor, and
+            # a sharded store splits the batch across shard daemons
+            arrs = self.store.get_many_arrays([key for _, key in todo])
+            for j, key in todo:
+                raw = arrs.get(key)
+                if raw is None:
+                    raise KeyError(f"page {key} not in COS")
+                self._install_page(b, seq_id, j, raw)
+            return len(todo)
         # COS's own worker pool does the fan-out: no per-call executor
         futs = [(j, key, self.cos.get_async(key)) for j, key in todo]
         for j, key, fut in futs:

@@ -1,0 +1,522 @@
+"""Sharded multi-daemon scale-out (`repro.core.shard`): router
+determinism, the full StoreFrontend contract at the sharded surface,
+concurrent multi-threaded clients (uniform + hot-shard skew), the
+crash-one-shard -> restart -> zero-acked-loss contract, and cross-shard
+`put_many` atomicity under injected shard failure."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Clock, HashRouter, RangeRouter, ShardedStore,
+                        StoreConfig, StoreFrontend)
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+from repro.core.store import AtomicCounter, StoreStats
+
+MB = 1024 * 1024
+
+
+def make_sharded(num_shards=4, *, spill_dir=None, cos_root=None,
+                 router="hash", range_boundaries=None, **kw):
+    cfg = StoreConfig(ec=ECConfig(k=4, p=2),
+                      function_capacity=8 * MB,
+                      fragment_bytes=1 * MB,
+                      gc=GCConfig(gc_interval=1e9),
+                      num_recovery_functions=4,
+                      spill_dir=spill_dir, **kw)
+    return ShardedStore(cfg, num_shards=num_shards, router=router,
+                        range_boundaries=range_boundaries,
+                        clock=Clock(), cos_root=cos_root)
+
+
+# ---------------------------------------------------------------------------
+# routers
+# ---------------------------------------------------------------------------
+
+def test_hash_router_deterministic_and_covering():
+    r = HashRouter(8)
+    keys = [f"obj/{i}" for i in range(512)]
+    a = [r.shard_of(k) for k in keys]
+    b = [r.shard_of(k) for k in keys]
+    assert a == b                                  # stable across calls
+    assert set(a) == set(range(8))                 # every shard used
+    counts = np.bincount(a, minlength=8)
+    assert counts.min() > 0.3 * counts.mean()      # roughly uniform
+
+
+def test_range_router_contiguous():
+    r = RangeRouter(["g", "n", "t"])
+    assert r.num_shards == 4
+    assert r.shard_of("apple") == 0
+    assert r.shard_of("g") == 1                    # boundary -> right shard
+    assert r.shard_of("horse") == 1
+    assert r.shard_of("queen") == 2
+    assert r.shard_of("zebra") == 3
+
+
+def test_router_config_validation():
+    with pytest.raises(ValueError):
+        HashRouter(0)
+    with pytest.raises(ValueError):
+        make_sharded(router="range")               # boundaries required
+    with pytest.raises(ValueError):
+        make_sharded(router="bogus")
+
+
+# ---------------------------------------------------------------------------
+# StoreFrontend contract at the sharded surface
+# ---------------------------------------------------------------------------
+
+def test_sharded_store_is_a_store_frontend():
+    st = make_sharded(2)
+    try:
+        assert isinstance(st, StoreFrontend)
+    finally:
+        st.close()
+
+
+def test_put_get_roundtrip_across_shards():
+    st = make_sharded(4)
+    rng = np.random.default_rng(0)
+    vals = {f"k{i}": rng.bytes(40_000) for i in range(24)}
+    try:
+        for k, v in vals.items():
+            assert st.put(k, v) == 1
+        for k, v in vals.items():
+            assert st.get(k) == v
+            arr = st.get_array(k)
+            assert bytes(arr) == v
+        assert st.get("missing") is None
+        # versioned update routes to the same shard
+        st.put("k0", b"v2" * 1000)
+        assert st.get("k0") == b"v2" * 1000
+        assert st.stats.puts == len(vals) + 1
+        bal = st.shard_balance()
+        assert sum(bal) == len(vals)
+        assert st.flush_writeback(timeout=60.0)
+    finally:
+        assert st.close()
+
+
+def test_cross_shard_put_many_and_batched_gets():
+    st = make_sharded(4)
+    rng = np.random.default_rng(1)
+    batch = {f"b{i}": rng.bytes(25_000) for i in range(16)}
+    try:
+        out = st.put_many(batch)
+        assert all(v == 1 for v in out.values())
+        # one leader ticket for the whole cross-shard batch
+        assert st.tickets_issued() == 1
+        assert st.stats.commit_tickets == len(
+            {st.router.shard_of(k) for k in batch})
+        got = st.get_many(list(batch))
+        assert all(got[k] == batch[k] for k in batch)
+        arrs = st.get_many_arrays(list(batch))
+        assert all(bytes(arrs[k]) == batch[k] for k in batch)
+        snap = st.snapshot_metadata()
+        assert snap["num_shards"] == 4
+        assert sum(snap["balance"]) == len(batch)
+        assert snap["commit_tickets_issued"] == 1
+        assert len(snap["shards"]) == 4
+    finally:
+        assert st.close()
+
+
+def test_single_shard_batch_skips_leader():
+    """A batch that lands on one shard takes the fast path: no ticket."""
+    st = make_sharded(4, router="range", range_boundaries=["g", "n", "t"])
+    try:
+        batch = {f"a{i}": b"x" * 1000 for i in range(6)}   # all shard 0
+        out = st.put_many(batch)
+        assert all(v == 1 for v in out.values())
+        assert st.tickets_issued() == 0
+        assert st.stats.commit_tickets == 0
+        assert st.shard_balance() == [6, 0, 0, 0]
+    finally:
+        assert st.close()
+
+
+def test_async_futures_pipeline():
+    st = make_sharded(4)
+    rng = np.random.default_rng(2)
+    vals = {f"p{i}": rng.bytes(20_000) for i in range(12)}
+    try:
+        futs = [st.put_async(k, v) for k, v in vals.items()]
+        assert [f.result() for f in futs] == [1] * len(vals)
+        gfut = st.get_many_async(list(vals))
+        got = gfut.result()
+        assert all(got[k] == vals[k] for k in vals)
+    finally:
+        assert st.close()
+
+
+# ---------------------------------------------------------------------------
+# concurrent multi-threaded clients
+# ---------------------------------------------------------------------------
+
+def _hammer(st, n_threads, per_thread, key_fn, nbytes=8_000):
+    """n_threads clients, each PUTs then verifies its own keys."""
+    errors = []
+    barrier = threading.Barrier(n_threads)
+
+    def client(t):
+        try:
+            rng = np.random.default_rng(t)
+            mine = {key_fn(t, i): rng.bytes(nbytes)
+                    for i in range(per_thread)}
+            barrier.wait(timeout=30)
+            futs = [st.put_async(k, v) for k, v in mine.items()]
+            for f in futs:
+                assert f.result(timeout=60) == 1
+            got = st.get_many_async(list(mine)).result(timeout=60)
+            for k, v in mine.items():
+                assert got[k] == v, f"bad readback {k}"
+        except BaseException as e:                 # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=120)
+    assert not errors, errors[:3]
+
+
+def test_concurrent_clients_uniform_keys():
+    st = make_sharded(4)
+    try:
+        _hammer(st, n_threads=8, per_thread=12,
+                key_fn=lambda t, i: f"u/{t}/{i}")
+        assert st.stats.puts == 8 * 12
+        # uniform keys spread over every shard
+        assert all(b > 0 for b in st.shard_balance())
+        assert st.flush_writeback(timeout=120.0)
+    finally:
+        assert st.close()
+
+
+def test_concurrent_clients_hot_shard_skew():
+    """Every client hammers ONE shard's keyspace (range-routed): the
+    owning daemon serializes correctly under contention and the other
+    shards stay empty."""
+    st = make_sharded(4, router="range", range_boundaries=["g", "n", "t"])
+    try:
+        _hammer(st, n_threads=8, per_thread=10,
+                key_fn=lambda t, i: f"zz/{t}/{i}")   # all -> last shard
+        bal = st.shard_balance()
+        assert bal == [0, 0, 0, 80]
+        assert st.flush_writeback(timeout=120.0)
+    finally:
+        assert st.close()
+
+
+def test_concurrent_cross_shard_batches():
+    """Parallel cross-shard put_many batches: every batch fully commits
+    and tickets are unique per batch."""
+    st = make_sharded(4)
+    errors = []
+
+    def client(t):
+        try:
+            batch = {f"cb/{t}/{i}": bytes([t]) * 4000 for i in range(8)}
+            out = st.put_many(batch)
+            assert all(v == 1 for v in out.values())
+            got = st.get_many(list(batch))
+            assert all(got[k] == batch[k] for k in batch)
+        except BaseException as e:                 # noqa: BLE001
+            errors.append(e)
+
+    try:
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(6)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=120)
+        assert not errors, errors[:3]
+        assert st.tickets_issued() == 6
+    finally:
+        assert st.close()
+
+
+# ---------------------------------------------------------------------------
+# crash one shard mid-stream -> survivors serve -> restart -> zero loss
+# ---------------------------------------------------------------------------
+
+def test_crash_one_shard_survivors_serve_restart_zero_loss(tmp_path):
+    st = make_sharded(4, spill_dir=str(tmp_path / "spill"))
+    rng = np.random.default_rng(3)
+    vals = {f"k{i}": rng.bytes(30_000) for i in range(32)}
+    try:
+        st.pause_writeback()           # everything acked-but-unpersisted
+        for k, v in vals.items():
+            assert st.put(k, v) == 1
+        victim = 1
+        dead_keys = [k for k in vals if st.router.shard_of(k) == victim]
+        assert dead_keys                           # scenario is real
+        st.simulate_crash(shard=victim)
+        # survivors keep serving THEIR keyspaces while shard 1 is down
+        for k, v in vals.items():
+            if st.router.shard_of(k) != victim:
+                assert st.get(k) == v
+        # restart replays the dead shard's journal: zero acked loss
+        st.restart_shard(victim)
+        for k, v in vals.items():
+            assert st.get(k) == v, f"lost acked write {k}"
+        replayed = st.shards[victim].stats.spill_replayed_writes
+        assert replayed > 0
+        assert st.flush_writeback(timeout=120.0)
+    finally:
+        st.close()
+
+
+def test_whole_store_crash_restart_zero_loss(tmp_path):
+    spill = str(tmp_path / "spill")
+    cosr = str(tmp_path / "cos")
+    st = make_sharded(4, spill_dir=spill, cos_root=cosr)
+    rng = np.random.default_rng(4)
+    vals = {f"w{i}": rng.bytes(20_000) for i in range(16)}
+    for k, v in vals.items():
+        st.put(k, v)
+    root = st.simulate_crash()
+    assert root == spill
+    st2 = make_sharded(4, spill_dir=spill, cos_root=cosr)
+    try:
+        for k, v in vals.items():
+            assert st2.get(k) == v, f"lost {k} across full restart"
+        assert st2.flush_writeback(timeout=120.0)
+    finally:
+        st2.close()
+
+
+# ---------------------------------------------------------------------------
+# cross-shard put_many atomicity under injected shard failure
+# ---------------------------------------------------------------------------
+
+def _failing_prepare(st, sid, exc=None):
+    exc = exc or RuntimeError("injected shard failure")
+
+    def boom(items, **kw):
+        raise exc
+    st.shards[sid]._put_many_prepare = boom
+    return exc
+
+
+def test_cross_shard_atomicity_prepare_failure():
+    """One shard fails to prepare -> the whole batch raises and NO key
+    of it becomes visible on ANY shard (readers keep the old values)."""
+    st = make_sharded(4)
+    rng = np.random.default_rng(5)
+    pre = {f"x{i}": rng.bytes(10_000) for i in range(16)}
+    try:
+        assert all(v == 1 for v in st.put_many(pre).values())
+        _failing_prepare(st, sid=2)
+        new = {k: rng.bytes(10_000) for k in pre}
+        with pytest.raises(RuntimeError, match="injected shard failure"):
+            st.put_many(new)
+        # never half-visible: every shard still serves the OLD values
+        got = st.get_many(list(pre))
+        for k, v in pre.items():
+            assert got[k] == v, f"half-visible batch at {k}"
+    finally:
+        st.close()
+
+
+def test_cross_shard_atomicity_dead_shard():
+    """A crashed (not just failing) shard also aborts the whole batch;
+    surviving shards roll back their prepared sub-batches."""
+    st = make_sharded(4)
+    rng = np.random.default_rng(6)
+    pre = {f"y{i}": rng.bytes(8_000) for i in range(16)}
+    try:
+        assert all(v == 1 for v in st.put_many(pre).values())
+        st.simulate_crash(shard=3)
+        new = {k: rng.bytes(8_000) for k in pre}
+        with pytest.raises(BaseException):
+            st.put_many(new)
+        for k, v in pre.items():
+            if st.router.shard_of(k) != 3:
+                assert st.get(k) == v, f"half-visible batch at {k}"
+    finally:
+        st.close()
+
+
+def test_retry_after_aborted_batch_commits():
+    """An aborted cross-shard batch leaves no PENDING heads behind: the
+    immediate retry commits everywhere."""
+    st = make_sharded(4)
+    try:
+        _failing_prepare(st, sid=0)
+        batch = {f"r{i}": bytes([i]) * 5000 for i in range(12)}
+        with pytest.raises(RuntimeError):
+            st.put_many(batch)
+        del st.shards[0]._put_many_prepare        # restore class impl
+        out = st.put_many(batch)
+        assert all(v >= 1 for v in out.values())
+        got = st.get_many(list(batch))
+        assert all(got[k] == batch[k] for k in batch)
+    finally:
+        assert st.close()
+
+
+# ---------------------------------------------------------------------------
+# lock-free stats (satellite: atomic counters)
+# ---------------------------------------------------------------------------
+
+def test_atomic_counter_concurrent_increments_exact():
+    c = AtomicCounter()
+    N, T = 20_000, 8
+
+    def worker():
+        for _ in range(N):
+            c.add()
+    threads = [threading.Thread(target=worker) for _ in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == N * T                        # zero lost updates
+
+
+def test_store_stats_concurrent_inc_exact():
+    s = StoreStats()
+    N, T = 5_000, 8
+
+    def worker():
+        for _ in range(N):
+            s.inc("puts")
+            s.inc("sms_chunk_hits", 3)
+    threads = [threading.Thread(target=worker) for _ in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert s.puts == N * T
+    assert s.sms_chunk_hits == 3 * N * T
+    assert s.as_dict()["puts"] == N * T
+    # reseed semantics used by the prefetch mirror
+    s.prefetch_hits = 17
+    assert s.prefetch_hits == 17
+
+
+# ---------------------------------------------------------------------------
+# program-level integrations ride the StoreFrontend protocol
+# ---------------------------------------------------------------------------
+
+def test_checkpointer_over_sharded_store():
+    from repro.checkpoint.checkpointer import CheckpointConfig, Checkpointer
+    st = make_sharded(4)
+    try:
+        ck = Checkpointer(st, CheckpointConfig(prefix="ck", keep=2,
+                                               leaf_shard_bytes=64 * 1024))
+        rng = np.random.default_rng(7)
+        state = {"w": rng.standard_normal((64, 64)).astype(np.float32),
+                 "b": rng.standard_normal(256).astype(np.float32)}
+        ck.save(1, state)
+        assert ck.latest_step() == 1
+        back = ck.restore(1)
+        np.testing.assert_array_equal(back["w"], state["w"])
+        np.testing.assert_array_equal(back["b"], state["b"])
+        # shard keys scattered across daemons
+        assert sum(1 for b in st.shard_balance() if b > 0) > 1
+    finally:
+        st.close()
+
+
+def test_kv_cache_store_backend_roundtrip():
+    from repro.configs import get_config, reduced
+    from repro.serving.kv_cache import SMSPagedKV
+    import dataclasses
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen1.5-0.5b")), dtype="float32")
+    st = make_sharded(2)
+    try:
+        kv = SMSPagedKV(cfg, batch_slots=2, max_len=128, page_size=32,
+                        store=st)
+        phys = kv.alloc_page(0, "seq-a", 0)
+        import jax.numpy as jnp
+        kv.k_pool = kv.k_pool.at[:, 0, phys].set(
+            jnp.ones_like(kv.k_pool[:, 0, phys]))
+        key = kv._key("seq-a", 0)
+        kv.evict_page_to_cos(key)
+        assert kv.stats.pages_evicted_to_cos == 1
+        assert st.stats.puts == 1                  # rode the store path
+        kv.restore_pages(0, "seq-a", [0])
+        assert kv.stats.pages_restored == 1
+        assert bool((np.asarray(kv.k_pool[:, 0, kv.pages[key][2]])
+                     == 1.0).all())
+    finally:
+        st.close()
+
+
+# ---------------------------------------------------------------------------
+# review regressions: 2PC window behavior + commit-failure cleanup
+# ---------------------------------------------------------------------------
+
+def test_get_during_2pc_window_serves_previous_version_fast():
+    """A GET between prepare and commit must NOT block the shard daemon
+    on the prepared head (the commit is queued behind it): it serves
+    the previous committed version immediately."""
+    import time
+    st = make_sharded(2)
+    try:
+        sid = st.router.shard_of("k2pc")
+        shard = st.shards[sid]
+        assert st.put("k2pc", b"old" * 1000) == 1
+        prep = shard.prepare_put_many_async([("k2pc", b"new" * 1000)]).result()
+        t0 = time.perf_counter()
+        assert st.get("k2pc") == b"old" * 1000     # uncommitted invisible
+        assert time.perf_counter() - t0 < 2.0      # and no 5 s stall
+        # a concurrent writer conflicts immediately instead of stalling
+        t0 = time.perf_counter()
+        out = shard.put_many([("k2pc", b"loser")])
+        assert out["k2pc"] == -1
+        assert time.perf_counter() - t0 < 2.0
+        out = shard.commit_put_many_async(prep, ticket=1).result()
+        assert out["k2pc"] == 2
+        assert st.get("k2pc") == b"new" * 1000
+    finally:
+        st.close()
+
+
+def test_commit_failure_aborts_unfinalized_heads():
+    """A commit-side failure must finalize the batch's heads as failed
+    — a PENDING head left behind would block that key forever."""
+    st = make_sharded(4)
+    rng = np.random.default_rng(8)
+    pre = {f"cf{i}": rng.bytes(6_000) for i in range(12)}
+    try:
+        assert all(v == 1 for v in st.put_many(pre).values())
+        sids = {st.router.shard_of(k) for k in pre}
+        victim = sorted(sids)[0]
+
+        def boom(prep, *, ticket=None):
+            raise RuntimeError("injected commit failure")
+        st.shards[victim]._put_many_commit = boom
+        new = {k: rng.bytes(6_000) for k in pre}
+        with pytest.raises(RuntimeError, match="injected commit failure"):
+            st.put_many(new)
+        del st.shards[victim]._put_many_commit
+        # no head is stuck PENDING: reads resolve fast, retries commit.
+        # (shards whose commit already ran serve the new value — the
+        # in-doubt 2PC window; the failed shard aborted to the old one)
+        for k in pre:
+            assert st.get(k) in (pre[k], new[k])
+        out = st.put_many({k: rng.bytes(6_000) for k in pre})
+        assert all(v > 1 for v in out.values())
+    finally:
+        st.close()
+
+
+def test_snapshot_value_copies_once():
+    """The sharded front-end snapshots mutable payloads at its surface;
+    the shard's own snapshot pass must be a no-op on them."""
+    from repro.core import InfiniStore
+    arr = np.arange(4096, dtype=np.uint8)
+    snap = InfiniStore._snapshot_value(arr)
+    assert snap is not arr                         # private copy taken
+    assert not snap.flags.writeable
+    assert InfiniStore._snapshot_value(snap) is snap   # second pass: no-op
+    assert InfiniStore._snapshot_value(b"imm") == b"imm"

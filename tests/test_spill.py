@@ -513,3 +513,149 @@ def test_snapshot_metadata_surfaces_spill(tmp_path):
     assert snap["dir"] == str(tmp_path)
     st.close()
     assert make_store(None).snapshot_metadata()["spill"] is None
+
+
+# ---------------------------------------------------------------------------
+# size-bounded metadata log: snapshot + journal generations
+# ---------------------------------------------------------------------------
+
+def test_journal_rotate_is_a_generation_boundary(tmp_path):
+    j = SpillJournal(tmp_path)
+    g0 = j.generation
+    j.append("a", b"1")
+    assert j.rotate() == g0 + 1                  # forced seal + new segment
+    assert j.rotate() == g0 + 1                  # empty active: no-op
+    j.append("b", b"2")
+    assert j.generation == g0 + 1
+    j.close(reclaim=False)
+    j2 = SpillJournal(tmp_path)                  # both generations replay
+    assert [k for _, k, _ in j2.take_pending()] == ["a", "b"]
+    j2.close(reclaim=False)
+
+
+def test_meta_snapshot_caps_individual_records(tmp_path):
+    """Once enough meta records accumulate, gc_tick folds them into ONE
+    metasnap record at a fresh generation and truncates the originals."""
+    st = make_store(str(tmp_path), spill_meta_snapshot_records=8)
+    for i in range(12):
+        st.put(f"k{i}", b"v" * 10_000)
+    assert st.flush_writeback(timeout=30.0)
+    gen0 = st.spill.generation
+    st.gc_tick()
+    assert st.stats.spill_meta_snapshots == 1
+    assert st.spill.generation > gen0            # new journal generation
+    log = st.snapshot_metadata()["meta_log"]
+    assert log["individual_records"] == 0        # all folded away
+    assert log["snapshot_covered"] == 12
+    keys = st.spill.pending_keys()
+    assert "metasnap" in keys
+    assert not any(k.startswith("meta/") for k in keys)
+    st.close()
+
+
+def test_meta_snapshot_survives_crash_restart(tmp_path):
+    """Snapshot-covered metadata + post-snapshot tail records + pending
+    writes all replay: zero acked loss for a long-lived daemon."""
+    spill = str(tmp_path / "spill")
+    cos_root = str(tmp_path / "cos")
+
+    def mk():
+        cfg = StoreConfig(ec=ECConfig(k=4, p=2), function_capacity=8 * MB,
+                          fragment_bytes=1 * MB,
+                          gc=GCConfig(gc_interval=1e9),
+                          num_recovery_functions=4, spill_dir=spill,
+                          spill_meta_snapshot_records=8)
+        return InfiniStore(cfg, clock=Clock(), cos_root=cos_root)
+
+    st = mk()
+    vals = {}
+    for i in range(20):                          # supersessions included
+        k = f"k{i % 10}"
+        vals[k] = bytes([i]) * 15_000
+        st.put(k, vals[k])
+    assert st.flush_writeback(timeout=30.0)
+    st.gc_tick()
+    assert st.stats.spill_meta_snapshots == 1
+    for i in range(3):                           # tail: meta + tombstones
+        k = f"k{i}"
+        vals[k] = bytes([100 + i]) * 9_000
+        st.put(k, vals[k])
+    st.simulate_crash()
+    st2 = mk()
+    # the snapshot restored the covered table, tail records the rest
+    assert st2.stats.spill_replayed_metas == 13
+    for k, v in vals.items():
+        assert st2.get(k) == v, f"lost {k} across snapshot restart"
+    assert st2.flush_writeback(timeout=60.0)
+    st2.close()
+
+
+def test_meta_snapshot_tombstones_fold_at_next_generation(tmp_path):
+    """A supersession of a snapshot-covered meta journals a tombstone
+    (the snapshot copy cannot be individually truncated); the NEXT
+    snapshot truncates the tombstones and the stale copies — and a
+    restart never resurrects the superseded version."""
+    spill = str(tmp_path / "spill")
+    cos_root = str(tmp_path / "cos")
+
+    def mk():
+        cfg = StoreConfig(ec=ECConfig(k=4, p=2), function_capacity=8 * MB,
+                          fragment_bytes=1 * MB,
+                          gc=GCConfig(gc_interval=1e9),
+                          num_recovery_functions=4, spill_dir=spill,
+                          spill_meta_snapshot_records=6)
+        return InfiniStore(cfg, clock=Clock(), cos_root=cos_root)
+
+    st = mk()
+    for i in range(8):
+        st.put(f"k{i}", b"a" * 8_000)
+    assert st.flush_writeback(timeout=30.0)
+    st.gc_tick()                                 # snapshot #1 covers all
+    assert st.stats.spill_meta_snapshots == 1
+    st.put("k0", b"B" * 8_000)                   # tombstone for k0|1
+    assert st.snapshot_metadata()["meta_log"]["tombstones"] == 1
+    for i in range(6):
+        st.put(f"m{i}", b"c" * 8_000)            # force snapshot #2
+    assert st.flush_writeback(timeout=30.0)
+    st.gc_tick()
+    assert st.stats.spill_meta_snapshots == 2
+    log = st.snapshot_metadata()["meta_log"]
+    assert log["tombstones"] == 0                # folded away
+    assert log["individual_records"] == 0
+    st.simulate_crash()
+    st2 = mk()
+    assert st2.get("k0") == b"B" * 8_000         # head, not the stale v1
+    m = st2.mt.load("k0")
+    assert m is not None and m.ver == 2
+    st2.close()
+
+
+def test_meta_snapshot_disabled_keeps_pr4_baseline(tmp_path):
+    st = make_store(str(tmp_path), spill_meta_snapshot_records=0)
+    for i in range(20):
+        st.put(f"k{i}", b"v" * 5_000)
+    assert st.flush_writeback(timeout=30.0)
+    st.gc_tick()
+    assert st.stats.spill_meta_snapshots == 0
+    assert sum(1 for k in st.spill.pending_keys()
+               if k.startswith("meta/")) == 20   # retained until superseded
+    st.close()
+
+
+def test_replay_truncates_meta_superseded_by_snapshot(tmp_path):
+    """Torn-PERSIST window: an individual `meta/` record AND a snapshot
+    covering the same obj both survive a crash. Replay must truncate
+    the stale individual record, or it pins its segment (and is
+    re-replayed) forever."""
+    j = SpillJournal(tmp_path)
+    entry = {"key": "k", "ver": 1, "prev_ver": 0,
+             "num_fragments": 1, "size": 0}
+    j.append("meta/k|1", json.dumps(entry).encode())
+    j.append("metasnap", json.dumps([entry]).encode())
+    j.close(reclaim=False)
+    st = make_store(str(tmp_path))
+    assert st.stats.spill_replayed_metas == 2     # both restored (idempotent)
+    keys = st.spill.pending_keys()
+    assert "metasnap" in keys
+    assert "meta/k|1" not in keys                 # stale record truncated
+    st.close()
