@@ -1,0 +1,300 @@
+"""Fault-plane soak: disabled-plane overhead + seeded chaos schedule.
+
+Two gates the deterministic fault-injection plane (`repro.core.faults`)
+must pass with numbers, both asserted (CI fails on violation):
+
+1. **Disabled-plane ack cost** — every instrumented site guards with a
+   single `faults is not None` check, and an ATTACHED-but-idle plan adds
+   only a dict probe per op. PUT-ack latency with an armed-idle plan
+   must be <= 2% over `faults=None`. Interleaved min-of-N floors (the
+   spill_overhead.py methodology) so both modes sample the same machine
+   load windows.
+2. **Chaos soak** — the acceptance schedule over a 2-shard
+   `ShardedStore`: transient COS errors + throttling on the read path,
+   one slab kill mid-store, one torn journal tail at the crash, and one
+   leader death between the 2PC rounds; then a full restart. Gates:
+   every acked write is readable after the restart, the interrupted
+   cross-shard batch converges to fully-committed (its decision was
+   durable), no ticket stays in doubt / no key stays PENDING, and the
+   SAME SEED reproduces the byte-identical fault log twice.
+
+Writes ``BENCH_faults.json`` at the repo root (the chaos gates are
+identical in --smoke; smoke only shrinks the overhead sampling).
+
+Usage: PYTHONPATH=src python benchmarks/fault_soak.py [--smoke] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):                      # direct-script invocation
+    _HERE = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, os.path.join(_HERE, ".."))
+    sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+
+import numpy as np
+
+from repro.core import (Clock, FaultPlan, FaultPoint, InfiniStore,
+                        InjectedCrash, ShardedStore, StoreConfig)
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+
+MB = 1024 * 1024
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+CHAOS_SEED = 77
+
+
+def _cfg(*, faults=None, spill_dir=None, **kw) -> StoreConfig:
+    kw.setdefault("ec", ECConfig(k=4, p=2))
+    kw.setdefault("function_capacity", 16 * MB)
+    kw.setdefault("fragment_bytes", 1 * MB)
+    kw.setdefault("gc", GCConfig(gc_interval=1e12))
+    kw.setdefault("num_recovery_functions", 4)
+    return StoreConfig(faults=faults, spill_dir=spill_dir, **kw)
+
+
+# ---------------------------------------------------------------------------
+# gate 1: disabled / idle fault-plane ack overhead
+# ---------------------------------------------------------------------------
+
+def bench_overhead(size: int, repeats: int, max_repeats: int = 0) -> dict:
+    """PUT-ack latency, faults=None vs an attached plan with no point
+    at any hot site. Interleaved, min-of-N, adaptive tail — identical
+    methodology to spill_overhead.bench_ack. Asserts the <= 2% gate."""
+    rng = np.random.default_rng(size)
+    idle_plan = FaultPlan(seed=0).add(
+        FaultPoint(site="never.fired", hits=(1,)))
+    stores = {
+        "off": InfiniStore(_cfg(faults=None), clock=Clock()),
+        "armed_idle": InfiniStore(_cfg(faults=idle_plan), clock=Clock()),
+    }
+    acks = {m: [] for m in stores}
+    for st in stores.values():
+        st.writeback.pause()                  # measure the ack path only
+    max_repeats = max_repeats or 4 * repeats
+    since_new_min = 0
+    for r in range(max_repeats):
+        data = rng.bytes(size)
+        improved = False
+        for mode, st in stores.items():
+            t0 = time.perf_counter()
+            st.put(f"obj{r}", data)
+            dt = time.perf_counter() - t0
+            if not acks[mode] or dt < min(acks[mode]):
+                improved = True
+            acks[mode].append(dt)
+        since_new_min = 0 if improved else since_new_min + 1
+        if r + 1 >= repeats and since_new_min >= 8:
+            break
+    for st in stores.values():
+        st.writeback.resume()
+        assert st.flush_writeback(timeout=600.0)
+        st.close()
+    assert idle_plan.fired() == 0             # the plan really was idle
+    off_ms = min(acks["off"]) * 1e3
+    armed_ms = min(acks["armed_idle"]) * 1e3
+    overhead_pct = (armed_ms - off_ms) / off_ms * 100.0
+    out = {"object_mb": size / MB,
+           "repeats": len(acks["off"]),
+           "off_put_ack_ms": round(off_ms, 3),
+           "armed_idle_put_ack_ms": round(armed_ms, 3),
+           "overhead_pct": round(overhead_pct, 2),
+           "gate_overhead_max_pct": 2.0}
+    assert overhead_pct <= 2.0, \
+        f"disabled fault plane costs {overhead_pct:.2f}% PUT-ack (> 2%)"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# gate 2: seeded chaos schedule over a 2-shard store
+# ---------------------------------------------------------------------------
+
+def _chaos_plan(seed: int) -> FaultPlan:
+    """The acceptance schedule. Only sites fired from the (serial)
+    client call sequence are scheduled, so the fault LOG ORDER is a
+    deterministic function of the seed — the reproducibility artifact."""
+    return FaultPlan(seed=seed, points=(
+        # transient COS errors + throttling on the degraded read path
+        FaultPoint(site="cos.get", action="transient", prob=0.10,
+                   times=8),
+        FaultPoint(site="cos.get", action="throttle", prob=0.05,
+                   times=3, latency_s=0.001),
+        # one slab killed mid-store (function reclaimed under a PUT)
+        FaultPoint(site="sms.store", action="reclaim", hits=(40,),
+                   times=1),
+        # one leader death between the 2PC rounds (decision durable)
+        FaultPoint(site="shard.leader_death", action="crash", hits=(2,),
+                   times=1),
+        # one torn journal tail at the SIGKILL
+        FaultPoint(site="spill.torn_close", action="torn", hits=(1,),
+                   times=1),
+    ))
+
+
+def _cross_shard_batch(st, tag, rng, n_per_shard=2) -> dict:
+    per = {sid: 0 for sid in range(st.num_shards)}
+    out, i = {}, 0
+    while any(c < n_per_shard for c in per.values()):
+        k = f"{tag}{i}"
+        i += 1
+        sid = st.router.shard_of(k)
+        if per[sid] < n_per_shard:
+            per[sid] += 1
+            out[k] = rng.bytes(12_000)
+    return out
+
+
+def chaos_soak(seed: int, workdir: str, n_keys: int) -> dict:
+    """One run of the seeded schedule. Returns the fault log + gates."""
+    spill = os.path.join(workdir, "spill")
+    cosr = os.path.join(workdir, "cos")
+    plan = _chaos_plan(seed)
+    cfg = _cfg(faults=plan, spill_dir=spill,
+               pipelined_get=False, enable_recovery=False)
+    st = ShardedStore(cfg, num_shards=2, clock=Clock(), cos_root=cosr,
+                      seed=seed)
+    rng = np.random.default_rng(seed)
+    acked = {}
+    t0 = time.perf_counter()
+    for i in range(n_keys):                   # rides through the slab kill
+        k = f"s{i}"
+        acked[k] = rng.bytes(15_000)
+        assert st.put(k, acked[k]) == 1
+    # cross-shard batch 1 commits clean; batch 2 loses its leader
+    # between the rounds — the durable decision means it MUST converge
+    # to committed even though the client never got an ack
+    b1 = _cross_shard_batch(st, "x", rng)
+    assert all(v == 1 for v in st.put_many(b1).values())
+    acked.update(b1)
+    b2 = {k: rng.bytes(12_000) for k in b1}
+    leader_died = False
+    try:
+        st.put_many(b2)
+    except InjectedCrash:
+        leader_died = True
+    assert leader_died, "schedule must kill the leader between rounds"
+    indoubt_before = len(st.indoubt_tickets())
+    # persist + degrade the read path: killing MORE slabs than EC can
+    # mask (p=2) forces COS chunk reads, which draw the scheduled
+    # transient/throttle errors through the unified RetryPolicy
+    assert st.flush_writeback(timeout=600.0)
+    for s in st.shards:
+        for fid in sorted(s.sms.slabs)[:3]:
+            s.inject_failure(fid)
+    for k, v in acked.items():
+        assert st.get(k) == v, f"acked write {k} lost pre-crash"
+    # full crash (tears one journal tail), then rebuild + resolve
+    st.simulate_crash()
+    st2 = ShardedStore(_cfg(spill_dir=spill), num_shards=2,
+                       clock=Clock(), cos_root=cosr, seed=seed)
+    # the restart resolver rolls the interrupted batch FORWARD (its
+    # decision was durable): those keys must now read the b2 payloads
+    expected = dict(acked)
+    expected.update(b2)
+    lost = [k for k, v in expected.items() if st2.get(k) != v]
+    rolled_forward = all(st2.get(k) == v for k, v in b2.items())
+    stranded = st2.indoubt_tickets()
+    flushed = st2.flush_writeback(timeout=600.0)
+    st2.close()
+    elapsed = time.perf_counter() - t0
+    snap = plan.snapshot()
+    fired_by_site = {}
+    for site, _, _ in snap["log"]:
+        fired_by_site[site] = fired_by_site.get(site, 0) + 1
+    result = {
+        "seed": seed,
+        "acked_writes": len(acked),
+        "faults_fired": snap["fired"],
+        "fired_by_site": fired_by_site,
+        "indoubt_at_crash": indoubt_before,
+        "lost_acked_writes": len(lost),
+        "interrupted_batch_rolled_forward": bool(rolled_forward),
+        "stranded_indoubt_after_restart": len(stranded),
+        "flushed_after_restart": bool(flushed),
+        "elapsed_s": round(elapsed, 2),
+        "log": snap["log"],
+    }
+    assert not lost, f"acked writes lost: {lost[:8]}"
+    assert rolled_forward, "in-doubt batch not rolled forward"
+    assert not stranded, f"tickets stranded in doubt: {stranded}"
+    assert flushed
+    assert indoubt_before > 0                 # the leader kill was real
+    assert fired_by_site.get("sms.store", 0) == 1
+    assert fired_by_site.get("spill.torn_close", 0) == 1
+    assert fired_by_site.get("cos.get", 0) >= 2
+    return result
+
+
+def run_bench(smoke: bool) -> dict:
+    overhead = bench_overhead(256 * 1024, repeats=16 if smoke else 48)
+    runs = []
+    for tag in ("a", "b"):                    # same seed, twice
+        workdir = tempfile.mkdtemp(prefix=f"fault-soak-{tag}-")
+        try:
+            runs.append(chaos_soak(CHAOS_SEED, workdir,
+                                   n_keys=20 if smoke else 60))
+        finally:
+            shutil.rmtree(workdir, ignore_errors=True)
+    reproducible = runs[0]["log"] == runs[1]["log"]
+    assert reproducible, "same seed produced different fault sequences"
+    for r in runs:
+        r["log"] = [list(e) for e in r["log"]]
+    return {"bench": "fault_soak", "smoke": smoke,
+            "overhead": overhead,
+            "chaos": {"seed": CHAOS_SEED,
+                      "reproducible_log": reproducible,
+                      "runs": runs}}
+
+
+def _write(result: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+
+
+def run() -> list:
+    """benchmarks.run entry point (smoke sizes, CSV rows)."""
+    result = run_bench(smoke=True)
+    _write(result, os.path.join(ROOT, "BENCH_faults.json"))
+    ov = result["overhead"]
+    r0 = result["chaos"]["runs"][0]
+    return [f"fault_plane_idle_overhead,{ov['overhead_pct']},"
+            f"% of {ov['off_put_ack_ms']}ms PUT ack",
+            f"chaos_soak,{r0['faults_fired']},"
+            f"faults lost={r0['lost_acked_writes']} "
+            f"stranded={r0['stranded_indoubt_after_restart']}"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller overhead sampling; chaos gates identical")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    result = run_bench(args.smoke)
+    out = args.out or os.path.join(ROOT, "BENCH_faults.json")
+    _write(result, out)
+    ov = result["overhead"]
+    print(f"idle fault plane | put ack {ov['off_put_ack_ms']} ms -> "
+          f"{ov['armed_idle_put_ack_ms']} ms "
+          f"({ov['overhead_pct']:+.2f}%, gate <= 2%)")
+    for i, r in enumerate(result["chaos"]["runs"]):
+        print(f"chaos run {i} | {r['faults_fired']} faults "
+              f"{r['fired_by_site']} | acked {r['acked_writes']} "
+              f"lost {r['lost_acked_writes']} | in-doubt at crash "
+              f"{r['indoubt_at_crash']} -> stranded "
+              f"{r['stranded_indoubt_after_restart']} | "
+              f"{r['elapsed_s']}s")
+    print(f"log reproducible across same-seed runs: "
+          f"{result['chaos']['reproducible_log']}")
+    print(f"wrote {os.path.relpath(out)}")
+
+
+if __name__ == "__main__":
+    main()

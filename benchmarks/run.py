@@ -28,6 +28,8 @@ MODULES = [
                     "(writes BENCH_get.json)"),
     ("shard_scaleout", "sharded multi-daemon PUT/GET scale-out "
                        "(writes BENCH_shard_smoke.json)"),
+    ("fault_soak", "deterministic chaos soak + idle fault-plane "
+                   "overhead (writes BENCH_faults.json)"),
     ("kernels", "kernel microbenchmarks"),
     ("roofline", "§Roofline summary (reads experiments/dryrun.jsonl)"),
 ]

@@ -21,3 +21,8 @@ python benchmarks/spill_overhead.py --smoke
 # throughput regresses below 1 shard, or the crash-one-shard replay
 # loses an acked write (writes BENCH_shard_smoke.json)
 python benchmarks/shard_scaleout.py --smoke
+# deterministic chaos soak: seeded fault schedule (COS errors/throttle,
+# slab kill, torn journal tail, 2PC leader death) + full restart must
+# lose zero acked writes, strand zero in-doubt tickets, and reproduce
+# the identical fault log twice; idle fault plane <= 2% PUT-ack overhead
+python benchmarks/fault_soak.py --smoke

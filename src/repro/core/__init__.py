@@ -8,6 +8,10 @@ from repro.core.clock import Clock  # noqa: F401
 from repro.core.cos import COS  # noqa: F401
 from repro.core.costmodel import CostLedger  # noqa: F401
 from repro.core.ec import ECConfig, RSCodec  # noqa: F401
+from repro.core.faults import (COSThrottleError, FaultPlan,  # noqa: F401
+                               FaultPoint, InjectedCrash, InjectedFault,
+                               OpDeadlineExceeded, RetryPolicy,
+                               TransientCOSError)
 from repro.core.gc_window import (BucketState, GCConfig,  # noqa: F401
                                   SlidingWindow)
 from repro.core.insertion_log import InsertionLog, PutRecord  # noqa: F401

@@ -86,6 +86,10 @@ class COS:
         self._probed_absent: Dict[str, float] = {}
         self._lock = threading.RLock()
         self.stats = COSStats()
+        # optional FaultPlan (repro.core.faults); None = zero-cost no-op.
+        # Injected faults fire BEFORE any state change, modelling a
+        # request that never reached the service.
+        self.faults = None
         self.put_delay_base_s = put_delay_base_s
         self.put_delay_per_byte_s = put_delay_per_byte_s
         self.get_delay_base_s = get_delay_base_s
@@ -125,6 +129,8 @@ class COS:
         return None
 
     def put(self, key: str, data) -> None:
+        if self.faults is not None:
+            self.faults.fire("cos.put", key)
         n = payload_nbytes(data)
         if self.put_delay_base_s or self.put_delay_per_byte_s:
             time.sleep(self.put_delay_base_s + n * self.put_delay_per_byte_s)
@@ -146,6 +152,8 @@ class COS:
             self._visible_at[key] = self.clock.now() + self.visibility_lag
 
     def get(self, key: str):
+        if self.faults is not None:
+            self.faults.fire("cos.get", key)
         if self.get_delay_base_s:
             time.sleep(self.get_delay_base_s)     # first-byte latency
         with self._lock:

@@ -19,6 +19,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set
 
 from repro.core.cos import COS
+from repro.core.faults import RetryPolicy
 from repro.core.insertion_log import InsertionLog, Piggyback
 from repro.core.sms import SMS, Slab
 
@@ -54,9 +55,16 @@ class RecoveryManager:
     def __init__(self, sms: SMS, cos: COS, logs: Dict[int, InsertionLog], *,
                  num_recovery_functions: int = 20, workers: int = 8,
                  retain_seconds: float = 60.0, writeback=None, clock=None,
-                 thread_prefix: str = "recovery"):
+                 thread_prefix: str = "recovery",
+                 retry: Optional[RetryPolicy] = None):
         self.sms = sms
         self.cos = cos
+        # unified retry policy (repro.core.faults) for recovery-time COS
+        # downloads: a recovery session racing a transient COS blip must
+        # retry rather than silently dropping chunks from the restore
+        self.retry = retry or RetryPolicy(max_attempts=6,
+                                          backoff_base_s=0.005,
+                                          backoff_cap_s=0.25)
         # WritebackQueue (or None): chunks acked but not yet persisted to
         # COS are restored from its pending map — the async-writeback
         # durability contract (§5.3.2)
@@ -154,10 +162,21 @@ class RecoveryManager:
     def _download(self, keys: List[str]) -> Dict[str, bytes]:
         out: Dict[str, bytes] = {}
         for key in keys:
-            if self.writeback is not None:       # pending map, then COS
-                data = self.writeback.read_through(f"chunk/{key}")
-            else:
-                data = self.cos.get(f"chunk/{key}")
+            try:
+                if self.writeback is not None:   # pending map, then COS
+                    data = self.retry.run(
+                        lambda k=key:
+                        self.writeback.read_through(f"chunk/{k}"))
+                else:
+                    data = self.retry.run(
+                        lambda k=key: self.cos.get(f"chunk/{k}"))
+            except Exception as e:                # noqa: BLE001
+                if self.retry.classify(e) == RetryPolicy.PERMANENT:
+                    raise
+                # transient budget exhausted (COS outage): skip — the
+                # chunk stays recoverable from COS once it heals, and
+                # readers fall back to EC reconstruction meanwhile
+                continue
             if data is not None:
                 out[key] = data
         return out

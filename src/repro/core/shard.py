@@ -28,22 +28,37 @@ so independent daemons serve disjoint keyspaces.
   per-shard sub-batches, pipeline them on the shard daemons
   concurrently, and join the sub-results into one `StoreFuture`.
 - **Cross-shard atomic `put_many`**: a multi-key batch spanning shards
-  commits via a leader-sequenced two-round protocol so a PREPARE-stage
-  failure is never half-visible (a failure inside round 2, after the
-  ticket issued, is the classic 2PC in-doubt window — see
-  `put_many_async`). The protocol provides failure atomicity, not read
-  isolation: while round 2 lands shard by shard, a concurrent reader
-  may observe some shards' new versions before the others commit.
-  Round 1 (prepare) runs each shard's sub-batch through
-  the shard's one multi-key CAS + fragment + slab/journal path but
-  stops BEFORE the ack point — the new versions stay PENDING,
-  invisible to readers and blocking same-key writers. The leader then
-  issues a commit ticket (one monotonic sequence across the store) and
+  commits via a leader-sequenced two-round protocol. The protocol
+  provides failure atomicity, not read isolation: while round 2 lands
+  shard by shard, a concurrent reader may observe some shards' new
+  versions before the others commit. Round 1 (prepare) runs each
+  shard's sub-batch through the shard's one multi-key CAS + fragment +
+  slab/journal path but stops BEFORE the ack point — the new versions
+  stay PENDING, invisible to readers and blocking same-key writers —
+  and journals a durable `prepared/<ticket>` record in the shard's
+  spill journal. The leader then records a durable COMMIT DECISION
+  (`decision/<ticket>` in its own journal under `<spill_root>/leader/`,
+  or a `2pc/decision/<ticket>` COS stub when running journal-less) and
   round 2 finalizes every sub-batch (ack + metadata journal, ticket
   stamped into each shard's journal record); if ANY shard fails to
   prepare, every prepared shard aborts and readers keep seeing the
   previous versions everywhere. Single-shard batches skip the protocol
   entirely (the common, fast case).
+
+  **The in-doubt window is CLOSED** (presumed abort): a shard that
+  crashes — or whose commit submission fails — between prepare and
+  commit restarts with the batch withheld as in-doubt (its journal
+  replay finds `prepared/<ticket>` with no resolution). The
+  `resolve_indoubt()` sweep — run at construction, on every
+  `restart_shard`, on every `gc_tick`, or explicitly — queries the
+  leader's durable decision for each in-doubt ticket and rolls the
+  sub-batch FORWARD (decision record found: the versions become
+  readable heads exactly as if round 2 had run) or BACK (no record:
+  the leader never decided, so the batch aborts everywhere). The
+  invariant: once the decision record is durable the batch can only
+  ever commit; before it, only ever abort — no key stays PENDING
+  across a crash, and no batch is ever half-visible after resolution.
+  Decision records are retired once every participant has resolved.
 - **Failure domains**: `simulate_crash(shard=i)` kills one daemon; the
   surviving shards keep serving their keyspaces and `restart_shard(i)`
   rebuilds the dead one from its own spill journal (per-shard recovery
@@ -73,6 +88,8 @@ import numpy as np
 
 from repro.core.clock import Clock
 from repro.core.cos import COS
+from repro.core.faults import RetryPolicy
+from repro.core.spill import SpillJournal
 from repro.core.store import (_STAT_FIELDS, InfiniStore, StoreConfig,
                               StoreStats)
 from repro.core.writeback import StoreFuture
@@ -154,17 +171,56 @@ class ShardedStore:
                 prefix="infinistore-shards-")
             self._spill_auto = True
         self._seed = seed
+        # deterministic fault plan (repro.core.faults): shared COS gets
+        # it here (shards never overwrite a COS they don't own); the
+        # per-shard layers get it through cfg
+        self.faults = cfg.faults
+        if cfg.faults is not None:
+            self.cos.faults = cfg.faults
         self.shards: List[InfiniStore] = [
             self._make_shard(i) for i in range(self.num_shards)]
+        # leader decision journal (2PC in-doubt closure): the durable
+        # commit decisions, one `decision/<ticket>` record per
+        # cross-shard batch, retired once every participant resolved.
+        # Journal-less deployments fall back to COS decision stubs.
+        # NOT fault-instrumented: the dedicated "shard.decision" site
+        # models decision loss without entangling shard spill schedules.
+        self._tlock = threading.Lock()
+        self._decisions: Dict[int, int] = {}     # ticket -> record seq
+        self._inflight_tickets: set = set()
+        self._decision_retry = RetryPolicy(
+            max_attempts=6, backoff_base_s=0.005, backoff_cap_s=0.1,
+            seed=seed)
+        self._leader_spill: Optional[SpillJournal] = None
+        if cfg.async_writeback and self._spill_root is not None:
+            self._leader_spill = SpillJournal(
+                os.path.join(self._spill_root, "leader"),
+                fsync=cfg.spill_fsync, sync_each=False)
+            for seq, key, _data in self._leader_spill.take_pending():
+                if key.startswith("decision/"):
+                    try:
+                        self._decisions[int(key[len("decision/"):])] = seq
+                        continue
+                    except ValueError:
+                        pass
+                self._leader_spill.mark_persisted(seq)
         # leader side: commit tickets are one monotonic sequence across
         # the whole store (itertools.count: atomic under the GIL), and
         # cross-shard batches coordinate on a small leader pool so
-        # put_many_async stays non-blocking for the caller
-        self._tickets = itertools.count(1)
+        # put_many_async stays non-blocking for the caller. A rebuilt
+        # store reseeds the sequence past every replayed decision and
+        # in-doubt ticket — reusing a live ticket would supersede its
+        # `prepared/<t>` journal record mid-doubt.
+        maxt = max([0, *self._decisions,
+                    *(t for s in self.shards
+                      for t in self._shard_indoubt(s))])
+        self._tickets = itertools.count(maxt + 1)
         self._leader = ThreadPoolExecutor(
             max_workers=max(2, min(8, self.num_shards)),
             thread_name_prefix="shard-leader")
         self._closed = False
+        # restart-time sweep: no key may stay PENDING across a crash
+        self.resolve_indoubt()
 
     # ------------------------------------------------------------------
     # shard lifecycle
@@ -184,9 +240,128 @@ class ShardedStore:
     def restart_shard(self, i: int) -> InfiniStore:
         """Rebuild a (crashed) shard on its own spill journal: replays
         surviving metadata + pending writes exactly like a single-store
-        daemon restart, while the other shards keep serving."""
+        daemon restart, while the other shards keep serving. Any 2PC
+        batch the replay found in doubt is resolved against the
+        leader's decisions before this returns."""
         self.shards[i] = self._make_shard(i)
+        self.resolve_indoubt()
         return self.shards[i]
+
+    # ------------------------------------------------------------------
+    # 2PC decision plane + in-doubt resolution
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _shard_indoubt(s: InfiniStore) -> List[int]:
+        try:
+            return s.indoubt_tickets()
+        except Exception:                             # noqa: BLE001
+            return []            # daemon dead: restart_shard re-sweeps
+
+    def _record_decision(self, ticket: int) -> None:
+        """DECISION DURABILITY POINT: once this returns, the batch can
+        only ever commit — a restart-time resolver finding the record
+        rolls every in-doubt participant forward. Registered before the
+        sync so a failed sync can still retire the (possibly-landed)
+        record before the batch aborts."""
+        if self._leader_spill is not None:
+            seq = self._leader_spill.append(f"decision/{ticket}",
+                                            b"commit")
+            with self._tlock:
+                self._decisions[ticket] = seq
+            self._leader_spill.sync()
+            return
+        # journal-less fallback: a COS stub. Weaker — subject to the
+        # backend's visibility lag and injected faults like any PUT.
+        self.cos.put(f"2pc/decision/{ticket}", b"commit")
+        with self._tlock:
+            self._decisions[ticket] = -1
+
+    def _retire_decision(self, ticket: int) -> None:
+        """Truncate a decision record every participant has resolved
+        (or one being withdrawn because the batch aborts before any
+        commit was submitted)."""
+        with self._tlock:
+            seq = self._decisions.pop(ticket, None)
+        if seq is None:
+            return
+        if self._leader_spill is not None:
+            self._leader_spill.mark_persisted(seq)
+            try:
+                self._leader_spill.sync()
+            except Exception:                         # noqa: BLE001
+                pass             # truncation retries on the next sync
+        else:
+            try:
+                self.cos.delete(f"2pc/decision/{ticket}")
+            except Exception:                         # noqa: BLE001
+                pass             # stale stub: harmless, re-swept later
+
+    def _decision(self, ticket: int) -> bool:
+        """The leader's verdict for an in-doubt ticket: True = a durable
+        commit decision exists (roll forward), False = none was ever
+        recorded (presumed abort). Raises only on the stub path when COS
+        stays unreadable through the retry budget — the sweep then skips
+        the ticket and retries next round rather than mis-aborting."""
+        with self._tlock:
+            if ticket in self._decisions:
+                return True
+        if self._leader_spill is None:
+            return self._decision_retry.run(
+                lambda: self.cos.get(f"2pc/decision/{ticket}")) is not None
+        return False
+
+    def resolve_indoubt(self) -> Dict[int, str]:
+        """Sweep every shard's in-doubt tickets (journal-replayed AND
+        live prepared batches whose round 2 never arrived — leader
+        death, commit-submission failure) and resolve each against the
+        leader's durable decision. Returns {ticket: "commit"|"abort"}
+        for everything resolved this round. Idempotent and safe to run
+        any time: tickets of batches still in flight are skipped, and a
+        shard whose daemon is down is picked up by `restart_shard`'s
+        sweep. Decision records no participant still reports are
+        retired at the end."""
+        out: Dict[int, str] = {}
+        all_answered = True
+        for s in self.shards:
+            try:
+                tickets = s.indoubt_tickets()
+            except Exception:                         # noqa: BLE001
+                all_answered = False
+                continue
+            for t in tickets:
+                with self._tlock:
+                    if t in self._inflight_tickets:
+                        continue
+                try:
+                    commit = self._decision(t)
+                except Exception:                     # noqa: BLE001
+                    all_answered = False
+                    continue     # decision unreadable: retry next sweep
+                try:
+                    s.resolve_indoubt(t, commit=commit).result()
+                except Exception:                     # noqa: BLE001
+                    all_answered = False
+                    continue
+                out[t] = "commit" if commit else "abort"
+        with self._tlock:
+            candidates = [t for t in self._decisions
+                          if t not in self._inflight_tickets]
+        if candidates and all_answered:
+            remaining: set = set()
+            for s in self.shards:
+                remaining.update(self._shard_indoubt(s))
+            for t in candidates:
+                if t not in remaining:
+                    self._retire_decision(t)
+        return out
+
+    def indoubt_tickets(self) -> List[int]:
+        """Union of every shard's unresolved prepared tickets."""
+        out: set = set()
+        for s in self.shards:
+            out.update(self._shard_indoubt(s))
+        return sorted(out)
 
     def simulate_crash(self, shard: Optional[int] = None):
         """Kill one shard's daemon mid-flight (`shard=i`) — its journal
@@ -198,6 +373,10 @@ class ShardedStore:
         for s in self.shards:
             s.simulate_crash()
         self._leader.shutdown(wait=False, cancel_futures=True)
+        if self._leader_spill is not None:
+            # hard close: only synced decision records survive — the
+            # same SIGKILL contract as the shard journals
+            self._leader_spill.close(reclaim=False, hard=True)
         self.cos.shutdown()
         self._closed = True
         return self._spill_root
@@ -209,8 +388,11 @@ class ShardedStore:
         if self._closed:
             return True
         self._closed = True
+        self._leader.shutdown(wait=True)      # in-flight batches first
+        self.resolve_indoubt()                # no ticket left PENDING
         oks = [s.close(flush=flush) for s in self.shards]
-        self._leader.shutdown(wait=True)
+        if self._leader_spill is not None:
+            self._leader_spill.close()
         self.cos.shutdown()
         if self._spill_auto:
             shutil.rmtree(self._spill_root, ignore_errors=True)
@@ -319,11 +501,13 @@ class ShardedStore:
         the batch (per-key CAS conflicts keep the single-store
         contract: -1 for just that key, or `ConcurrentPutError`
         aborting the whole batch when raise_on_conflict). A failure
-        inside the COMMIT round — after the ticket was issued — is the
-        classic 2PC in-doubt window: shards whose commit already ran
-        serve the new versions, the failing shard aborts its heads
-        back to the previous ones, and the error propagates so the
-        caller can retry the batch."""
+        inside the COMMIT round — after the leader's decision became
+        durable — leaves the affected shards IN DOUBT, never
+        half-aborted: the error propagates (the batch is un-acked),
+        and the `resolve_indoubt` sweep rolls every in-doubt shard
+        forward per the durable decision, so the batch converges to
+        fully-committed (see the module docstring's in-doubt
+        contract)."""
         items = list(items.items()) if isinstance(items, dict) \
             else list(items)
         if len({k for k, _ in items}) != len(items):
@@ -353,6 +537,21 @@ class ShardedStore:
 
     def _cross_shard_put_impl(self, groups: Dict[int, List],
                               raise_on_conflict: bool) -> Dict[str, int]:
+        # the leader ticket is issued FIRST: round 1 journals it into
+        # each shard's durable `prepared/<ticket>` record, which is what
+        # a crashed shard replays to know the batch was in doubt
+        ticket = next(self._tickets)
+        with self._tlock:
+            self._inflight_tickets.add(ticket)
+        try:
+            return self._cross_shard_rounds(ticket, groups,
+                                            raise_on_conflict)
+        finally:
+            with self._tlock:
+                self._inflight_tickets.discard(ticket)
+
+    def _cross_shard_rounds(self, ticket: int, groups: Dict[int, List],
+                            raise_on_conflict: bool) -> Dict[str, int]:
         # round 1: prepare on every touched shard, in parallel on the
         # shard daemons. A shard that cannot prepare (daemon dead, CAS
         # conflict under raise_on_conflict, encode/placement failure)
@@ -362,7 +561,8 @@ class ShardedStore:
         for sid, sub in groups.items():
             try:
                 prep_futs[sid] = self.shards[sid].prepare_put_many_async(
-                    sub, raise_on_conflict=raise_on_conflict)
+                    sub, raise_on_conflict=raise_on_conflict,
+                    ticket=ticket)
             except BaseException as e:                # noqa: BLE001
                 errors.append(e)                      # dead daemon
         preps: Dict[int, object] = {}
@@ -372,41 +572,66 @@ class ShardedStore:
             except BaseException as e:                # noqa: BLE001
                 errors.append(e)
         if errors:
-            # round 2 (abort): no shard may expose its sub-batch
+            # round 2 (abort): no shard may expose its sub-batch. No
+            # decision was recorded, so a shard that dies before its
+            # abort lands resolves by presumed abort at restart.
             for sid, prep in preps.items():
                 try:
                     self.shards[sid].abort_put_many_async(prep).result()
                 except BaseException:                 # noqa: BLE001
                     pass         # aborting a shard that died meanwhile
             raise errors[0]
-        # round 2 (commit): one leader ticket sequences this batch
-        # against every other cross-shard batch; shards stamp it into
-        # their journaled metadata records. Commit is submitted to
-        # EVERY prepared shard even if one submission/commit fails —
-        # skipping a live shard would strand its prepared heads, and a
-        # shard that died between prepare and commit is the classic
-        # in-doubt 2PC window: its in-memory heads die with it (no
-        # metadata was journaled at prepare), so a restart simply never
-        # shows the batch there.
-        ticket = next(self._tickets)
+        # decision point: make the commit decision durable BEFORE any
+        # shard is told to commit. Fails closed — a leader death (or
+        # journal failure) here aborts the still-PENDING batch
+        # everywhere, matching what a restart-time resolver would
+        # presume for a ticket with no decision record.
+        try:
+            if self.faults is not None:
+                self.faults.fire("shard.decision", str(ticket))
+            self._record_decision(ticket)
+        except BaseException:
+            self._retire_decision(ticket)
+            for sid, prep in preps.items():
+                try:
+                    self.shards[sid].abort_put_many_async(prep).result()
+                except BaseException:                 # noqa: BLE001
+                    pass
+            raise
+        # the decision is durable: from here the batch can ONLY commit.
+        # An injected leader death leaves every prepared shard in doubt
+        # — the resolve_indoubt sweep rolls them all forward.
+        if self.faults is not None:
+            self.faults.fire("shard.leader_death", str(ticket))
+        # round 2 (commit): shards stamp the ticket into their journaled
+        # metadata records. Commit is submitted to EVERY prepared shard
+        # even if one submission fails — skipping a live shard would
+        # strand its prepared heads; a shard whose submission failed (or
+        # that died mid-commit) stays in doubt and is rolled forward by
+        # the sweep against the durable decision.
         out: Dict[str, int] = {}
         commit_errs: List[BaseException] = []
         commits = []
         for sid, prep in preps.items():
             try:
+                if self.faults is not None:
+                    self.faults.fire("shard.commit_submit", str(sid))
                 commits.append(self.shards[sid].commit_put_many_async(
                     prep, ticket=ticket))
             except BaseException as e:                # noqa: BLE001
-                commit_errs.append(e)                 # daemon died
+                commit_errs.append(e)                 # in doubt: swept
         for cf in commits:
             try:
                 out.update(cf.result())
             except BaseException as e:                # noqa: BLE001
-                # the shard's commit path aborted its unfinalized heads
-                # before raising (commit_put_many_async guard)
+                # ticketed commits never abort on failure — the shard
+                # stays registered in doubt and the sweep retries the
+                # idempotent commit, converging forward
                 commit_errs.append(e)
         if commit_errs:
             raise commit_errs[0]
+        # every participant committed: the decision has no readers left
+        self._retire_decision(ticket)
         return out
 
     # ------------------------------------------------------------------
@@ -427,6 +652,10 @@ class ShardedStore:
         return ok
 
     def gc_tick(self) -> None:
+        # the maintenance tick doubles as the in-doubt retry point:
+        # tickets stranded by a leader death or a failed commit
+        # submission converge here without waiting for a restart
+        self.resolve_indoubt()
         for s in self.shards:
             s.gc_tick()
 
@@ -491,9 +720,20 @@ class ShardedStore:
         """Aggregated snapshot: router + balance histogram + per-shard
         breakdowns. Same consistency model as the per-shard snapshot —
         atomic counter reads, no global cut."""
+        shards = [s.snapshot_metadata() for s in self.shards]
+        states = {s["health"]["state"] for s in shards}
+        with self._tlock:
+            decisions = sorted(self._decisions)
         return {"router": self.router.snapshot(),
                 "num_shards": self.num_shards,
                 "balance": self.shard_balance(),
                 "commit_tickets_issued": self.tickets_issued(),
+                "health": {
+                    # degraded if ANY shard's writeback is degraded
+                    "state": "DEGRADED_WRITEBACK"
+                    if "DEGRADED_WRITEBACK" in states else "OK",
+                    "shard_states": sorted(states),
+                    "indoubt_tickets": self.indoubt_tickets(),
+                    "decisions_held": decisions},
                 "stats": self.stats.as_dict(),
-                "shards": [s.snapshot_metadata() for s in self.shards]}
+                "shards": shards}

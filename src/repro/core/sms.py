@@ -59,6 +59,10 @@ class Slab:
         self.capacity = capacity
         self.hardcap = hardcap(capacity)
         self.clock = clock
+        # optional FaultPlan (set by SMS.add); a "reclaim" advisory at
+        # sms.store / sms.load reclaims this slab mid-operation — the
+        # FaaS provider killing the instance under us.
+        self.faults = None
         self.storage: Dict[str, bytes] = {}
         self.cache: "OrderedDict[str, bytes]" = OrderedDict()
         # incremental byte accounting: `used`/cache totals used to be
@@ -113,6 +117,10 @@ class Slab:
         Accepts writes while under HARDCAP (the crossing write goes
         through — the placement layer then seals the FG, §5.3.1); the raw
         capacity is the absolute bound, with cache-space eviction first."""
+        if self.faults is not None:
+            if self.faults.fire("sms.store", key) == "reclaim":
+                self.reclaim()            # instance died mid-store
+                return False
         with self._lock:
             if not self.alive:
                 return False
@@ -132,6 +140,10 @@ class Slab:
             return True
 
     def load(self, key: str) -> Optional[bytes]:
+        if self.faults is not None:
+            if self.faults.fire("sms.load", key) == "reclaim":
+                self.reclaim()            # instance died mid-gather
+                return None
         with self._lock:
             if not self.alive:
                 return None
@@ -208,11 +220,13 @@ class SMS:
     def __init__(self, clock: Clock):
         self.clock = clock
         self.slabs: Dict[int, Slab] = {}
+        self.faults = None               # propagated to new slabs
         self._lock = threading.RLock()
 
     def add(self, fid: int, capacity: int) -> Slab:
         with self._lock:
             slab = Slab(fid, capacity, self.clock)
+            slab.faults = self.faults
             self.slabs[fid] = slab
             return slab
 

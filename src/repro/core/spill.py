@@ -171,7 +171,13 @@ class SpillJournal:
 
     def __init__(self, path, *, segment_bytes: int = 64 * 1024 * 1024,
                  fsync: bool = False, compact_below: int = 256 * 1024,
-                 sync_each: bool = True, async_writer: bool = False):
+                 sync_each: bool = True, async_writer: bool = False,
+                 faults=None):
+        # optional FaultPlan (repro.core.faults): "spill.append" /
+        # "spill.sync" raise on the ack path, "spill.io" raises inside
+        # the (possibly async) frame writer, "spill.torn_close" tears
+        # the unsynced tail on a hard close.
+        self.faults = faults
         self.dir = Path(path)
         self.dir.mkdir(parents=True, exist_ok=True)
         # inter-process exclusivity: two journals on the same directory
@@ -352,6 +358,8 @@ class SpillJournal:
             return [self._append_locked(k, d) for k, d in items]
 
     def _append_locked(self, key: str, data) -> int:
+        if self.faults is not None:
+            self.faults.fire("spill.append", key)   # pre-bookkeeping
         kb = key.encode()
         body = data if isinstance(data, (bytes, bytearray, memoryview)) \
             else as_u8(data)                           # zero-copy u8 view
@@ -401,6 +409,8 @@ class SpillJournal:
         """Durability barrier: every record appended so far is on disk
         when this returns. Group-commit callers MUST invoke it before
         acknowledging the writes those records cover."""
+        if self.faults is not None:
+            self.faults.fire("spill.sync")
         with self._lock:
             if self._closed:
                 return
@@ -436,16 +446,22 @@ class SpillJournal:
             except BaseException as e:            # noqa: BLE001
                 with self._lock:
                     self._werr = e
+                    # wake blocked sync()/drain barriers NOW — without
+                    # this, the ack path only discovered a writer-side
+                    # failure on its next poll tick
+                    self._wcond.notify_all()
 
     def _drain(self) -> None:
         """Wait until every queued file op has executed; surface any
-        writer failure to the caller (the ack path)."""
+        writer failure (original exception type) to the caller — the
+        ack path. Writer-side failures notify the condition variable,
+        so this blocks without polling and wakes immediately."""
         if self._wthread is None:
             self._raise_pending_error()
             return
         with self._lock:
-            while self._wq or self._winflight:
-                self._wcond.wait(timeout=0.05)
+            while (self._wq or self._winflight) and self._werr is None:
+                self._wcond.wait()
             self._raise_pending_error()
 
     def _raise_pending_error(self) -> None:
@@ -456,6 +472,8 @@ class SpillJournal:
     def _exec_op(self, op: tuple) -> None:
         kind = op[0]
         if kind == "frame":
+            if self.faults is not None:
+                self.faults.fire("spill.io")     # writer-side I/O error
             _, rtype, seq, kb, body = op
             nbytes = payload_nbytes(body)
             meta = _META_S.pack(rtype, seq, len(kb), nbytes)
@@ -620,8 +638,22 @@ class SpillJournal:
         if hard:
             synced = self._synced
             self._f.close()                       # flushes the tail ...
+            cut = synced
+            if self.faults is not None and \
+                    self.faults.fire("spill.torn_close") == "torn":
+                # leave a PARTIAL unsynced frame behind the synced
+                # boundary — the crash-mid-append case replay must
+                # detect (bad framing) and drop; synced (acked) frames
+                # are never torn, the contract says they survive
+                p = self._seg_path(self._active_id)
+                try:
+                    tail = os.path.getsize(p) - synced
+                except OSError:
+                    tail = 0
+                if tail > 0:
+                    cut = synced + min(_HDR_LEN - 12, tail)
             try:                                  # ... which a real crash
-                os.truncate(self._seg_path(self._active_id), synced)
+                os.truncate(self._seg_path(self._active_id), cut)
             except OSError:                       # would have lost
                 pass
             self._release_dir_lock()              # as process death would

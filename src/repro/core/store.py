@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import itertools
 import json
+import logging
 import shutil
 import tempfile
 import threading
@@ -75,6 +76,7 @@ from repro.core.clock import Clock
 from repro.core.cos import COS
 from repro.core.costmodel import CostLedger
 from repro.core.ec import ECConfig, RSCodec
+from repro.core.faults import (FaultPlan, OpDeadlineExceeded, RetryPolicy)
 from repro.core.gc_window import BucketState, GCConfig, SlidingWindow
 from repro.core.insertion_log import InsertionLog, Piggyback, PutRecord
 from repro.core.payload import (as_u8, is_array_payload, needs_snapshot,
@@ -88,6 +90,8 @@ from repro.core.versioning import Meta, MetadataTable, PersistentBuffer
 from repro.core.writeback import StoreFuture, WritebackQueue
 
 MB = 1024 * 1024
+
+_LOG = logging.getLogger("repro.core.store")
 
 # sentinel seq for a metadata record whose durable copy lives inside the
 # journal's `metasnap` snapshot rather than an individual `meta/` frame
@@ -118,6 +122,23 @@ class StoreConfig:
     writeback_depth: int = 512         # queue bound (backpressure)
     writeback_retries: int = 8
     writeback_backoff_s: float = 0.005
+    # consecutive transient COS failures before the writeback queue
+    # declares an outage and enters DEGRADED_WRITEBACK (retry budgets
+    # freeze, producers feel backpressure, reads keep serving from the
+    # pending map / spill journal; see repro.core.writeback)
+    writeback_degraded_after: int = 12
+    # ---- unified retry policy (repro.core.faults) ----------------------
+    # demand COS reads retry transient/throttle errors and eventual-
+    # consistency misses up to cos_retries attempts; an optional per-op
+    # deadline turns an exhausted budget into OpDeadlineExceeded
+    # surfaced through the GET's StoreFuture instead of a silent miss
+    cos_retries: int = 16
+    cos_op_deadline_s: Optional[float] = None
+    # ---- deterministic fault injection (repro.core.faults) -------------
+    # an optional FaultPlan threaded through COS, SMS slabs, the spill
+    # journal, and the writeback writer; None (default) keeps every
+    # instrumented site a single attribute check
+    faults: Optional[FaultPlan] = None
     # ---- crash-consistent writeback spill (§5.3.2 durability) ----------
     # The durable half of the persistent buffer: enqueued writes are
     # journaled to an append-only, CRC-framed, segment-rotated local log
@@ -225,6 +246,8 @@ _STAT_FIELDS = (
     "spill_replayed_metas",   # metadata records restored at open
     "spill_meta_snapshots",   # metadata-table snapshots journaled
     "commit_tickets",         # leader-sequenced cross-shard commits
+    "writeback_permanent_failures",   # mirror of queue data-at-risk count
+    "indoubt_resolved",       # prepared 2PC batches rolled forward/back
 )
 
 
@@ -283,6 +306,15 @@ class _PreparedBatch:
         field(default_factory=list)
     failed: Set[str] = field(default_factory=set)  # fragments that failed
     resolved: bool = False            # committed or aborted
+    # cross-shard batches only: the leader ticket this batch was prepared
+    # under, and the journal seq of its durable `prepared/<ticket>`
+    # record (truncated when the batch resolves)
+    ticket: Optional[int] = None
+    prepared_seq: Optional[int] = None
+    # objs ("key|ver") whose commit-side finalization fully ran — a
+    # RETRIED ticketed commit (in-doubt roll-forward after a journal
+    # error) skips them instead of double-releasing buffer refs
+    committed: Set[str] = field(default_factory=set)
 
 
 @runtime_checkable
@@ -333,7 +365,19 @@ class InfiniStore:
         self.cos = cos if cos is not None else \
             COS(self.clock, visibility_lag=cfg.cos_visibility_lag,
                 root=cos_root)
+        if cfg.faults is not None and self._owns_cos:
+            # a shared (front-end-owned) COS gets its plan from the
+            # front-end, not from each shard
+            self.cos.faults = cfg.faults
         self.sms = SMS(self.clock)
+        self.sms.faults = cfg.faults
+        # unified transient/throttle retry policy for demand COS reads
+        # (also handed to the recovery manager's chunk downloads)
+        self.cos_retry = RetryPolicy(
+            max_attempts=max(1, cfg.cos_retries),
+            backoff_base_s=max(cfg.cos_visibility_lag / 8.0, 1e-3),
+            backoff_cap_s=max(cfg.cos_visibility_lag, 0.05),
+            seed=seed)
         self.window = SlidingWindow(cfg.gc, self.clock)
         self.codec = RSCodec(cfg.ec)
         self.mt = MetadataTable()
@@ -368,7 +412,8 @@ class InfiniStore:
             # PUT, not one per chunk record)
             self.spill = SpillJournal(
                 spill_dir, segment_bytes=cfg.spill_segment_bytes,
-                fsync=cfg.spill_fsync, sync_each=False)
+                fsync=cfg.spill_fsync, sync_each=False,
+                faults=cfg.faults)
         self.spill_dir = spill_dir if self.spill is not None else None
         self.writeback = WritebackQueue(
             self.cos, max_depth=cfg.writeback_depth,
@@ -376,7 +421,9 @@ class InfiniStore:
             backoff_base_s=cfg.writeback_backoff_s,
             start_thread=cfg.async_writeback,
             spill=self.spill,
-            name=f"cos-writeback{tag}")
+            name=f"cos-writeback{tag}",
+            degraded_after=cfg.writeback_degraded_after,
+            faults=cfg.faults)
         # chunk key -> function id (the daemon's chunk-function mapping)
         self.chunk_map: Dict[str, int] = {}
         # daemon's piggybacked view of each function's insertion state
@@ -392,7 +439,8 @@ class InfiniStore:
             retain_seconds=cfg.recovery_retain_seconds,
             clock=self.clock,
             writeback=self.writeback,
-            thread_prefix=f"recovery{tag}")
+            thread_prefix=f"recovery{tag}",
+            retry=self.cos_retry)
         self._pending_records: Dict[int, List[PutRecord]] = {}
         # the client-daemon thread: every mutating request runs here, in
         # submission order — async callers pipeline, sync callers block
@@ -427,6 +475,16 @@ class InfiniStore:
         # entry fully drains. In-flight (this PUT) vs committed:
         self._spill_put_frag_seqs: Dict[str, int] = {}
         self._spill_frag_seqs: Dict[str, int] = {}
+        # 2PC in-doubt state (daemon thread only). Live prepared batches
+        # registered under a leader ticket (durable `prepared/<t>`
+        # journal record appended + synced at prepare):
+        self._prepared_tickets: Dict[int, _PreparedBatch] = {}
+        # prepared-uncommitted batches found in the journal at restart:
+        # ticket -> {"objs": [...], "seq": rec seq, "frags": {...},
+        # "stubs": {...}} — their fragment/stub frames are WITHHELD from
+        # ordinary replay until the leader's decision resolves them
+        # (resolve_indoubt), so an aborted batch can never leak a head
+        self._indoubt: Dict[int, dict] = {}
         # daemon-restart resume: replay journal records that survived a
         # crash — metadata records restore the table, pending writes
         # re-enter the queue (and thus the pending map, so GETs and
@@ -463,8 +521,29 @@ class InfiniStore:
     def flush_writeback(self, timeout: Optional[float] = None) -> bool:
         """Barrier: block until every acked PUT is persisted in COS.
         False on timeout or if any write failed out permanently (those
-        payloads remain pinned in the persistent buffer)."""
-        return self.writeback.flush(timeout=timeout)
+        payloads remain pinned in the persistent buffer). Permanent
+        failures are data-at-risk: the False return path names the
+        affected keys (log + `snapshot_metadata()["health"]`) instead
+        of burying them in a counter."""
+        ok = self.writeback.flush(timeout=timeout)
+        self.stats.writeback_permanent_failures = \
+            self.writeback.stats.failures
+        if not ok:
+            h = self.writeback.health()
+            if h["failed_keys"]:
+                _LOG.warning(
+                    "flush_writeback%s: %d permanently-failed writes; "
+                    "data-at-risk keys (first %d): %s",
+                    f" [{self.name}]" if self.name else "",
+                    h["permanent_failures"],
+                    min(8, len(h["failed_keys"])), h["failed_keys"][:8])
+            else:
+                _LOG.warning(
+                    "flush_writeback%s: timed out with state=%s "
+                    "depth=%d consecutive_errors=%d",
+                    f" [{self.name}]" if self.name else "",
+                    h["state"], h["depth"], h["consecutive_errors"])
+        return ok
 
     def close(self, *, flush: bool = True) -> bool:
         """Release the store's threads: drain the client-daemon executor
@@ -634,9 +713,31 @@ class InfiniStore:
                 ckey = key[len("chunk/"):]
                 stubs.setdefault(ckey.rsplit("#", 1)[0],
                                  []).append((seq, key))
+            elif key.startswith("prepared/"):
+                # a 2PC sub-batch prepared but not resolved pre-crash:
+                # in doubt until the leader's decision is consulted
+                self._spill_restore_prepared(seq, key[len("prepared/"):],
+                                             data)
             else:
                 self.writeback.enqueue(key, data, seq=seq)
                 self.stats.inc("spill_replayed_writes")
+        # Withhold every in-doubt batch's fragment/stub frames from
+        # ordinary replay: they must neither re-enter the writeback
+        # queue nor restore buffer entries until the leader's decision
+        # says commit (resolve_indoubt releases or truncates them).
+        if self._indoubt:
+            indoubt_objs: Dict[str, int] = {}
+            for t, e in self._indoubt.items():
+                for d in e["objs"]:
+                    indoubt_objs[f"{d['key']}|{d['ver']}"] = t
+            for fkey in list(frag_seqs):
+                t = indoubt_objs.get(fkey.rpartition("/f")[0])
+                if t is None:
+                    continue
+                e = self._indoubt[t]
+                e["frags"][fkey] = (frag_seqs.pop(fkey),
+                                    frag_payloads.pop(fkey))
+                e["stubs"][fkey] = stubs.pop(fkey, [])
         # A superseded meta can be resurrected alongside its successor
         # when the PERSIST frame truncating it was lost (torn tail): the
         # live put path only ever truncates the current head's
@@ -681,6 +782,129 @@ class InfiniStore:
         for items in stubs.values():              # stubs whose fragment
             for seq, _ in items:                  # is gone (corruption):
                 self.spill.mark_persisted(seq)    # unrecoverable, drop
+
+    def _spill_restore_prepared(self, seq: int, tstr: str, data) -> None:
+        """Restore one `prepared/<ticket>` record into the in-doubt map.
+        Malformed records are truncated — without a parsable object list
+        there is nothing to withhold or resolve."""
+        try:
+            ticket = int(tstr)
+            objs = json.loads(bytes(data))
+            if not isinstance(objs, list):
+                raise ValueError("prepared record is not a list")
+            for d in objs:
+                d["key"], int(d["ver"])           # shape check
+        except (ValueError, KeyError, TypeError):
+            self.spill.mark_persisted(seq)
+            return
+        self._indoubt[ticket] = {"objs": objs, "seq": seq,
+                                 "frags": {}, "stubs": {}}
+
+    # ------------------------------------------------------------------
+    # 2PC in-doubt resolution (restart-time sweep; see repro.core.shard)
+    # ------------------------------------------------------------------
+
+    def indoubt_tickets(self) -> List[int]:
+        """Tickets of prepared-uncommitted batches this store knows
+        about: live registrations plus journal-replayed ones. The
+        cross-shard resolver sweeps these after any shard restart."""
+        return self._submit(lambda: sorted(
+            set(self._indoubt) | set(self._prepared_tickets))).result()
+
+    def resolve_indoubt(self, ticket: int, *, commit: bool) -> StoreFuture:
+        """Resolve one in-doubt prepared batch per the leader's durable
+        decision: roll it forward (commit — every version becomes a
+        readable head, exactly as if round 2 had run) or back (abort —
+        its frames are truncated, no version ever becomes visible).
+        Resolves to {key: version} on commit, None for an unknown
+        ticket or an abort. Idempotent: a ticket already resolved (or
+        never prepared here) is a no-op."""
+        return self._submit(lambda: self._resolve_indoubt_impl(
+            ticket, commit))
+
+    def _resolve_indoubt_impl(self, ticket: int, commit: bool):
+        prep = self._prepared_tickets.get(ticket)
+        if prep is not None:                      # live prepared batch
+            self.stats.inc("indoubt_resolved")
+            if commit:
+                # a failure propagates with the batch still registered:
+                # the decision is durable, so the resolver retries the
+                # (idempotent) commit rather than half-aborting
+                return self._put_many_commit(prep, ticket=ticket)
+            self._put_many_abort(prep)
+            return None
+        e = self._indoubt.pop(ticket, None)
+        if e is None:
+            return None
+        self.stats.inc("indoubt_resolved")
+        return self._resolve_indoubt_replayed(e, ticket, commit)
+
+    def _resolve_indoubt_replayed(self, e: dict, ticket: int,
+                                  commit: bool):
+        """Resolve a journal-replayed in-doubt batch (the shard crashed
+        between prepare and the leader's round 2 reaching it).
+
+        Abort: truncate the batch's withheld frames + prepared record —
+        presumed-abort finishes the roll-back the crash started.
+
+        Commit: install + journal each object's metadata (skipping any
+        already restored — the crash may have landed mid-commit, after
+        some `meta/` frames synced) and re-enqueue the withheld chunk
+        writes exactly like ordinary replay. An object with no withheld
+        fragment frames already drained to COS pre-crash (its frames
+        were truncated on full persistence), so metadata alone
+        finishes it."""
+        if not commit:
+            for fkey, (fseq, _) in e["frags"].items():
+                self.spill.mark_persisted(fseq)
+            for items in e["stubs"].values():
+                for seq, _ in items:
+                    self.spill.mark_persisted(seq)
+            self.spill.mark_persisted(e["seq"])
+            self.spill.sync()
+            return None
+        out: Dict[str, int] = {}
+        for d in e["objs"]:
+            key, ver = d["key"], int(d["ver"])
+            obj = f"{key}|{ver}"
+            with self._lock:
+                have_meta = obj in self._spill_meta_seqs
+            if not have_meta:
+                m = Meta(key, ver, int(d.get("prev_ver", 0)))
+                m.num_fragments = int(d.get("num_fragments", 1))
+                m.size = int(d.get("size", 0))
+                m.done(True)
+                self.mt.store(obj, m)
+                head = self.mt.load(key)
+                if head is None or head.ver <= ver:
+                    self.mt.store(key, m)
+                self._spill_journal_meta(key, m, ticket=ticket)
+            out[key] = ver
+        live = []                                 # (fkey, u8, stub items)
+        for fkey, (fseq, payload) in e["frags"].items():
+            items = e["stubs"].get(fkey) or []
+            if not items:
+                self.spill.mark_persisted(fseq)   # chunks fully drained
+                continue
+            u8 = as_u8(payload)
+            self.pb.create(fkey, u8, refs=len(items))
+            with self._lock:
+                self._spill_frag_seqs[fkey] = fseq
+            live.append((fkey, u8, items))
+        for (fkey, u8, items), chunks in zip(
+                live, self.codec.encode_many([u for _, u, _ in live],
+                                             as_arrays=True)
+                if live else []):
+            for seq, cos_key in items:
+                idx = int(cos_key.rsplit("#", 1)[1])
+                self.writeback.enqueue(cos_key, chunks[idx].copy(),
+                                       seq=seq,
+                                       on_done=self._on_chunk_persisted)
+                self.stats.inc("spill_replayed_writes")
+        self.spill.mark_persisted(e["seq"])
+        self.spill.sync()
+        self.stats.inc("commit_tickets")
+        return out
 
     def _spill_register_meta(self, d: dict, seq: int) -> None:
         """Install one replayed metadata entry (individual record or a
@@ -890,7 +1114,8 @@ class InfiniStore:
             raise
 
     def prepare_put_many_async(self, items, *,
-                               raise_on_conflict: bool = False
+                               raise_on_conflict: bool = False,
+                               ticket: Optional[int] = None
                                ) -> StoreFuture:
         """Round 1 of the cross-shard commit protocol: run this shard's
         sub-batch up to (but NOT including) the ack point. The future
@@ -898,27 +1123,75 @@ class InfiniStore:
         `commit_put_many_async` / `abort_put_many_async`. Until one of
         those runs, the new versions are PENDING — invisible to readers
         and un-acked. Same-key PUTs meanwhile wait on the pending head
-        exactly like any concurrent PUT."""
+        exactly like any concurrent PUT.
+
+        `ticket` (leader-issued, cross-shard batches only) makes the
+        prepare DURABLE: a `prepared/<ticket>` record naming every
+        (key, version) of the sub-batch is journaled and synced before
+        the future resolves, so a crashed shard restarts knowing exactly
+        which batches were in doubt — `indoubt_tickets()` surfaces them
+        and `resolve_indoubt()` rolls each forward or back once the
+        leader's decision is known."""
         items = list(items.items()) if isinstance(items, dict) \
             else list(items)
         items = [(k, self._snapshot_value(v)) for k, v in items]
-        return self._submit(
-            lambda: self._put_many_prepare(
-                items, raise_on_conflict=raise_on_conflict))
+
+        def run():
+            prep = self._put_many_prepare(
+                items, raise_on_conflict=raise_on_conflict)
+            if ticket is not None:
+                try:
+                    self._register_prepared(prep, ticket)
+                except BaseException:
+                    self._put_many_abort(prep)
+                    raise
+            return prep
+        return self._submit(run)
+
+    def _register_prepared(self, prep: "_PreparedBatch",
+                           ticket: int) -> None:
+        """Journal + sync this batch's durable `prepared/<ticket>`
+        record (PREPARE DURABILITY POINT: the record and the batch's
+        payload frames — appended earlier, flushed by this same sync —
+        must survive a crash for the leader's decision to be
+        actionable) and register the live batch for the resolver."""
+        prep.ticket = ticket
+        if self.spill is not None:
+            objs = [{"key": k, "ver": ver, "prev_ver": c.prev_ver,
+                     "num_fragments": c.num_fragments, "size": c.size}
+                    for k, c, ver, _ in prep.metas]
+            prep.prepared_seq = self.spill.append(
+                f"prepared/{ticket}", json.dumps(objs).encode())
+            self.spill.sync()
+        self._prepared_tickets[ticket] = prep
+
+    def _drop_prepared(self, prep: "_PreparedBatch") -> None:
+        """Retire a resolved batch's prepared record + registration
+        (the caller's journal sync makes the truncation durable)."""
+        if prep.ticket is not None:
+            self._prepared_tickets.pop(prep.ticket, None)
+        if prep.prepared_seq is not None and self.spill is not None:
+            self.spill.mark_persisted(prep.prepared_seq)
+            prep.prepared_seq = None
 
     def commit_put_many_async(self, prep: "_PreparedBatch", *,
                               ticket: Optional[int] = None) -> StoreFuture:
         """Round 2 (commit): finalize a prepared sub-batch under the
         leader's commit ticket. Resolves to {key: version} like
-        `put_many`. A commit-side failure (journal I/O, GC) aborts the
-        batch's unfinalized heads before propagating — a PENDING head
-        left behind would block every later reader and writer of that
-        key forever."""
+        `put_many`. A commit-side failure (journal I/O, GC) on an
+        UN-ticketed batch aborts the unfinalized heads before
+        propagating — a PENDING head left behind would block every
+        later reader and writer of that key forever. A TICKETED batch
+        must NOT abort here: the leader's commit decision is already
+        durable, so aborting one shard would leave the batch
+        half-visible forever — the batch stays registered in doubt and
+        the cross-shard resolver retries the (idempotent) commit."""
         def run():
             try:
                 return self._put_many_commit(prep, ticket=ticket)
             except BaseException:
-                self._put_many_abort(prep)
+                if ticket is None:
+                    self._put_many_abort(prep)
                 raise
         return self._submit(run)
 
@@ -1038,7 +1311,24 @@ class InfiniStore:
             raise RuntimeError("prepared batch already resolved")
         out: Dict[str, int] = {}
         for key, c, ver, fkeys in prep.metas:
+            obj = f"{key}|{ver}"
+            if obj in prep.committed:         # retried ticketed commit
+                out[key] = ver if c.is_done_ok() else -1
+                continue
             frag_failed = any(fk in prep.failed for fk in fkeys)
+            if not frag_failed and self.spill is not None:
+                # journal the metadata FIRST — the only failure-prone
+                # step of this obj's finalization, so an I/O error here
+                # leaves the obj untouched and the commit retryable (the
+                # journal's same-key supersession absorbs a duplicate
+                # append on retry). The record still lands AFTER the
+                # version's payload frames (appended in
+                # _put_fragments): a torn tail then can only lose the
+                # meta of a PUT whose data frames are also gone —
+                # replay can never restore a head version with no
+                # recoverable data, which would shadow the older
+                # durable version
+                self._spill_journal_meta(key, c, ticket=ticket)
             for fkey in fkeys:
                 if frag_failed:
                     self.pb.release_all(fkey)
@@ -1046,23 +1336,18 @@ class InfiniStore:
                 elif self.pb.release(fkey):   # drop the PUT's own ref
                     self._spill_drop_frag(fkey)
             ok = c.done(not frag_failed)
-            if ok and self.spill is not None:
-                # journal the metadata AFTER the version's payload
-                # frames (they were appended in _put_fragments): a
-                # torn tail then can only lose the meta of a PUT
-                # whose data frames are also gone — replay can never
-                # restore a head version with no recoverable data,
-                # which would shadow the older durable version
-                self._spill_journal_meta(key, c, ticket=ticket)
             if ok and c.prev_ver > 0:
                 self._gc_old_version(key, c.prev_ver)
+            prep.committed.add(obj)
             out[key] = ver if ok else -1
         if ticket is not None:
             self.stats.inc("commit_tickets")
+        self._drop_prepared(prep)
         if self.spill is not None:
             # ACK DURABILITY POINT: group-commit every journal frame
-            # this batch appended (metadata + chunk + log records)
-            # before any caller observes the ack
+            # this batch appended (metadata + chunk + log records,
+            # plus the prepared-record truncation) before any caller
+            # observes the ack
             self.spill.sync()
         for key in prep.conflicted:
             out[key] = -1
@@ -1092,6 +1377,7 @@ class InfiniStore:
         for _, _, c in prep.installed:
             if not c.is_done():
                 c.done(False)
+        self._drop_prepared(prep)
         if self.spill is not None:
             self.spill.sync()                     # persist the truncations
         prep.resolved = True
@@ -1544,6 +1830,11 @@ class InfiniStore:
                 frag_pending[fkey].discard(fut)
                 try:
                     data = fut.result()
+                except OpDeadlineExceeded:
+                    # a configured per-op deadline is a caller contract:
+                    # it must surface through the GET's StoreFuture, not
+                    # silently degrade into a miss
+                    raise
                 except Exception:                     # noqa: BLE001
                     data = None
                 if data is None:
@@ -1681,27 +1972,53 @@ class InfiniStore:
                                seconds=nbytes * self.cfg.busy_per_byte_s)
         return out
 
-    def _cos_read_consistent(self, key: str, max_tries: int = 16):
+    def _cos_read_consistent(self, key: str,
+                             max_tries: Optional[int] = None):
         """SCFS-style consistency-increasing loop: retry until the
         eventually-consistent COS shows the object (Appendix A), with
         capped exponential backoff derived from the configured
-        `cos_visibility_lag`. Writes still queued for persistence are
-        served from the writeback pending map — they're not in COS yet
-        by construction. Thread-safe: runs on the daemon thread (legacy
+        `cos_visibility_lag`. Unified with the store's RetryPolicy
+        (repro.core.faults): transient/throttle COS errors retry on the
+        policy's backoff schedule inside the same attempt budget,
+        permanent errors raise immediately, and an optional per-op
+        deadline (`cfg.cos_op_deadline_s`) raises OpDeadlineExceeded —
+        surfaced through the GET's StoreFuture — instead of burning the
+        full budget. Writes still queued for persistence are served
+        from the writeback pending map — they're not in COS yet by
+        construction. Thread-safe: runs on the daemon thread (legacy
         path) or the GET I/O executor (pipelined fan-out); the ledger is
         charged under the store lock."""
-        base = max(self.cfg.cos_visibility_lag / 8.0, 1e-3)
-        cap = max(self.cfg.cos_visibility_lag, 0.05)
-        for attempt in range(max_tries):
+        policy = self.cos_retry
+        tries = max_tries if max_tries is not None else \
+            policy.max_attempts
+        deadline_s = self.cfg.cos_op_deadline_s
+        start = time.monotonic()
+        for attempt in range(1, tries + 1):
             data = self.writeback.peek(key)
             if data is not None:
                 return data
-            data = self.cos.get(key)
+            last_exc = None
+            try:
+                data = self.cos.get(key)
+            except Exception as e:                # noqa: BLE001
+                kind = policy.classify(e)
+                if kind == RetryPolicy.PERMANENT:
+                    raise
+                last_exc, data = e, None
             with self._lock:
                 self.ledger.cos_op("get")
             if data is not None:
                 return data
-            delay = min(base * (2.0 ** attempt), cap)
+            if last_exc is not None:              # error backoff
+                delay = policy.delay(attempt, policy.classify(last_exc))
+            else:                                 # visibility backoff
+                delay = min(policy.backoff_base_s * (2.0 ** (attempt - 1)),
+                            policy.backoff_cap_s)
+            if deadline_s is not None and \
+                    time.monotonic() - start + delay > deadline_s:
+                raise OpDeadlineExceeded(
+                    f"COS read {key!r}: {deadline_s:.3f}s deadline "
+                    f"exceeded after {attempt} attempts") from last_exc
             if self.clock.is_wall:
                 time.sleep(delay)
             else:
@@ -1844,9 +2161,20 @@ class InfiniStore:
                 continue
             data = self.writeback.peek(f"chunk/{ckey}")
             if data is None:
-                data = self.cos.get(f"chunk/{ckey}")
-                with self._lock:      # I/O-executor reads charge it too
-                    self.ledger.cos_op("get")
+                try:
+                    data = self.cos.get(f"chunk/{ckey}")
+                except Exception as e:            # noqa: BLE001
+                    if self.cos_retry.classify(e) \
+                            == RetryPolicy.PERMANENT:
+                        raise
+                    # compaction is maintenance: a transient COS error
+                    # re-marks the chunk for the next round rather than
+                    # stalling gc_tick on a retry loop
+                    self.window.mark(ckey)
+                    continue
+                finally:
+                    with self._lock:  # I/O-executor reads charge it too
+                        self.ledger.cos_op("get")
             if data is None:
                 old = self.chunk_map.get(ckey)
                 data = self.sms.slabs[old].load(ckey) if old is not None \
@@ -1961,6 +2289,21 @@ class InfiniStore:
         return sum(len(b.function_ids)
                    for b in self.window.buckets(state))
 
+    def health(self) -> dict:
+        """Operator-facing health summary: the writeback queue's state
+        machine (OK vs DEGRADED_WRITEBACK with its outage evidence),
+        permanently-failed (data-at-risk) keys, and any 2PC tickets
+        still in doubt. Racy-read consistency like every other stats
+        surface — safe from any thread."""
+        wb = self.writeback.health()
+        self.stats.writeback_permanent_failures = wb["permanent_failures"]
+        return {"state": wb["state"],
+                "writeback": wb,
+                "indoubt_tickets": sorted(
+                    set(self._indoubt) | set(self._prepared_tickets)),
+                "spill_pending": self.spill.pending_count
+                if self.spill is not None else 0}
+
     def snapshot_metadata(self):
         """Point-in-time view of the daemon's tables and counters.
 
@@ -1977,6 +2320,7 @@ class InfiniStore:
             snap_covered = len(self._spill_meta_seqs) - meta_records
             tombstones = len(self._spill_tombstones)
         return {"mt": self.mt.snapshot(),
+                "health": self.health(),
                 "chunk_map": dict(self.chunk_map),
                 "get_pipeline": {
                     "pipelined": self.cfg.pipelined_get,

@@ -15,8 +15,22 @@ COS, which is exactly the paper's "retry persistence asynchronously from
 the persistent buffer" contract at chunk granularity.
 
 Bounded depth gives backpressure (enqueue blocks when the queue is
-full), failures retry with exponential backoff, and `flush()` is the
-barrier checkpoint/shutdown paths use.
+full), failures retry under the unified `RetryPolicy` (capped
+exponential backoff + jitter; transient/throttle/permanent
+classification — see `repro.core.faults`), and `flush()` is the barrier
+checkpoint/shutdown paths use.
+
+COS outages degrade, they don't destroy: `degraded_after` consecutive
+transient failures flip the queue into the documented
+`DEGRADED_WRITEBACK` state — retry budgets freeze (an outage is not the
+write's fault, so nothing accumulates permanent failures), tasks probe
+COS at the backoff cap, bounded depth keeps applying backpressure to
+producers, and reads keep flowing from the pending map / spill journal
+/ SMS. The first successful write heals the state automatically and the
+queue drains. Only errors classified PERMANENT (or retry exhaustion
+OUTSIDE an outage) fail a write for good; those are counted, their keys
+recorded, and both surfaced through `health()` so callers can tell a
+timed-out flush from data-at-risk.
 
 With a `SpillJournal` attached, every enqueue is appended to the
 durable journal BEFORE it enters the queue (so before any ack), and the
@@ -35,6 +49,8 @@ from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
+
+from repro.core.faults import RetryPolicy
 
 
 class StoreFuture(Future):
@@ -56,10 +72,13 @@ class WritebackStats:
     enqueued: int = 0
     persisted: int = 0
     retries: int = 0
-    failures: int = 0                 # writes that exhausted max_retries
+    failures: int = 0                 # permanently-failed writes
     superseded: int = 0               # dropped: a newer same-key write won
     peak_depth: int = 0
     flushes: int = 0
+    throttled: int = 0                # SlowDown-classified retries
+    degraded_entries: int = 0         # OK -> DEGRADED_WRITEBACK flips
+    degraded_exits: int = 0           # outages healed
 
 
 @dataclass
@@ -79,15 +98,30 @@ class WritebackQueue:
     def __init__(self, cos, *, max_depth: int = 256, max_retries: int = 8,
                  backoff_base_s: float = 0.005, backoff_cap_s: float = 0.5,
                  start_thread: bool = True, spill=None,
-                 name: str = "cos-writeback"):
+                 name: str = "cos-writeback",
+                 retry: Optional[RetryPolicy] = None,
+                 degraded_after: int = 12, faults=None):
         self.cos = cos
         # optional SpillJournal: enqueues are journaled before ack and
         # truncated on persistence (crash-consistent pending map)
         self.spill = spill
+        self.faults = faults
         self.max_depth = max_depth
         self.max_retries = max_retries
         self.backoff_base_s = backoff_base_s
         self.backoff_cap_s = backoff_cap_s
+        # unified retry policy: classification + backoff shape; the
+        # task-based writer keeps its own attempt counters, so only
+        # classify()/delay() are used here (max_attempts comes from
+        # max_retries for backward compatibility)
+        self.retry = retry or RetryPolicy(max_attempts=max_retries + 1,
+                                          backoff_base_s=backoff_base_s,
+                                          backoff_cap_s=backoff_cap_s)
+        # consecutive transient failures before declaring a COS outage
+        self.degraded_after = max(1, degraded_after)
+        self._consec_errors = 0
+        self._degraded_since: Optional[float] = None
+        self._failed_keys: List[str] = []
         self.stats = WritebackStats()
         self._q: deque = deque()
         # cos key -> payload for every write not yet persisted (including
@@ -221,6 +255,24 @@ class WritebackQueue:
         with self._lock:
             return list(self._errors)
 
+    def health(self) -> dict:
+        """Degradation/failure surface for `snapshot_metadata()["health"]`:
+        distinguishes a queue that is merely deep (backpressure working)
+        from one riding out a COS outage (DEGRADED_WRITEBACK) from one
+        that has permanently failed writes (data-at-risk)."""
+        with self._lock:
+            degraded = self._degraded_since is not None
+            return {
+                "state": "DEGRADED_WRITEBACK" if degraded else "OK",
+                "depth": len(self._q) + self._inflight,
+                "consecutive_errors": self._consec_errors,
+                "permanent_failures": self.stats.failures,
+                "failed_keys": list(self._failed_keys),
+                "degraded_since": self._degraded_since,
+                "degraded_entries": self.stats.degraded_entries,
+                "recoveries": self.stats.degraded_exits,
+            }
+
     # ---- internals --------------------------------------------------------
 
     def _pop_task(self, ignore_backoff: bool) -> Optional[_Task]:
@@ -238,30 +290,60 @@ class WritebackQueue:
             self._q.append(task)                 # still backing off
         return None
 
-    def _finalize(self, task: _Task, ok: bool, err: Optional[str]) -> None:
+    def _finalize(self, task: _Task, ok: bool,
+                  exc: Optional[BaseException] = None) -> None:
         truncate = None
         with self._lock:
             self._inflight -= 1
-            if ok or task.attempts > self.max_retries:
+            kind = None if ok else self.retry.classify(exc)
+            degraded = self._degraded_since is not None
+            # permanent = unretryable error class, or retry exhaustion
+            # OUTSIDE an outage; during DEGRADED_WRITEBACK transient
+            # failures never burn the budget (the outage is not this
+            # write's fault)
+            permanent = (not ok) and (
+                kind == RetryPolicy.PERMANENT
+                or (not degraded and task.attempts > self.max_retries))
+            if ok or permanent:
                 if ok:
                     self.stats.persisted += 1
                     # journal truncation on persistence; a PERMANENT
                     # failure keeps its record so a restart retries it
                     truncate = task.seq
+                    self._consec_errors = 0
+                    if degraded:                  # COS healed: auto-exit
+                        self._degraded_since = None
+                        self.stats.degraded_exits += 1
                 else:
                     self.stats.failures += 1
-                    self._errors.append(f"{task.key}: {err}")
+                    self._errors.append(f"{task.key}: {exc!r}")
                     if len(self._errors) > 64:
                         del self._errors[:-64]
+                    self._failed_keys.append(task.key)
+                    if len(self._failed_keys) > 64:
+                        del self._failed_keys[:-64]
                 # drop from pending only if no NEWER write superseded it
                 if self._pending.get(task.key) is task.data:
                     self._pending.pop(task.key, None)
                 done = task.on_done
             else:
                 self.stats.retries += 1
-                task.not_before = time.monotonic() + min(
-                    self.backoff_base_s * (2 ** (task.attempts - 1)),
-                    self.backoff_cap_s)
+                if kind == RetryPolicy.THROTTLE:
+                    self.stats.throttled += 1
+                self._consec_errors += 1
+                if not degraded \
+                        and self._consec_errors >= self.degraded_after:
+                    self._degraded_since = time.monotonic()
+                    self.stats.degraded_entries += 1
+                    degraded = True
+                if degraded:
+                    # ride out the outage: reset the retry budget and
+                    # probe COS at the backoff cap
+                    task.attempts = 0
+                    task.not_before = time.monotonic() + self.backoff_cap_s
+                else:
+                    task.not_before = time.monotonic() \
+                        + self.retry.delay(task.attempts, kind)
                 self._q.append(task)
                 # wake the writer: it may be in an untimed wait (empty
                 # queue) while this retry was produced by a drain() on
@@ -295,10 +377,12 @@ class WritebackQueue:
             return
         task.attempts += 1
         try:
+            if self.faults is not None:
+                self.faults.fire("writeback.persist", task.key)
             self.cos.put(task.key, task.data)
-            self._finalize(task, True, None)
+            self._finalize(task, True)
         except Exception as e:                   # noqa: BLE001
-            self._finalize(task, False, repr(e))
+            self._finalize(task, False, e)
 
     def _drain_some(self, max_items: int, ignore_backoff: bool) -> int:
         n = 0

@@ -191,3 +191,58 @@ def test_was_dead_invoke_counts_as_detection():
     before = st.recovery.stats.detections
     st._invoke(fid, 0, "request")
     assert st.recovery.stats.detections == before + 1
+
+
+def test_parallel_recovery_races_live_puts_and_gets():
+    """`recover_parallel` restoring a failed instance while live clients
+    keep mutating and reading THE SAME keys: no exception escapes, no
+    stale resurrection (every key reads back as one of its acked
+    payloads, and keys overwritten during recovery read back NEW)."""
+    import threading
+
+    st = big_store(num_recovery=4)
+    rng = np.random.default_rng(11)
+    keys = [f"race{i}" for i in range(24)]
+    v1 = {k: rng.bytes(20_000) for k in keys}
+    for k, v in v1.items():
+        st.put(k, v)
+    st.flush_writeback()
+    fid = st.chunk_map[f"{keys[0]}|1/f0#0"]
+    assert len(st.sms.get(fid).storage) > st.cfg.num_recovery_functions
+    st.inject_failure(fid)
+
+    v2 = {k: rng.bytes(20_000) for k in keys[:12]}   # overwritten mid-
+    errors = []                                      # recovery
+
+    def mutator():
+        try:
+            for k, v in v2.items():
+                assert st.put(k, v) == 2
+        except BaseException as e:                   # noqa: BLE001
+            errors.append(e)
+
+    def reader():
+        try:
+            for _ in range(3):
+                for k in keys:
+                    got = st.get(k)
+                    assert got in (v1[k], v2.get(k)), k
+        except BaseException as e:                   # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=mutator)] + \
+        [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    # the recovery session races the mutations: the GET detects the
+    # dead instance and runs parallel recovery inline
+    assert st.get(keys[0]) in (v1[keys[0]], v2[keys[0]])
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert st.recovery.stats.parallel_recoveries >= 1
+    # settled state: overwrites won, untouched keys were fully restored
+    for k in keys:
+        expect = v2.get(k, v1[k])
+        assert st.get(k) == expect, f"lost or resurrected {k}"
+    st.close()

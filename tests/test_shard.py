@@ -481,9 +481,12 @@ def test_get_during_2pc_window_serves_previous_version_fast():
         st.close()
 
 
-def test_commit_failure_aborts_unfinalized_heads():
-    """A commit-side failure must finalize the batch's heads as failed
-    — a PENDING head left behind would block that key forever."""
+def test_commit_failure_rolls_forward_via_resolver():
+    """A commit-side failure AFTER the leader's decision is durable
+    leaves the shard in doubt (never half-aborted): reads still resolve
+    fast (the PENDING head is skipped, the previous version serves),
+    and the next resolve_indoubt sweep — here via gc_tick — retries the
+    idempotent commit so the batch converges to fully-committed."""
     st = make_sharded(4)
     rng = np.random.default_rng(8)
     pre = {f"cf{i}": rng.bytes(6_000) for i in range(12)}
@@ -499,13 +502,20 @@ def test_commit_failure_aborts_unfinalized_heads():
         with pytest.raises(RuntimeError, match="injected commit failure"):
             st.put_many(new)
         del st.shards[victim]._put_many_commit
-        # no head is stuck PENDING: reads resolve fast, retries commit.
-        # (shards whose commit already ran serve the new value — the
-        # in-doubt 2PC window; the failed shard aborted to the old one)
+        # in doubt, not stuck: reads resolve fast — committed shards
+        # serve the new value, the in-doubt shard its previous one
         for k in pre:
             assert st.get(k) in (pre[k], new[k])
+        assert st.indoubt_tickets()                # the batch is in doubt
+        # the sweep rolls the in-doubt sub-batch FORWARD (the decision
+        # was durable), so the un-acked batch converges to committed
+        resolved = st.resolve_indoubt()
+        assert "commit" in resolved.values()
+        assert st.indoubt_tickets() == []
+        for k in pre:
+            assert st.get(k) == new[k]
         out = st.put_many({k: rng.bytes(6_000) for k in pre})
-        assert all(v > 1 for v in out.values())
+        assert all(v == 3 for v in out.values())
     finally:
         st.close()
 

@@ -1,0 +1,249 @@
+"""2PC in-doubt closure (`repro.core.shard` + `repro.core.store`):
+durable prepare records, the leader's durable commit decision, and the
+`resolve_indoubt` sweep that rolls every interrupted cross-shard batch
+forward (decision durable) or back (presumed abort) — under injected
+leader deaths, lost commit submissions, and full-store crashes."""
+import numpy as np
+import pytest
+
+from repro.core import (Clock, FaultPlan, FaultPoint, InjectedCrash,
+                        ShardedStore, StoreConfig, TransientCOSError)
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+
+MB = 1024 * 1024
+
+
+def make_sharded(num_shards=2, *, spill_dir=None, cos_root=None,
+                 faults=None, seed=0, **kw):
+    cfg = StoreConfig(ec=ECConfig(k=4, p=2),
+                      function_capacity=8 * MB,
+                      fragment_bytes=1 * MB,
+                      gc=GCConfig(gc_interval=1e9),
+                      num_recovery_functions=4,
+                      spill_dir=spill_dir, faults=faults, **kw)
+    return ShardedStore(cfg, num_shards=num_shards, clock=Clock(),
+                        cos_root=cos_root, seed=seed)
+
+
+def cross_shard_batch(st, n_per_shard=2, tag="b", rng=None):
+    """A batch with >= n_per_shard keys on EVERY shard (so put_many
+    takes the leader-sequenced two-round path)."""
+    rng = rng or np.random.default_rng(0)
+    per = {sid: 0 for sid in range(st.num_shards)}
+    out = {}
+    i = 0
+    while any(c < n_per_shard for c in per.values()):
+        k = f"{tag}{i}"
+        i += 1
+        sid = st.router.shard_of(k)
+        if per[sid] >= n_per_shard:
+            continue
+        per[sid] += 1
+        out[k] = rng.bytes(12_000)
+    return out
+
+
+def test_leader_death_after_decision_rolls_forward(tmp_path):
+    plan = FaultPlan(seed=1).add(
+        FaultPoint(site="shard.leader_death", action="crash", hits=(2,)))
+    st = make_sharded(2, spill_dir=str(tmp_path / "spill"), faults=plan)
+    try:
+        rng = np.random.default_rng(1)
+        pre = cross_shard_batch(st, tag="k", rng=rng)
+        assert all(v == 1 for v in st.put_many(pre).values())
+        new = {k: rng.bytes(12_000) for k in pre}
+        with pytest.raises(InjectedCrash):
+            st.put_many(new)                   # dies between the rounds
+        # the batch is in doubt on every shard: new versions stay
+        # PENDING, readers keep the old values — never half-visible
+        tickets = st.indoubt_tickets()
+        assert tickets
+        for k, v in pre.items():
+            assert st.get(k) == v
+        # the sweep finds the durable decision and rolls ALL forward
+        resolved = st.resolve_indoubt()
+        assert set(resolved.values()) == {"commit"}
+        assert st.indoubt_tickets() == []
+        for k, v in new.items():
+            assert st.get(k) == v, f"in-doubt key {k} not rolled forward"
+        # decision records retired once every participant resolved
+        assert st._decisions == {}
+        # and the keyspace is fully writable again
+        assert all(v == 3 for v in st.put_many(
+            {k: b"x" * 9_000 for k in pre}).values())
+    finally:
+        st.close()
+
+
+def test_commit_submission_failure_swept_forward():
+    # journal-less store: decisions fall back to COS stubs
+    plan = FaultPlan(seed=2).add(
+        FaultPoint(site="shard.commit_submit", action="transient",
+                   hits=(3,)))      # hits 1-2: the baseline batch
+    st = make_sharded(2, faults=plan)
+    try:
+        rng = np.random.default_rng(2)
+        pre = cross_shard_batch(st, tag="c", rng=rng)
+        assert all(v == 1 for v in st.put_many(pre).values())
+        new = {k: rng.bytes(12_000) for k in pre}
+        with pytest.raises(TransientCOSError):
+            st.put_many(new)                   # one submission lost
+        assert st.indoubt_tickets()
+        # gc_tick doubles as the in-doubt retry point
+        st.gc_tick()
+        assert st.indoubt_tickets() == []
+        for k, v in new.items():
+            assert st.get(k) == v
+    finally:
+        st.close()
+
+
+def test_leader_death_before_decision_presumed_abort(tmp_path):
+    plan = FaultPlan(seed=3).add(
+        FaultPoint(site="shard.decision", action="crash", hits=(2,)))
+    st = make_sharded(2, spill_dir=str(tmp_path / "spill"), faults=plan)
+    try:
+        rng = np.random.default_rng(3)
+        pre = cross_shard_batch(st, tag="a", rng=rng)
+        assert all(v == 1 for v in st.put_many(pre).values())
+        new = {k: rng.bytes(12_000) for k in pre}
+        with pytest.raises(InjectedCrash):
+            st.put_many(new)                   # dies BEFORE the decision
+        # no decision was ever durable: the live path aborted everywhere
+        assert st.indoubt_tickets() == []
+        assert st._decisions == {}
+        for k, v in pre.items():
+            assert st.get(k) == v              # batch fully invisible
+        # no PENDING residue: the retry commits everywhere
+        assert all(v >= 2 for v in st.put_many(new).values())
+        for k, v in new.items():
+            assert st.get(k) == v
+    finally:
+        st.close()
+
+
+def test_full_crash_after_decision_restart_rolls_forward(tmp_path):
+    spill = str(tmp_path / "spill")
+    cosr = str(tmp_path / "cos")
+    plan = FaultPlan(seed=4).add(
+        FaultPoint(site="shard.leader_death", action="crash", hits=(2,)))
+    st = make_sharded(2, spill_dir=spill, cos_root=cosr, faults=plan)
+    rng = np.random.default_rng(4)
+    pre = cross_shard_batch(st, tag="r", rng=rng)
+    assert all(v == 1 for v in st.put_many(pre).values())
+    new = {k: rng.bytes(12_000) for k in pre}
+    with pytest.raises(InjectedCrash):
+        st.put_many(new)
+    assert st.indoubt_tickets()
+    st.simulate_crash()                        # whole store dies in doubt
+    # a rebuilt store replays the leader decision journal + every
+    # shard's prepared/<ticket> records and resolves at construction
+    st2 = make_sharded(2, spill_dir=spill, cos_root=cosr)
+    try:
+        assert st2.indoubt_tickets() == []
+        for k, v in new.items():
+            assert st2.get(k) == v, f"acked decision lost for {k}"
+        assert st2.flush_writeback(timeout=120.0)
+    finally:
+        st2.close()
+
+
+def test_full_crash_before_decision_restart_presumed_abort(tmp_path):
+    spill = str(tmp_path / "spill")
+    cosr = str(tmp_path / "cos")
+    st = make_sharded(2, spill_dir=spill, cos_root=cosr)
+    rng = np.random.default_rng(5)
+    pre = cross_shard_batch(st, tag="p", rng=rng)
+    assert all(v == 1 for v in st.put_many(pre).values())
+    # prepare a ticketed sub-batch directly on one shard (the leader
+    # never records a decision — exactly a leader death mid-prepare)
+    sub = [(k, b"n" * 9_000) for k in pre
+           if st.router.shard_of(k) == 0][:2]
+    prep = st.shards[0].prepare_put_many_async(sub, ticket=901).result()
+    assert prep is not None
+    assert 901 in st.shards[0].indoubt_tickets()
+    st.simulate_crash()
+    st2 = make_sharded(2, spill_dir=spill, cos_root=cosr)
+    try:
+        # no decision record anywhere: presumed abort on restart
+        assert st2.indoubt_tickets() == []
+        for k, v in pre.items():
+            assert st2.get(k) == v, f"aborted batch leaked into {k}"
+        # the abandoned ticket left no PENDING head: same keys writable
+        out = st2.put_many({k: b"w" * 9_000 for k, _ in sub})
+        assert all(v >= 2 for v in out.values())
+    finally:
+        st2.close()
+
+
+def test_ticket_sequence_reseeded_past_replayed_state(tmp_path):
+    spill = str(tmp_path / "spill")
+    cosr = str(tmp_path / "cos")
+    st = make_sharded(2, spill_dir=spill, cos_root=cosr)
+    rng = np.random.default_rng(6)
+    pre = cross_shard_batch(st, tag="t", rng=rng)
+    st.put_many(pre)
+    prep = st.shards[0].prepare_put_many_async(
+        [(next(iter(pre)), b"z" * 9_000)], ticket=500).result()
+    assert prep is not None
+    st.simulate_crash()
+    st2 = make_sharded(2, spill_dir=spill, cos_root=cosr)
+    try:
+        # reusing ticket 500 would supersede a live prepared/<t> record
+        # mid-doubt: the rebuilt sequence must start past it
+        assert next(st2._tickets) > 500
+    finally:
+        st2.close()
+
+
+def test_chaos_schedule_reproducible_and_zero_acked_loss(tmp_path):
+    """Two runs of the same seeded chaos schedule produce byte-identical
+    fault logs, and every acked write stays readable through slab kills,
+    COS blips, a lost commit submission, and a full restart."""
+
+    def run(tag):
+        spill = str(tmp_path / f"spill-{tag}")
+        cosr = str(tmp_path / f"cos-{tag}")
+        plan = FaultPlan(seed=77, points=(
+            FaultPoint(site="sms.store", action="reclaim", prob=0.04),
+            FaultPoint(site="cos.get", action="transient", prob=0.10,
+                       times=6),
+            FaultPoint(site="shard.commit_submit", action="transient",
+                       hits=(3,)),   # batch 2's first submission
+        ))
+        # serial read path + recovery off: every fire() comes from one
+        # deterministic call sequence, so the LOG ORDER is comparable
+        st = make_sharded(2, spill_dir=spill, cos_root=cosr,
+                          faults=plan, pipelined_get=False,
+                          enable_recovery=False)
+        rng = np.random.default_rng(77)
+        acked = {}
+        for i in range(20):
+            k = f"s{i}"
+            acked[k] = rng.bytes(15_000)
+            assert st.put(k, acked[k]) == 1
+        batch = cross_shard_batch(st, tag="x", rng=rng)
+        st.put_many(batch)                     # batch 1 commits clean
+        acked.update(batch)
+        batch2 = {k: rng.bytes(12_000) for k in batch}
+        try:
+            st.put_many(batch2)                # batch 2 loses a commit
+        except TransientCOSError:
+            st.resolve_indoubt()               # ...and is swept forward
+        acked.update(batch2)
+        for k, v in acked.items():
+            assert st.get(k) == v, f"acked write {k} lost pre-crash"
+        st.simulate_crash()
+        st2 = make_sharded(2, spill_dir=spill, cos_root=cosr)
+        try:
+            assert st2.indoubt_tickets() == []
+            for k, v in acked.items():
+                assert st2.get(k) == v, f"acked write {k} lost at restart"
+        finally:
+            st2.close()
+        return plan.snapshot()
+
+    a, b = run("a"), run("b")
+    assert a["fired"] > 0                      # the chaos was real
+    assert a["log"] == b["log"]                # byte-identical schedule
