@@ -14,6 +14,9 @@ from repro.core.faults import (COSThrottleError, FaultPlan,  # noqa: F401
                                TransientCOSError)
 from repro.core.gc_window import (BucketState, GCConfig,  # noqa: F401
                                   SlidingWindow)
+from repro.core.host import (ProcessShardedStore,  # noqa: F401
+                             ShardWorkerDied)
+from repro.core.ipc import ArenaBroken, ShmArena  # noqa: F401
 from repro.core.insertion_log import InsertionLog, PutRecord  # noqa: F401
 from repro.core.payload import (Payload, as_u8,  # noqa: F401
                                 payload_nbytes, to_bytes)

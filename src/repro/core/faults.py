@@ -223,6 +223,35 @@ class FaultPlan:
             raise maker(site, hit)
         return action                        # advisory: reclaim | torn
 
+    # -- pickling (multi-process shard host) --------------------------------
+    #
+    # A plan crosses into worker processes at spawn (StoreConfig.faults
+    # inside the worker spec). Each process then owns an INDEPENDENT
+    # copy: per-site hit counters restart from the serialized position
+    # and advance with that process's own call sequence, so every
+    # worker's schedule is deterministic in its own op stream (the only
+    # coherent semantics without cross-process counter contention).
+    # Leader sites (shard.decision / shard.leader_death /
+    # shard.commit_submit) keep firing on the parent's copy.
+
+    def __getstate__(self):
+        with self._lock:
+            state = dict(self.__dict__)
+            # snapshot mutable containers under the lock: other threads
+            # may append to `log` while pickle walks the object graph
+            state["log"] = list(self.log)
+            state["_sites"] = {s: list(ps)
+                               for s, ps in self._sites.items()}
+            state["_hits"] = dict(self._hits)  # count objects pickle
+        del state["_lock"]
+        state["_sleep"] = None                 # may be a test lambda
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+        self._sleep = time.sleep
+
     # -- introspection ------------------------------------------------------
 
     def fired(self, site: Optional[str] = None) -> int:

@@ -512,16 +512,23 @@ class ShardedStore:
             else list(items)
         if len({k for k, _ in items}) != len(items):
             raise ValueError("duplicate keys in put_many batch")
-        # snapshot mutable payloads NOW (the caller may reuse buffers
-        # the moment this returns) — shards then see stable copies
-        items = [(k, InfiniStore._snapshot_value(v)) for k, v in items]
         groups: Dict[int, List] = {}
         for k, v in items:
             groups.setdefault(self.router.shard_of(k), []).append((k, v))
         if len(groups) == 1:
+            # single-shard fast path: the shard's own put_many_async
+            # captures payloads at submission (snapshot copy in-process,
+            # arena copy over IPC) — snapshotting here too would be a
+            # second full memcpy of the batch
             sid = next(iter(groups))
             return self.shards[sid].put_many_async(
                 groups[sid], raise_on_conflict=raise_on_conflict)
+        # cross-shard: the leader thread touches payloads AFTER this
+        # returns, so mutable buffers must be snapshotted NOW — the
+        # caller may reuse them the moment this returns
+        groups = {sid: [(k, InfiniStore._snapshot_value(v))
+                        for k, v in sub]
+                  for sid, sub in groups.items()}
         fut = StoreFuture()
         self._leader.submit(self._cross_shard_put, groups,
                             raise_on_conflict, fut)
@@ -662,11 +669,11 @@ class ShardedStore:
     def pause_writeback(self) -> None:
         """Hold every shard's COS writes in-queue (tests/benchmarks)."""
         for s in self.shards:
-            s.writeback.pause()
+            s.pause_writeback()
 
     def resume_writeback(self) -> None:
         for s in self.shards:
-            s.writeback.resume()
+            s.resume_writeback()
 
     def cos_keys(self, prefix: str = "") -> List[str]:
         keys = set()
@@ -688,9 +695,9 @@ class ShardedStore:
         counters (see StoreStats). The sums are seeded directly — the
         aggregate is a fresh snapshot object, not a live multi-writer
         counter, so no atomic increments are needed."""
+        snaps = self.stats_per_shard()      # ONE snapshot per shard
         return StoreStats(**{
-            f: sum(getattr(s.stats, f) for s in self.shards)
-            for f in _STAT_FIELDS})
+            f: sum(snap[f] for snap in snaps) for f in _STAT_FIELDS})
 
     def stats_per_shard(self) -> List[Dict[str, int]]:
         return [s.stats.as_dict() for s in self.shards]
@@ -698,11 +705,7 @@ class ShardedStore:
     def shard_balance(self) -> List[int]:
         """Distinct object keys (metadata heads) per shard — the
         router-quality histogram."""
-        out = []
-        for s in self.shards:
-            snap = s.mt.snapshot()
-            out.append(sum(1 for k in snap if "|" not in k))
-        return out
+        return [s.balance_count() for s in self.shards]
 
     def tickets_issued(self) -> int:
         """Cross-shard commit tickets handed out so far."""
@@ -712,7 +715,7 @@ class ShardedStore:
         """Summed cost breakdown across shards."""
         out: Dict[str, float] = {}
         for s in self.shards:
-            for k, v in s.ledger.dollars().items():
+            for k, v in s.ledger_dollars().items():
                 out[k] = out.get(k, 0.0) + v
         return out
 
@@ -729,8 +732,10 @@ class ShardedStore:
                 "balance": self.shard_balance(),
                 "commit_tickets_issued": self.tickets_issued(),
                 "health": {
-                    # degraded if ANY shard's writeback is degraded
-                    "state": "DEGRADED_WRITEBACK"
+                    # a dead shard dominates; else degraded if ANY
+                    # shard's writeback is degraded
+                    "state": "SHARD_DOWN" if "SHARD_DOWN" in states
+                    else "DEGRADED_WRITEBACK"
                     if "DEGRADED_WRITEBACK" in states else "OK",
                     "shard_states": sorted(states),
                     "indoubt_tickets": self.indoubt_tickets(),

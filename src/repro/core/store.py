@@ -545,6 +545,24 @@ class InfiniStore:
                     h["state"], h["depth"], h["consecutive_errors"])
         return ok
 
+    def pause_writeback(self) -> None:
+        """Hold COS writes in-queue (tests/benchmarks). Part of the
+        shard surface: front-ends (in-process or over IPC) call this
+        instead of reaching into `self.writeback`."""
+        self.writeback.pause()
+
+    def resume_writeback(self) -> None:
+        self.writeback.resume()
+
+    def balance_count(self) -> int:
+        """Distinct object keys (metadata heads) this store serves —
+        one bar of the router-quality histogram."""
+        snap = self.mt.snapshot()
+        return sum(1 for k in snap if "|" not in k)
+
+    def ledger_dollars(self) -> Dict[str, float]:
+        return self.ledger.dollars()
+
     def close(self, *, flush: bool = True) -> bool:
         """Release the store's threads: drain the client-daemon executor
         FIRST (in-flight PUTs may still enqueue writebacks), then flush +
@@ -808,8 +826,14 @@ class InfiniStore:
         """Tickets of prepared-uncommitted batches this store knows
         about: live registrations plus journal-replayed ones. The
         cross-shard resolver sweeps these after any shard restart."""
+        return self.indoubt_tickets_async().result()
+
+    def indoubt_tickets_async(self) -> StoreFuture:
+        """Non-blocking `indoubt_tickets` — single-threaded callers
+        (the process-host worker loop) must not park behind the daemon
+        queue while earlier ops depend on them for progress."""
         return self._submit(lambda: sorted(
-            set(self._indoubt) | set(self._prepared_tickets))).result()
+            set(self._indoubt) | set(self._prepared_tickets)))
 
     def resolve_indoubt(self, ticket: int, *, commit: bool) -> StoreFuture:
         """Resolve one in-doubt prepared batch per the leader's durable
@@ -2343,4 +2367,11 @@ class InfiniStore:
 
 class ConcurrentPutError(RuntimeError):
     def __init__(self, key: str):
+        self.key = key
         super().__init__(f"concurrent PUT in flight for {key!r}; retry")
+
+    def __reduce__(self):
+        # crosses the worker->parent control pipe: rebuild from the key
+        # (the default Exception reduce would re-wrap the formatted
+        # message as a new key)
+        return (ConcurrentPutError, (self.key,))

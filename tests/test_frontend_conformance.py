@@ -1,0 +1,187 @@
+"""Shared `StoreFrontend` conformance suite, run against every
+front-end — `InfiniStore`, `ShardedStore` (threads), and
+`ProcessShardedStore` (worker processes) — so the three surfaces
+cannot drift: one parametrized fixture, one set of contract tests.
+
+Each test gets a FRESH store (crash/restart tests mutate liveness);
+the process store spawns real workers, so the per-test cost is a few
+hundred ms — the suite keeps batches small."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Clock, ConcurrentPutError, InfiniStore,
+                        ProcessShardedStore, ShardedStore, StoreConfig,
+                        StoreFrontend)
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+from repro.core.writeback import StoreFuture
+
+MB = 1024 * 1024
+
+FRONTENDS = ("single", "sharded", "process")
+
+
+def _cfg(spill_dir=None):
+    return StoreConfig(ec=ECConfig(k=4, p=2), function_capacity=8 * MB,
+                       fragment_bytes=1 * MB,
+                       gc=GCConfig(gc_interval=1e9),
+                       num_recovery_functions=4, spill_dir=spill_dir)
+
+
+def _build(kind, tmp_path):
+    spill = str(tmp_path / f"spill-{kind}")
+    if kind == "single":
+        return InfiniStore(_cfg(spill), clock=Clock(), seed=0)
+    if kind == "sharded":
+        return ShardedStore(_cfg(spill), num_shards=2, clock=Clock(),
+                            seed=0)
+    if kind == "process":
+        return ProcessShardedStore(_cfg(spill), num_shards=2,
+                                   clock=Clock(), seed=0)
+    raise ValueError(kind)
+
+
+@pytest.fixture(params=FRONTENDS)
+def frontend(request, tmp_path):
+    st = _build(request.param, tmp_path)
+    yield st
+    st.close()
+
+
+def test_conforms_to_protocol(frontend):
+    assert isinstance(frontend, StoreFrontend)
+
+
+def test_put_get_roundtrip_and_versions(frontend):
+    rng = np.random.default_rng(0)
+    data = {f"k{i}": rng.bytes(9_000) for i in range(6)}
+    for k, v in data.items():
+        assert frontend.put(k, v) == 1
+    for k, v in data.items():
+        assert frontend.get(k) == v
+    # overwrite bumps the version; readers see the newest
+    assert frontend.put("k0", b"x" * 9_000) == 2
+    assert frontend.get("k0") == b"x" * 9_000
+    assert frontend.get("absent") is None
+
+
+def test_async_futures_resolve_with_versions(frontend):
+    fut = frontend.put_async("a", b"a" * 9_000)
+    assert isinstance(fut, StoreFuture)
+    assert fut.result() == 1
+    assert fut.version == 1
+    gf = frontend.get_async("a")
+    assert gf.result() == b"a" * 9_000
+
+
+def test_array_payloads_roundtrip(frontend):
+    arr = np.arange(40_000, dtype=np.uint8)
+    assert frontend.put("arr", arr) == 1
+    got = frontend.get_array("arr")
+    assert got is not None and got.dtype == np.uint8
+    assert np.array_equal(got, arr)
+    assert frontend.get_array("absent") is None
+    out = frontend.get_many_arrays(["arr", "absent"])
+    assert np.array_equal(out["arr"], arr) and out["absent"] is None
+
+
+def test_payload_captured_at_submission(frontend):
+    """The async contract: once put_async returns, the caller may
+    scribble over its buffer — the store must already own the bytes."""
+    buf = np.full(30_000, 7, dtype=np.uint8)
+    want = buf.tobytes()
+    fut = frontend.put_async("snap", buf)
+    buf[:] = 0                       # caller reuses the buffer
+    assert fut.result() == 1
+    assert frontend.get("snap") == want
+
+
+def test_put_many_get_many_batch(frontend):
+    rng = np.random.default_rng(1)
+    batch = {f"b{i}": rng.bytes(8_000) for i in range(8)}
+    out = frontend.put_many(batch)
+    assert set(out) == set(batch) and all(v == 1 for v in out.values())
+    got = frontend.get_many(list(batch) + ["nope"])
+    assert got["nope"] is None
+    assert all(got[k] == v for k, v in batch.items())
+
+
+def test_put_many_duplicate_keys_rejected(frontend):
+    with pytest.raises(ValueError):
+        frontend.put_many([("d", b"1" * 8_000), ("d", b"2" * 8_000)])
+
+
+def test_put_many_version_contract_on_rewrite(frontend):
+    """A batch rewriting an existing key bumps that key's version and
+    versions fresh keys at 1 — the per-key CAS contract holds at every
+    surface (ConcurrentPutError is the cross-surface conflict type;
+    see test_host for it crossing the process boundary)."""
+    frontend.put("c0", b"base" * 2_000)
+    out = frontend.put_many({"c0": b"n" * 8_000, "c1": b"n" * 8_000})
+    assert out["c0"] == 2 and out["c1"] == 1
+
+
+def test_flush_writeback_barrier_then_cos_visible(frontend):
+    rng = np.random.default_rng(2)
+    for i in range(4):
+        frontend.put(f"f{i}", rng.bytes(8_000))
+    assert frontend.flush_writeback(timeout=60.0) is True
+    # after the barrier, chunks are durable in COS under each key's
+    # namespace — cos_keys must surface them
+    keys = frontend.cos_keys()
+    assert any("f0" in k for k in keys)
+
+
+def test_gc_tick_safe_anytime(frontend):
+    frontend.put("g0", b"g" * 8_000)
+    frontend.gc_tick()
+    assert frontend.get("g0") == b"g" * 8_000
+
+
+def test_snapshot_metadata_health_surface(frontend):
+    frontend.put("h0", b"h" * 8_000)
+    snap = frontend.snapshot_metadata()
+    assert snap["health"]["state"] == "OK"
+    assert snap["health"]["indoubt_tickets"] == []
+    assert snap["stats"]["puts"] >= 1 if "stats" in snap else True
+
+
+def test_stats_counters_aggregate(frontend):
+    for i in range(3):
+        frontend.put(f"s{i}", b"s" * 8_000)
+        frontend.get(f"s{i}")
+    st = frontend.stats
+    assert st.puts >= 3 and st.gets >= 3
+
+
+def test_concurrent_clients_linearize_per_key(frontend):
+    """N threads hammering disjoint keys: every ack is version 1 and
+    every readback matches — across threads, shards, and processes."""
+    errs = []
+
+    def client(t):
+        rng = np.random.default_rng(t)
+        try:
+            for i in range(4):
+                k = f"t{t}-{i}"
+                v = rng.bytes(8_000)
+                assert frontend.put(k, v) == 1
+                assert frontend.get(k) == v
+        except Exception as e:                        # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs
+
+
+def test_close_idempotent_and_final(frontend):
+    frontend.put("z", b"z" * 8_000)
+    assert frontend.close() is True
+    assert frontend.close() is True  # second close is a no-op
