@@ -17,6 +17,15 @@ must pass with numbers, both asserted (CI fails on violation):
    cross-shard batch converges to fully-committed (its decision was
    durable), no ticket stays in doubt / no key stays PENDING, and the
    SAME SEED reproduces the byte-identical fault log twice.
+3. **Network chaos** — the same discipline over the TCP transport
+   (`ProcessShardedStore(transport="tcp")`): seeded `net.drop` /
+   `net.delay` / `net.dup` on the PUT stream, then a `net.partition`
+   that eats one shard's 2PC commit frame mid-batch; the heartbeat
+   detector declares the shard DOWN, reconnects at a new epoch, and
+   the in-doubt sweep rolls the ticket forward. Gates: zero acked-write
+   loss, zero stranded tickets, ZERO stale-epoch acks (the worker's
+   fencing counter), at least one duplicate frame deduped, the shard
+   back at a higher epoch, and the byte-identical fault log twice.
 
 Writes ``BENCH_faults.json`` at the repo root (the chaos gates are
 identical in --smoke; smoke only shrinks the overhead sampling).
@@ -40,8 +49,9 @@ if __package__ in (None, ""):                      # direct-script invocation
 
 import numpy as np
 
-from repro.core import (Clock, FaultPlan, FaultPoint, InfiniStore,
-                        InjectedCrash, ShardedStore, StoreConfig)
+from repro.core import (Clock, FaultPlan, FaultPoint, HeartbeatConfig,
+                        InfiniStore, InjectedCrash, ProcessShardedStore,
+                        ShardedStore, ShardWorkerDied, StoreConfig)
 from repro.core.ec import ECConfig
 from repro.core.gc_window import GCConfig
 
@@ -231,6 +241,143 @@ def chaos_soak(seed: int, workdir: str, n_keys: int) -> dict:
     return result
 
 
+# ---------------------------------------------------------------------------
+# gate 3: network chaos over the TCP transport
+# ---------------------------------------------------------------------------
+
+#: hot detector for the soak: the box is single-core, so sub-second
+#: death + fast reconnect keeps the partition round bounded
+_NET_HB = HeartbeatConfig(interval_s=0.05, suspect_after_s=0.15,
+                          dead_after_s=0.4, connect_timeout_s=5.0,
+                          rpc_deadline_s=1.5, reconnect_max_attempts=60,
+                          reconnect_backoff_base_s=0.05,
+                          reconnect_backoff_cap_s=0.2, partition_s=1.2)
+
+
+def _net_chaos_plan(seed: int) -> FaultPlan:
+    """Seeded network schedule. Every point carries a `match` filter,
+    so the nondeterministic heartbeat stream consumes no hit indices —
+    the log stays a pure function of the serial client call sequence."""
+    return FaultPlan(seed=seed, points=(
+        # one PUT frame silently lost (fails by rpc deadline; the retry
+        # lands at version 1 because the worker never saw it)
+        FaultPoint(site="net.drop", action="drop", hits=(2,),
+                   match="op:put:"),
+        # periodic injected latency on the PUT stream
+        FaultPoint(site="net.delay", action="delay", every=5,
+                   latency_s=0.01, match="op:put:"),
+        # one duplicated PUT frame (worker rid-dedupe must drop it)
+        FaultPoint(site="net.dup", action="dup", hits=(4,),
+                   match="op:put:"),
+        # partition eats shard 0's SECOND 2PC commit frame (the first
+        # cross-shard batch commits clean) and blackholes the link
+        FaultPoint(site="net.partition", action="partition", hits=(2,),
+                   match="op:commit2pc:s0"),
+    ))
+
+
+def _poll(pred, timeout, what):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"net chaos: timed out waiting for {what}")
+
+
+def net_chaos_soak(seed: int, workdir: str, n_keys: int) -> dict:
+    """One run of the seeded network schedule over TCP loopback."""
+    plan = _net_chaos_plan(seed)
+    cfg = _cfg(faults=plan, spill_dir=os.path.join(workdir, "spill"),
+               pipelined_get=False, enable_recovery=False)
+    st = ProcessShardedStore(cfg, num_shards=2, clock=Clock(),
+                             cos_root=os.path.join(workdir, "cos"),
+                             seed=seed, transport="tcp",
+                             heartbeat=_NET_HB)
+    rng = np.random.default_rng(seed)
+    acked = {}
+    t0 = time.perf_counter()
+    net_drops = 0
+    try:
+        # phase A: serial PUT stream through drop/delay/dup
+        for i in range(n_keys):
+            k = f"n{i}"
+            v = rng.bytes(12_000)
+            try:
+                st.put(k, v)
+            except ShardWorkerDied:
+                net_drops += 1       # frame lost: worker never saw it
+                assert st.put(k, v) == 1
+            acked[k] = v
+        # phase B: clean cross-shard batch (commit round 1 untouched)
+        b1 = _cross_shard_batch(st, "nx", rng)
+        assert all(v == 1 for v in st.put_many(b1).values())
+        acked.update(b1)
+        # phase C: the partition eats shard 0's commit frame mid-batch
+        b2 = {k: rng.bytes(12_000) for k in b1}
+        partitioned = False
+        try:
+            st.put_many(b2)
+        except Exception:                                 # noqa: BLE001
+            partitioned = True
+        assert partitioned, "schedule must strand the 2PC batch"
+        assert ("net.partition", 2, "partition") in plan.log
+        # phase D: reconnect at a new epoch, sweep rolls the ticket
+        # forward — acked writes intact, nothing stranded, no stale acks
+        _poll(lambda: st.shard_transport_health()[0]["state"]
+              == "CONNECTED"
+              and st.shard_transport_health()[0]["epoch"] >= 2,
+              timeout=30.0, what="shard 0 reconnect")
+
+        def settled():
+            if st.indoubt_tickets():
+                st.resolve_indoubt()
+                return False
+            got = st.get_many(list(b2))
+            return all(got[k] == v for k, v in b2.items())
+        _poll(settled, timeout=30.0, what="ticket roll-forward")
+        expected = dict(acked)
+        expected.update(b2)
+        lost = [k for k, v in expected.items() if st.get(k) != v]
+        stranded = st.indoubt_tickets()
+        xstats = [s.transport_stats() for s in st.shards]
+        health = st.shard_transport_health()
+        flushed = st.flush_writeback(timeout=600.0)
+    finally:
+        st.close()
+    elapsed = time.perf_counter() - t0
+    snap = plan.snapshot()
+    fired_by_site = {}
+    for site, _, _ in snap["log"]:
+        fired_by_site[site] = fired_by_site.get(site, 0) + 1
+    stale_acks = sum(x["stale_acks_suppressed"] for x in xstats)
+    dups_dropped = sum(x["dup_frames_dropped"] for x in xstats)
+    result = {
+        "seed": seed,
+        "acked_writes": len(acked),
+        "net_drops_retried": net_drops,
+        "faults_fired": snap["fired"],
+        "fired_by_site": fired_by_site,
+        "lost_acked_writes": len(lost),
+        "stranded_indoubt": len(stranded),
+        "stale_epoch_acks": stale_acks,
+        "dup_frames_dropped": dups_dropped,
+        "shard0_epoch": health[0]["epoch"],
+        "flushed": bool(flushed),
+        "elapsed_s": round(elapsed, 2),
+        "log": snap["log"],
+    }
+    assert not lost, f"acked writes lost to network chaos: {lost[:8]}"
+    assert not stranded, f"tickets stranded: {stranded}"
+    assert stale_acks == 0, f"stale-epoch acks delivered: {stale_acks}"
+    assert dups_dropped >= 1, "net.dup never exercised rid dedupe"
+    assert net_drops >= 1, "net.drop never cost an RPC"
+    assert health[0]["epoch"] >= 2, "partition never forced a new epoch"
+    assert fired_by_site.get("net.partition", 0) == 1
+    assert flushed
+    return result
+
+
 def run_bench(smoke: bool) -> dict:
     overhead = bench_overhead(256 * 1024, repeats=16 if smoke else 48)
     runs = []
@@ -243,13 +390,27 @@ def run_bench(smoke: bool) -> dict:
             shutil.rmtree(workdir, ignore_errors=True)
     reproducible = runs[0]["log"] == runs[1]["log"]
     assert reproducible, "same seed produced different fault sequences"
-    for r in runs:
+    net_runs = []
+    for tag in ("a", "b"):                    # same seed, twice
+        workdir = tempfile.mkdtemp(prefix=f"net-chaos-{tag}-")
+        try:
+            net_runs.append(net_chaos_soak(CHAOS_SEED, workdir,
+                                           n_keys=12 if smoke else 24))
+        finally:
+            shutil.rmtree(workdir, ignore_errors=True)
+    net_reproducible = net_runs[0]["log"] == net_runs[1]["log"]
+    assert net_reproducible, \
+        "same seed produced different network fault sequences"
+    for r in runs + net_runs:
         r["log"] = [list(e) for e in r["log"]]
     return {"bench": "fault_soak", "smoke": smoke,
             "overhead": overhead,
             "chaos": {"seed": CHAOS_SEED,
                       "reproducible_log": reproducible,
-                      "runs": runs}}
+                      "runs": runs},
+            "net_chaos": {"seed": CHAOS_SEED,
+                          "reproducible_log": net_reproducible,
+                          "runs": net_runs}}
 
 
 def _write(result: dict, path: str) -> None:
@@ -264,11 +425,16 @@ def run() -> list:
     _write(result, os.path.join(ROOT, "BENCH_faults.json"))
     ov = result["overhead"]
     r0 = result["chaos"]["runs"][0]
+    n0 = result["net_chaos"]["runs"][0]
     return [f"fault_plane_idle_overhead,{ov['overhead_pct']},"
             f"% of {ov['off_put_ack_ms']}ms PUT ack",
             f"chaos_soak,{r0['faults_fired']},"
             f"faults lost={r0['lost_acked_writes']} "
-            f"stranded={r0['stranded_indoubt_after_restart']}"]
+            f"stranded={r0['stranded_indoubt_after_restart']}",
+            f"net_chaos_soak,{n0['faults_fired']},"
+            f"faults lost={n0['lost_acked_writes']} "
+            f"stranded={n0['stranded_indoubt']} "
+            f"stale_acks={n0['stale_epoch_acks']}"]
 
 
 def main() -> None:
@@ -293,6 +459,16 @@ def main() -> None:
               f"{r['elapsed_s']}s")
     print(f"log reproducible across same-seed runs: "
           f"{result['chaos']['reproducible_log']}")
+    for i, r in enumerate(result["net_chaos"]["runs"]):
+        print(f"net chaos run {i} | {r['faults_fired']} faults "
+              f"{r['fired_by_site']} | acked {r['acked_writes']} "
+              f"lost {r['lost_acked_writes']} | drops retried "
+              f"{r['net_drops_retried']} dups dropped "
+              f"{r['dup_frames_dropped']} stale acks "
+              f"{r['stale_epoch_acks']} | shard0 epoch "
+              f"{r['shard0_epoch']} | {r['elapsed_s']}s")
+    print(f"net log reproducible across same-seed runs: "
+          f"{result['net_chaos']['reproducible_log']}")
     print(f"wrote {os.path.relpath(out)}")
 
 

@@ -32,5 +32,9 @@ python benchmarks/shard_scaleout.py --smoke
 # deterministic chaos soak: seeded fault schedule (COS errors/throttle,
 # slab kill, torn journal tail, 2PC leader death) + full restart must
 # lose zero acked writes, strand zero in-doubt tickets, and reproduce
-# the identical fault log twice; idle fault plane <= 2% PUT-ack overhead
+# the identical fault log twice; idle fault plane <= 2% PUT-ack overhead.
+# Also runs the network-chaos gate over the TCP transport: seeded
+# net.drop/delay/dup on the PUT stream plus a net.partition that eats a
+# 2PC commit frame — zero acked loss, zero stranded tickets, zero
+# stale-epoch acks, and the byte-identical net fault log twice
 python benchmarks/fault_soak.py --smoke

@@ -31,6 +31,9 @@ from repro.core.spill import SpillJournal, SpillStats  # noqa: F401
 from repro.core.store import (AtomicCounter,  # noqa: F401
                               ConcurrentPutError, InfiniStore,
                               StoreConfig, StoreFrontend, StoreStats)
+from repro.core.transport import (HeartbeatConfig,  # noqa: F401
+                                  LocalTransport, ShardTransport,
+                                  TcpTransport)
 from repro.core.versioning import (MetadataTable, Meta,  # noqa: F401
                                    PersistentBuffer)
 from repro.core.writeback import (StoreFuture,  # noqa: F401

@@ -20,6 +20,19 @@ through every layer that can fail in a real deployment —
     shard.leader_death      2PC leader  death AFTER the commit decision
                                         is durable, before round 2
     shard.commit_submit     2PC leader  per-shard commit submission loss
+    net.drop                transport   outbound frame silently lost
+    net.delay               transport   injected latency before the send
+    net.partition           transport   link blackholed both ways for
+                                        `hb.partition_s` (frames lost,
+                                        heartbeats fail, detector fires)
+    net.dup                 transport   frame transmitted twice (worker
+                                        rid-dedupe drops the replay)
+
+Network sites key on ``op:<opname>:s<shard>`` for data frames and
+``hb:s<shard>`` for heartbeat pings. A plan that targets data ops MUST
+set ``match="op:..."`` — `fire()` only consumes a hit index when some
+point's match passes, so unmatched heartbeat traffic never shifts a
+data-op schedule and same-seed runs stay byte-identical.
 
 Every decision is a pure function of ``(seed, site, hit_index)`` — no
 shared RNG stream — so the set of triggering hits is identical run to
@@ -118,7 +131,7 @@ _RAISING = {
         f"injected crash at {site} (hit {idx})"),
 }
 #: actions `fire()` RETURNS (the site interprets them in-line)
-_ADVISORY = ("reclaim", "torn")
+_ADVISORY = ("reclaim", "torn", "drop", "dup", "partition", "delay")
 
 
 @dataclass
@@ -221,7 +234,7 @@ class FaultPlan:
         maker = _RAISING.get(action)
         if maker is not None:
             raise maker(site, hit)
-        return action                        # advisory: reclaim | torn
+        return action            # advisory: reclaim|torn|drop|dup|...
 
     # -- pickling (multi-process shard host) --------------------------------
     #

@@ -34,6 +34,14 @@ process sentinel (`multiprocessing.connection.wait`), so a SIGKILLed
 worker fails its in-flight futures with `ShardWorkerDied` instead of
 hanging them, and the survivors keep serving.
 
+Both planes live behind `repro.core.transport.ShardTransport`: the
+pipe+arena path above is `LocalTransport` (the default, fastest on one
+box), and `transport="tcp"` swaps in `TcpTransport` + the
+`repro.core.netshard` worker — framed sockets with heartbeat failure
+detection, per-RPC deadlines, epoch-fenced reconnect, and
+deterministic `net.*` fault injection (the real InfiniStore's
+client<->proxy socket split, made partition-tolerant).
+
 Crash semantics become REAL here: `simulate_crash(shard=i)` sends
 SIGKILL, `restart_shard(i)` spawns a fresh worker whose `InfiniStore`
 constructor replays the shard's spill journal, and the inherited
@@ -52,7 +60,6 @@ from __future__ import annotations
 
 import atexit
 import dataclasses
-import itertools
 import logging
 import os
 import shutil
@@ -61,9 +68,9 @@ import tempfile
 import threading
 import time
 import weakref
+import itertools
 import multiprocessing as mp
 from concurrent.futures import ThreadPoolExecutor
-from multiprocessing import connection as mpc
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -73,6 +80,8 @@ from .ipc import ArenaBroken, ShmArena, desc_watermark, pack_payload, \
     unpack_payload
 from .shard import ShardedStore
 from .store import InfiniStore, StoreStats
+from .transport import (HeartbeatConfig, LocalTransport, ShardTransport,
+                        ShardWorkerDied, TcpTransport)
 from .writeback import StoreFuture
 
 __all__ = ["ProcessShardedStore", "ShardWorkerDied",
@@ -82,12 +91,6 @@ _LOG = logging.getLogger("repro.host")
 
 MB = 1024 * 1024
 DEFAULT_ARENA_BYTES = 64 * MB
-
-
-class ShardWorkerDied(ConnectionError):
-    """A shard's worker process died with RPCs outstanding (or a new
-    RPC was issued against a dead worker). The shard's durable state —
-    spill journal, COS root — is intact; `restart_shard` rebuilds it."""
 
 
 # ---------------------------------------------------------------------------
@@ -221,8 +224,14 @@ class _WorkerLoop:
             self._last_rel = wm
             self.send(("rel", 0, wm))
 
+    def _unpack(self, desc):
+        """Materialize one request payload descriptor. The shm loop
+        maps arena slots; `netshard._NetWorkerLoop` overrides this to
+        map frame-offset descriptors instead — dispatch is shared."""
+        return unpack_payload(self.req, desc)
+
     def _unpack_items(self, items_desc):
-        return [(k, unpack_payload(self.req, d)) for k, d in items_desc]
+        return [(k, self._unpack(d)) for k, d in items_desc]
 
     # -- replies -----------------------------------------------------------
 
@@ -287,7 +296,7 @@ class _WorkerLoop:
         store = self.store
         if op == "put":
             key, desc = p
-            fut = store.put_async(key, unpack_payload(self.req, desc))
+            fut = store.put_async(key, self._unpack(desc))
             self._consumed(desc_watermark([desc]))
             self._reply_done(rid, fut)
         elif op == "put_many":
@@ -365,30 +374,37 @@ class _WorkerLoop:
 # parent side: per-worker proxy with the InfiniStore shard surface
 # ---------------------------------------------------------------------------
 
+_USE_DEFAULT = object()              # _rpc deadline sentinel
+
+
 class _ShardProxy:
-    """Parent-side handle for one worker process, implementing the
-    slice of the `InfiniStore` surface that `ShardedStore` (and the
-    conformance suite) drives — every call becomes an RPC whose
-    payloads ride the shared-memory rings.
+    """Parent-side handle for one worker, implementing the slice of
+    the `InfiniStore` surface that `ShardedStore` (and the conformance
+    suite) drives — every call becomes an RPC over a `ShardTransport`
+    (pipe + shared-memory rings, or framed TCP with heartbeats and
+    epoch fencing; see `repro.core.transport`).
 
     Locking: `_order_lock` makes (pack payload -> assign rid -> send)
-    atomic, which pins ring order == pipe order (the worker's release
-    watermark depends on it). `_send_lock` alone guards raw sends so
-    the reader thread can ack response-ring consumption even while a
-    writer is parked in `alloc` waiting for request-ring space."""
+    atomic, which pins staging order == wire order (the shm worker's
+    release watermark and the TCP frame offsets both depend on it).
+    The transport delivers replies on its reader thread via
+    `_on_message`, failure via `_on_down`, recovery via
+    `_on_reconnect`, and a periodic `_on_tick` that expires per-RPC
+    deadlines."""
 
     def __init__(self, *, ctx, shard_id: int, cfg, cos_root: str,
                  seed: int, name: str, arena_bytes: int,
                  resources: "_HostResources",
                  boot_timeout_s: float,
-                 cos_latency: Optional[dict] = None) -> None:
+                 cos_latency: Optional[dict] = None,
+                 transport: str = "shm",
+                 heartbeat: Optional[HeartbeatConfig] = None,
+                 faults=None,
+                 on_reconnect=None) -> None:
         self.shard_id = shard_id
         self.name = name
         self.spill_dir = cfg.spill_dir
-        self._req = ShmArena.create(arena_bytes, tag=f"req{shard_id}")
-        self._resp = ShmArena.create(arena_bytes, tag=f"resp{shard_id}")
         self._order_lock = threading.Lock()
-        self._send_lock = threading.Lock()
         self._state_lock = threading.Lock()
         self._rids = itertools.count(1)
         self._inflight: Dict[int, tuple] = {}
@@ -397,81 +413,46 @@ class _ShardProxy:
         self._expected_death = False
         self._stats_cache = StoreStats()
         self._resources = resources
+        # WEAK ref: proxies are pinned by the module-global orphan
+        # registry; a bound-method callback would pin the whole store
+        # and defeat the abandoned-store finalizer
+        self._reconnect_cb = None if on_reconnect is None \
+            else weakref.WeakMethod(on_reconnect)
         self.pid: Optional[int] = None
-        parent_conn, child_conn = ctx.Pipe()
-        self._conn = parent_conn
         spec = {"cfg": cfg, "cos_root": cos_root, "seed": seed,
-                "name": name, "req_name": self._req.name,
-                "resp_name": self._resp.name,
-                "arena_bytes": arena_bytes, "conn": child_conn,
-                "cos_latency": dict(cos_latency or {})}
-        self._proc = ctx.Process(target=_worker_main, args=(spec,),
-                                 daemon=True,
-                                 name=f"infinistore-shard-{shard_id}")
+                "name": name, "cos_latency": dict(cos_latency or {})}
+        if transport == "tcp":
+            self._t: ShardTransport = TcpTransport(
+                shard_id=shard_id, ctx=ctx, spec=spec,
+                hb=heartbeat or HeartbeatConfig(),
+                boot_timeout_s=boot_timeout_s, faults=faults,
+                seed=seed + shard_id)
+        elif transport == "shm":
+            self._t = LocalTransport(
+                ctx=ctx, shard_id=shard_id, spec=spec,
+                arena_bytes=arena_bytes, boot_timeout_s=boot_timeout_s)
+        else:
+            raise ValueError(f"unknown shard transport {transport!r}")
         resources.register(self)
         try:
-            self._proc.start()
-            child_conn.close()
-            if not parent_conn.poll(boot_timeout_s):
-                raise ShardWorkerDied(
-                    f"shard {shard_id} worker failed to boot within "
-                    f"{boot_timeout_s}s")
-            try:
-                kind, _rid, val = parent_conn.recv()
-            except (EOFError, OSError) as e:
-                raise ShardWorkerDied(
-                    f"shard {shard_id} worker died during boot (spawn "
-                    "re-imports __main__: guard scripts with "
-                    "if __name__ == '__main__')") from e
-            if kind == "err":
-                raise val if isinstance(val, BaseException) \
-                    else ShardWorkerDied(str(val))
+            self.pid = self._t.start(on_message=self._on_message,
+                                     on_down=self._on_down,
+                                     on_reconnect=self._on_reconnect,
+                                     on_tick=self._on_tick)
         except BaseException:
             self.reap()
             raise
-        self.pid = val
         self._alive = True
-        self._reader = threading.Thread(
-            target=self._read_loop, daemon=True,
-            name=f"shard-host-rx-{shard_id}")
-        self._reader.start()
 
-    # -- reader thread -----------------------------------------------------
+    # -- transport callbacks -----------------------------------------------
 
-    def _read_loop(self) -> None:
-        conn, sentinel = self._conn, self._proc.sentinel
-        while True:
-            try:
-                ready = mpc.wait([conn, sentinel])
-            except OSError:
-                break
-            if conn in ready:
-                try:
-                    msg = conn.recv()
-                except (EOFError, OSError):
-                    break
-                self._handle(msg)
-            elif sentinel in ready:
-                # the process died: drain replies already buffered,
-                # then fail what's left
-                try:
-                    while conn.poll(0):
-                        self._handle(conn.recv())
-                except (EOFError, OSError):
-                    pass
-                break
-        self._mark_dead()
-
-    def _handle(self, msg) -> None:
+    def _on_message(self, msg) -> None:
         kind, rid, val = msg
-        if kind == "rel":
-            self._req.release_to(val)
-            return
         with self._state_lock:
             ent = self._inflight.pop(rid, None)
         if ent is None:
-            return
-        fut, post = ent
+            return                   # deadline-expired / failed at down
+        fut, post, _op, _dl = ent
         if kind == "err":
             fut.set_exception(val if isinstance(val, BaseException)
                               else RuntimeError(str(val)))
@@ -483,69 +464,94 @@ class _ShardProxy:
                 fut.set_exception(e)
                 return
             if wm:
-                self._send_release(wm)
+                self._t.ack_reply(wm)
             fut._resolve(v)
             return
         fut._resolve(post(val) if post is not None else val)
 
-    def _send_release(self, wm: int) -> None:
-        with self._send_lock:
-            try:
-                self._conn.send(("release", 0, wm))
-            except (OSError, ValueError, BrokenPipeError):
-                pass
-
-    def _mark_dead(self) -> None:
+    def _on_down(self, exc: BaseException) -> None:
         with self._state_lock:
             was_alive = self._alive
             self._alive = False
             pending = list(self._inflight.values())
             self._inflight.clear()
             quiet = self._closing or self._expected_death
-        exc = ShardWorkerDied(
-            f"shard {self.shard_id} worker (pid {self.pid}) died")
-        self._req.fail(exc)
-        self._resp.fail(exc)
-        for fut, _post in pending:
+        for fut, _post, _op, _dl in pending:
             if not fut.done():
                 fut.set_exception(exc)
         if was_alive and not quiet:
-            _LOG.warning("shard %d worker (pid %s) died with %d RPCs "
-                         "in flight", self.shard_id, self.pid,
-                         len(pending))
+            _LOG.warning("shard %d worker (pid %s) unreachable with "
+                         "%d RPCs in flight: %s", self.shard_id,
+                         self.pid, len(pending), exc)
+
+    def _on_reconnect(self, epoch: int) -> None:
+        with self._state_lock:
+            if self._closing:
+                return
+            self._alive = True
+        cb = None if self._reconnect_cb is None \
+            else self._reconnect_cb()
+        if cb is not None:
+            cb(self.shard_id, epoch)
+
+    def _on_tick(self) -> None:
+        """Expire per-RPC deadlines: a reply lost to a drop or a silent
+        partition fails fast instead of waiting for the detector."""
+        now = time.monotonic()
+        expired = []
+        with self._state_lock:
+            for rid, (fut, _post, op, dl) in list(self._inflight.items()):
+                if dl is not None and now > dl:
+                    expired.append((fut, op))
+                    del self._inflight[rid]
+        for fut, op in expired:
+            if not fut.done():
+                fut.set_exception(ShardWorkerDied(
+                    f"shard {self.shard_id} rpc {op!r} missed its "
+                    "reply deadline", shard_id=self.shard_id,
+                    epoch=self._t.epoch, op=op))
 
     # -- RPC plumbing ------------------------------------------------------
 
-    def _rpc(self, op: str, payload=None, *, pack=None,
-             post=None) -> StoreFuture:
+    def _rpc(self, op: str, payload=None, *, pack=None, post=None,
+             deadline_s=_USE_DEFAULT) -> StoreFuture:
         fut = StoreFuture()
         with self._order_lock:
-            if pack is not None:
-                try:
+            rid = None
+            try:
+                if pack is not None:
                     payload = pack()
-                except ArenaBroken as e:
-                    raise ShardWorkerDied(str(e)) from e
-            with self._state_lock:
-                if not self._alive:
-                    raise ShardWorkerDied(
-                        f"shard {self.shard_id} worker is down")
-                rid = next(self._rids)
-                self._inflight[rid] = (fut, post)
-            with self._send_lock:
-                try:
-                    self._conn.send((op, rid, payload))
-                except (OSError, ValueError, BrokenPipeError) as e:
+                with self._state_lock:
+                    if not self._alive:
+                        raise ShardWorkerDied(
+                            f"shard {self.shard_id} worker is down",
+                            shard_id=self.shard_id,
+                            epoch=self._t.epoch, op=op)
+                    rid = next(self._rids)
+                    dls = self._t.default_rpc_deadline() \
+                        if deadline_s is _USE_DEFAULT else deadline_s
+                    dl = None if dls is None \
+                        else time.monotonic() + dls
+                    self._inflight[rid] = (fut, post, op, dl)
+                self._t.send((op, rid, payload))
+            except BaseException as e:
+                # failed before the frame left: unstage its payloads
+                # (next frame's offsets must start clean) and unregister
+                self._t.discard_staged()
+                if rid is not None:
                     with self._state_lock:
                         self._inflight.pop(rid, None)
+                if isinstance(e, ArenaBroken):
                     raise ShardWorkerDied(
-                        f"shard {self.shard_id} worker pipe broken") \
-                        from e
+                        str(e), shard_id=self.shard_id,
+                        epoch=self._t.epoch, op=op) from e
+                raise
         return fut
 
     def _pack_items(self, items) -> List[tuple]:
         items = list(items.items()) if isinstance(items, dict) \
             else list(items)
-        return [(k, pack_payload(self._req, v)) for k, v in items]
+        return [(k, self._t.pack(v)) for k, v in items]
 
     def _post_value(self, as_array: bool):
         def post(desc):
@@ -558,7 +564,7 @@ class _ShardProxy:
                     return v, 0
                 return raw, 0
             _, pos, n = desc
-            view = self._resp.view(pos, n)
+            view = self._t.reply_view(pos, n)
             if as_array:
                 v = view.copy()
                 v.flags.writeable = False
@@ -583,7 +589,7 @@ class _ShardProxy:
 
     def put_async(self, key: str, value) -> StoreFuture:
         return self._rpc(
-            "put", pack=lambda: (key, pack_payload(self._req, value)))
+            "put", pack=lambda: (key, self._t.pack(value)))
 
     def put(self, key: str, value) -> int:
         return self.put_async(key, value).result()
@@ -640,7 +646,8 @@ class _ShardProxy:
         return self.get_many_arrays_async(keys).result()
 
     def flush_async(self, timeout: Optional[float] = None) -> StoreFuture:
-        return self._rpc("flush", timeout)
+        # barrier op: legitimately outlives any per-RPC deadline
+        return self._rpc("flush", timeout, deadline_s=None)
 
     def flush_writeback(self, timeout: Optional[float] = None) -> bool:
         try:
@@ -650,7 +657,7 @@ class _ShardProxy:
 
     def gc_tick(self) -> None:
         try:
-            self._rpc("gc").result()
+            self._rpc("gc", deadline_s=None).result()
         except ConnectionError:
             pass                     # dead shard: restart_shard re-GCs
 
@@ -701,13 +708,31 @@ class _ShardProxy:
 
     def snapshot_metadata(self):
         try:
-            return self._rpc("snapshot").result()
+            snap = self._rpc("snapshot").result()
         except ConnectionError:
+            # DOWN here covers heartbeat timeout and partition, not
+            # only process death: the transport refuses the RPC the
+            # moment the detector declares the worker unreachable
             return {"mt": {}, "chunk_map": {},
                     "health": {"state": "SHARD_DOWN",
                                "indoubt_tickets": [],
-                               "writeback": None, "spill_pending": 0},
+                               "writeback": None, "spill_pending": 0,
+                               "transport": self._t.health()},
                     "shard_down": True}
+        snap["health"]["transport"] = self._t.health()
+        return snap
+
+    def transport_health(self) -> dict:
+        """Per-shard transport state: CONNECTED/SUSPECT/DOWN/
+        RECONNECTING, current epoch, last-heartbeat age."""
+        return self._t.health()
+
+    def transport_stats(self) -> dict:
+        """Worker-side fencing counters (TCP only): fenced connects,
+        stale acks suppressed, duplicate frames dropped."""
+        if self._t.kind != "tcp":
+            return {}
+        return self._rpc("xstats").result()
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -717,22 +742,26 @@ class _ShardProxy:
 
     def simulate_crash(self) -> Optional[str]:
         """REAL kill: SIGKILL the worker mid-flight. Journal segments
-        (and the shared COS root) survive on disk for restart_shard."""
+        (and the shared COS root) survive on disk for restart_shard.
+        Reconnect is suppressed FIRST — a TCP transport must not burn
+        its attempt budget dialing a corpse."""
         with self._state_lock:
             self._expected_death = True
+        self._t.suppress_reconnect()
         if self.pid is not None:
             try:
                 os.kill(self.pid, signal.SIGKILL)
             except (ProcessLookupError, PermissionError):
                 pass
-        self._proc.join(timeout=30.0)
+        self._t.join(timeout=30.0)
         return self.spill_dir
 
     def request_close(self, flush: bool) -> Optional[StoreFuture]:
         with self._state_lock:
             self._closing = True
+        self._t.suppress_reconnect()
         try:
-            return self._rpc("close", flush)
+            return self._rpc("close", flush, deadline_s=None)
         except ShardWorkerDied:
             return None
 
@@ -754,45 +783,16 @@ class _ShardProxy:
 
     def reap(self, deadline: Optional[float] = None) -> None:
         """Tear down the worker and every parent-side transport
-        resource: escalating join -> terminate -> kill, then close the
-        pipe and unlink both /dev/shm segments. Idempotent; safe from
-        finalizers and atexit."""
+        resource (pipe + /dev/shm segments, or socket + heartbeat
+        threads): escalating join -> terminate -> kill inside the
+        transport. Idempotent; safe from finalizers and atexit."""
         with self._state_lock:
             self._closing = True
-        # tell the worker to exit BEFORE closing the pipe: recv-EOF
-        # delivery is not reliable on this transport, so a healthy
-        # worker leaves on the explicit "bye" and the join below
-        # returns immediately instead of burning the budget
-        try:
-            with self._send_lock:
-                self._conn.send(("bye", 0, None))
-        except (OSError, ValueError, BrokenPipeError):
-            pass                     # worker already gone
-        try:
-            self._conn.close()
-        except OSError:
-            pass
-        proc = self._proc
-        try:
-            if proc.is_alive():
-                budget = 10.0 if deadline is None \
-                    else max(0.5, deadline - time.monotonic())
-                proc.join(timeout=budget)
-                if proc.is_alive():
-                    proc.terminate()
-                    proc.join(timeout=5.0)
-                if proc.is_alive():                   # pragma: no cover
-                    proc.kill()
-                    proc.join(timeout=5.0)
-        except (ValueError, OSError):
-            pass                     # never started / already reaped
-        self._mark_dead()            # fail any straggler futures
-        for arena in (self._req, self._resp):
-            arena.close()            # owner: close + unlink
-        try:
-            proc.close()
-        except (ValueError, AttributeError):
-            pass
+        self._t.reap(deadline=deadline)
+        # fail any straggler futures (idempotent if _on_down already ran)
+        self._on_down(ShardWorkerDied(
+            f"shard {self.shard_id} worker reaped",
+            shard_id=self.shard_id, epoch=self._t.epoch, op="reap"))
         self._resources.unregister(self)
 
 
@@ -869,7 +869,8 @@ def _host_context(method: Optional[str] = None):
         if _CTX is None:
             try:
                 ctx = mp.get_context("forkserver")
-                ctx.set_forkserver_preload(["repro.core.host"])
+                ctx.set_forkserver_preload(["repro.core.host",
+                                            "repro.core.netshard"])
             except ValueError:                        # pragma: no cover
                 ctx = mp.get_context("spawn")
             _CTX = ctx
@@ -899,10 +900,14 @@ class ProcessShardedStore(ShardedStore):
                  arena_bytes: int = DEFAULT_ARENA_BYTES,
                  start_method: Optional[str] = None,
                  boot_timeout_s: float = 120.0,
-                 cos_latency: Optional[dict] = None):
+                 cos_latency: Optional[dict] = None,
+                 transport: str = "shm",
+                 heartbeat: Optional[HeartbeatConfig] = None):
         self._arena_bytes = int(arena_bytes)
         self._cos_latency = dict(cos_latency or {})
         self._boot_timeout_s = float(boot_timeout_s)
+        self._transport_kind = transport
+        self._heartbeat = heartbeat
         self._ctx = _host_context(start_method)
         self._cos_root_auto = cos_root is None
         if cos_root is None:
@@ -936,7 +941,26 @@ class ProcessShardedStore(ShardedStore):
                            arena_bytes=self._arena_bytes,
                            resources=self._host_resources,
                            boot_timeout_s=self._boot_timeout_s,
-                           cos_latency=self._cos_latency)
+                           cos_latency=self._cos_latency,
+                           transport=self._transport_kind,
+                           heartbeat=self._heartbeat,
+                           faults=getattr(self.cfg, "faults", None),
+                           on_reconnect=self._shard_reconnected)
+
+    def _shard_reconnected(self, shard_id: int, epoch: int) -> None:
+        """Transport reconnected at a new epoch: any 2PC ticket the
+        partition stranded is settled by the inherited sweep. Runs off
+        the heartbeat thread — the sweep issues RPCs of its own."""
+        if getattr(self, "_closed", False):
+            return
+        threading.Thread(
+            target=lambda: _swallow(self.resolve_indoubt),
+            name=f"reconnect-sweep-{shard_id}", daemon=True).start()
+
+    def shard_transport_health(self) -> List[dict]:
+        """Per-shard transport state (CONNECTED/SUSPECT/DOWN/
+        RECONNECTING), current epoch, last-heartbeat age."""
+        return [s.transport_health() for s in self.shards]
 
     def restart_shard(self, i: int) -> _ShardProxy:
         """Respawn shard i's worker: the old process (usually already

@@ -97,6 +97,13 @@ class ShmArena:
                 self._broken = exc
             self._space.notify_all()
 
+    @property
+    def broken(self) -> bool:
+        """True once `fail()`/`close()` has condemned the arena — the
+        transport health probe, without touching allocator state."""
+        with self._space:
+            return self._broken is not None
+
     def close(self) -> None:
         with self._space:
             self._closed = True

@@ -739,6 +739,11 @@ class ShardedStore:
                     if "DEGRADED_WRITEBACK" in states else "OK",
                     "shard_states": sorted(states),
                     "indoubt_tickets": self.indoubt_tickets(),
-                    "decisions_held": decisions},
+                    "decisions_held": decisions,
+                    # process/tcp frontends overlay per-shard transport
+                    # health (state/epoch/heartbeat age); None for
+                    # in-process shards
+                    "shard_transports": [
+                        s["health"].get("transport") for s in shards]},
                 "stats": self.stats.as_dict(),
                 "shards": shards}

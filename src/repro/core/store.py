@@ -515,7 +515,16 @@ class InfiniStore:
                 fut._resolve(fn())
             except BaseException as e:            # noqa: BLE001
                 fut.set_exception(e)
-        self._exec.submit(run)
+        try:
+            self._exec.submit(run)
+        except RuntimeError as e:
+            # dead daemon (closed store): the same error class every
+            # other frontend raises for an unreachable shard, so
+            # callers need one except-clause across thread/process/tcp
+            from .transport import ShardWorkerDied
+            raise ShardWorkerDied(
+                f"store {self.name!r} daemon is shut down",
+                op="submit") from e
         return fut
 
     def flush_writeback(self, timeout: Optional[float] = None) -> bool:

@@ -1,7 +1,8 @@
 """Shared `StoreFrontend` conformance suite, run against every
 front-end — `InfiniStore`, `ShardedStore` (threads), and
-`ProcessShardedStore` (worker processes) — so the three surfaces
-cannot drift: one parametrized fixture, one set of contract tests.
+`ProcessShardedStore` over both transports (shm rings and TCP
+loopback) — so the surfaces cannot drift: one parametrized fixture,
+one set of contract tests.
 
 Each test gets a FRESH store (crash/restart tests mutate liveness);
 the process store spawns real workers, so the per-test cost is a few
@@ -20,7 +21,7 @@ from repro.core.writeback import StoreFuture
 
 MB = 1024 * 1024
 
-FRONTENDS = ("single", "sharded", "process")
+FRONTENDS = ("single", "sharded", "process", "tcp")
 
 
 def _cfg(spill_dir=None):
@@ -40,6 +41,10 @@ def _build(kind, tmp_path):
     if kind == "process":
         return ProcessShardedStore(_cfg(spill), num_shards=2,
                                    clock=Clock(), seed=0)
+    if kind == "tcp":
+        return ProcessShardedStore(_cfg(spill), num_shards=2,
+                                   clock=Clock(), seed=0,
+                                   transport="tcp")
     raise ValueError(kind)
 
 

@@ -1,0 +1,477 @@
+"""Networked shard transport: framing, heartbeat failure detection,
+epoch-fenced reconnect, per-RPC deadlines, deterministic `net.*` fault
+injection, and partition-tolerant 2PC over TCP loopback.
+
+Timing discipline: the container is single-core, so heartbeat configs
+here run HOT (50ms pings, sub-second death) and every liveness wait is
+a bounded poll, never a bare sleep."""
+import os
+import signal
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Clock, FaultPlan, FaultPoint,
+                        ProcessShardedStore, StoreConfig)
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+from repro.core.host import ShardWorkerDied
+from repro.core.transport import (CONNECTED, DOWN, FrameError,
+                                  HeartbeatConfig, TcpTransport,
+                                  recv_frame, send_frame)
+
+MB = 1024 * 1024
+
+#: hot detector for tests: 50ms pings, DOWN in 400ms, fast reconnect
+HOT = HeartbeatConfig(interval_s=0.05, suspect_after_s=0.15,
+                      dead_after_s=0.4, connect_timeout_s=5.0,
+                      rpc_deadline_s=2.0, reconnect_max_attempts=40,
+                      reconnect_backoff_base_s=0.05,
+                      reconnect_backoff_cap_s=0.2, partition_s=0.8)
+
+
+def _cfg(spill_dir=None, faults=None):
+    return StoreConfig(ec=ECConfig(k=4, p=2), function_capacity=8 * MB,
+                       fragment_bytes=1 * MB,
+                       gc=GCConfig(gc_interval=1e9),
+                       num_recovery_functions=4, spill_dir=spill_dir,
+                       faults=faults)
+
+
+def _tcp_store(tmp_path, *, num_shards=2, hb=HOT, faults=None, seed=0):
+    return ProcessShardedStore(
+        _cfg(str(tmp_path / "spill"), faults=faults),
+        num_shards=num_shards, clock=Clock(), seed=seed,
+        transport="tcp", heartbeat=hb)
+
+
+def _poll(pred, timeout=15.0, interval=0.05, what="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(interval)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+class TestFraming:
+    def test_roundtrip_with_payload_section(self):
+        a, b = socket.socketpair()
+        try:
+            send_frame(a, (3, "val", 7, ("o", 0, 4)), (b"abcd", b"ef"))
+            ctrl, payload = recv_frame(b)
+            assert ctrl == (3, "val", 7, ("o", 0, 4))
+            assert payload == b"abcdef"
+        finally:
+            a.close()
+            b.close()
+
+    def test_bad_magic_raises_frame_error(self):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(b"\x00" * 16)
+            with pytest.raises(FrameError):
+                recv_frame(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_eof_mid_frame_raises_frame_error(self):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(b"\x49")
+            a.close()
+            with pytest.raises(FrameError):
+                recv_frame(b)
+        finally:
+            b.close()
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy (satellite: unified disconnect mapping)
+# ---------------------------------------------------------------------------
+
+class TestShardWorkerDied:
+    def test_carries_context_fields(self):
+        e = ShardWorkerDied("gone", shard_id=3, epoch=2, op="put")
+        assert (e.shard_id, e.epoch, e.op) == (3, 2, "put")
+        assert isinstance(e, ConnectionError)
+
+    def test_pickles_with_context(self):
+        import pickle
+        e = pickle.loads(pickle.dumps(
+            ShardWorkerDied("gone", shard_id=1, epoch=4, op="get")))
+        assert (e.shard_id, e.epoch, e.op) == (1, 4, "get")
+
+    def test_thread_frontend_dead_daemon_maps_to_it(self, tmp_path):
+        from repro.core import InfiniStore
+        st = InfiniStore(_cfg(str(tmp_path / "s")), clock=Clock(),
+                         seed=0)
+        st.put("k", b"x" * 9_000)
+        st.close()
+        with pytest.raises(ShardWorkerDied):
+            st.put_async("k2", b"y" * 9_000)
+
+
+# ---------------------------------------------------------------------------
+# basic TCP data plane
+# ---------------------------------------------------------------------------
+
+class TestTcpRoundtrip:
+    def test_put_get_and_health_surface(self, tmp_path):
+        st = _tcp_store(tmp_path)
+        try:
+            rng = np.random.default_rng(0)
+            data = {f"k{i}": rng.bytes(9_000) for i in range(4)}
+            for k, v in data.items():
+                assert st.put(k, v) == 1
+            for k, v in data.items():
+                assert st.get(k) == v
+            health = st.shard_transport_health()
+            assert len(health) == 2
+            for h in health:
+                assert h["kind"] == "tcp"
+                assert h["state"] in (CONNECTED, "SUSPECT")
+                assert h["epoch"] == 1
+                assert h["last_heartbeat_age_s"] is not None
+            snap = st.snapshot_metadata()
+            ts = snap["health"]["shard_transports"]
+            assert [t["kind"] for t in ts] == ["tcp", "tcp"]
+            # per-shard snapshot overlays the same dict
+            assert snap["shards"][0]["health"]["transport"]["epoch"] == 1
+        finally:
+            st.close()
+
+    def test_worker_fencing_counters_clean_run(self, tmp_path):
+        st = _tcp_store(tmp_path)
+        try:
+            st.put("k", b"x" * 9_000)
+            xs = st.shards[0].transport_stats()
+            assert xs["epoch"] == 1
+            assert xs["stale_acks_suppressed"] == 0
+            assert xs["fenced_connects"] == 0
+        finally:
+            st.close()
+
+
+# ---------------------------------------------------------------------------
+# failure detection + reconnect
+# ---------------------------------------------------------------------------
+
+class TestFailureDetection:
+    def test_sigstop_declares_down_sigcont_reconnects(self, tmp_path):
+        """A frozen (not dead) worker: heartbeats stop ponging, the
+        detector declares DOWN (SHARD_DOWN without process death —
+        satellite 2), and the thaw reconnects at a higher epoch."""
+        st = _tcp_store(tmp_path, num_shards=1)
+        try:
+            st.put("a", b"a" * 9_000)
+            pid = st.shards[0].pid
+            os.kill(pid, signal.SIGSTOP)
+            try:
+                _poll(lambda: st.shard_transport_health()[0]["state"]
+                      in (DOWN, "RECONNECTING"),
+                      what="heartbeat-timeout DOWN")
+                snap = st.snapshot_metadata()
+                assert snap["health"]["state"] == "SHARD_DOWN"
+            finally:
+                os.kill(pid, signal.SIGCONT)
+            _poll(lambda: st.shard_transport_health()[0]["state"]
+                  == CONNECTED and
+                  st.shard_transport_health()[0]["epoch"] >= 2,
+                  what="reconnect at a new epoch")
+            assert st.get("a") == b"a" * 9_000
+            assert st.put("b", b"b" * 9_000) == 1
+        finally:
+            st.close()
+
+    def test_sigkill_then_restart_shard_replays(self, tmp_path):
+        """Worker death proper: reconnect exhausts (nothing listens),
+        restart_shard spawns a fresh worker that replays the journal —
+        acked writes survive."""
+        hb = HeartbeatConfig(interval_s=0.05, suspect_after_s=0.15,
+                             dead_after_s=0.4, connect_timeout_s=1.0,
+                             rpc_deadline_s=2.0,
+                             reconnect_max_attempts=2,
+                             reconnect_backoff_base_s=0.05,
+                             reconnect_backoff_cap_s=0.1)
+        st = _tcp_store(tmp_path, num_shards=2, hb=hb)
+        try:
+            rng = np.random.default_rng(1)
+            data = {f"k{i}": rng.bytes(9_000) for i in range(6)}
+            for k, v in data.items():
+                assert st.put(k, v) == 1
+            st.simulate_crash(shard=0)
+            _poll(lambda: not st.shards[0].is_alive(),
+                  what="proxy to observe the death")
+            with pytest.raises(ShardWorkerDied) as ei:
+                while True:      # racing reconnect-loop teardown
+                    for k in data:
+                        st.put(k + "-post", b"x" * 9_000)
+            assert ei.value.shard_id is not None
+            st.restart_shard(0)
+            for k, v in data.items():
+                assert st.get(k) == v
+            assert st.put("fresh", b"f" * 9_000) == 1
+        finally:
+            st.close()
+
+    def test_connect_deadline_bounds_silent_server(self):
+        """Satellite 3: a listener that never completes the handshake
+        cannot hang start() past connect_timeout_s."""
+        lsock = socket.create_server(("127.0.0.1", 0))
+        try:
+            port = lsock.getsockname()[1]
+            t = TcpTransport(
+                shard_id=0, addr=("127.0.0.1", port),
+                hb=HeartbeatConfig(connect_timeout_s=1.0,
+                                   reconnect=False))
+            t0 = time.monotonic()
+            with pytest.raises(ShardWorkerDied) as ei:
+                t.start(on_message=lambda m: None,
+                        on_down=lambda e: None)
+            assert time.monotonic() - t0 < 5.0
+            assert ei.value.op == "connect"
+            t.reap(deadline=time.monotonic() + 2.0)
+        finally:
+            lsock.close()
+
+    def test_close_bounded_against_half_connected_shard(self, tmp_path):
+        """close() against a store whose worker froze mid-session must
+        respect deadline_s, not hang on the dead socket."""
+        st = _tcp_store(tmp_path, num_shards=1)
+        pid = st.shards[0].pid
+        st.put("a", b"a" * 9_000)
+        os.kill(pid, signal.SIGSTOP)
+        try:
+            t0 = time.monotonic()
+            st.close(flush=False, deadline_s=8.0)
+            assert time.monotonic() - t0 < 30.0
+        finally:
+            try:
+                os.kill(pid, signal.SIGCONT)
+            except ProcessLookupError:
+                pass                 # reap already killed it
+
+
+# ---------------------------------------------------------------------------
+# epoch fencing
+# ---------------------------------------------------------------------------
+
+class TestEpochFencing:
+    def test_stale_epoch_ack_suppressed(self, tmp_path):
+        """An RPC issued at epoch 1, partitioned, reconnected at epoch
+        2: the worker's late reply carries an epoch-1 rid and MUST be
+        swallowed, not delivered."""
+        # slow COS writes keep the flush barrier in flight long enough
+        # to straddle the partition + reconnect
+        st = ProcessShardedStore(
+            _cfg(str(tmp_path / "spill")), num_shards=1, clock=Clock(),
+            seed=0, transport="tcp", heartbeat=HOT,
+            cos_latency={"put_delay_base_s": 0.8})
+        try:
+            proxy = st.shards[0]
+            st.put("a", b"a" * 9_000)
+            st.put("b", b"b" * 9_000)
+            fut = proxy.flush_async(timeout=3.0)
+            proxy._t._force_partition(0.9)
+            with pytest.raises(ShardWorkerDied):
+                fut.result(timeout=15.0)
+            _poll(lambda: proxy.transport_health()["state"] == CONNECTED
+                  and proxy.transport_health()["epoch"] >= 2,
+                  what="post-partition reconnect")
+            # the worker's flush (epoch-1 rid) times out at ~t+3s and
+            # replies into epoch 2: it must be fenced, not delivered
+            _poll(lambda: proxy.transport_stats()
+                  ["stale_acks_suppressed"] >= 1, timeout=10.0,
+                  what="stale-epoch ack suppression")
+            assert proxy.flush_writeback(timeout=60.0) is True
+            assert st.get("b") == b"b" * 9_000
+        finally:
+            st.close()
+
+    def test_zombie_socket_cannot_reconnect_at_old_epoch(self, tmp_path):
+        """A raw hello at a stale epoch is refused ("fenced") — a
+        zombie's connection cannot take the shard over."""
+        st = _tcp_store(tmp_path, num_shards=1)
+        try:
+            st.put("a", b"a" * 9_000)
+            addr = st.shards[0].transport_health()["addr"]
+            z = socket.create_connection(tuple(addr), timeout=5.0)
+            try:
+                z.settimeout(5.0)
+                send_frame(z, (1, "hello", 0, None))  # epoch 1 = stale
+                ctrl, _ = recv_frame(z)
+                assert ctrl[1] == "fenced"
+            finally:
+                z.close()
+            # the real connection is untouched
+            assert st.get("a") == b"a" * 9_000
+            xs = st.shards[0].transport_stats()
+            assert xs["fenced_connects"] >= 1
+            assert st.shards[0].transport_health()["epoch"] == 1
+        finally:
+            st.close()
+
+
+# ---------------------------------------------------------------------------
+# deterministic net.* fault injection
+# ---------------------------------------------------------------------------
+
+class TestNetFaults:
+    def test_drop_fails_rpc_by_deadline_retry_succeeds(self, tmp_path):
+        plan = FaultPlan(seed=5, points=[
+            FaultPoint(site="net.drop", action="drop", hits=(1,),
+                       match="op:put:")])
+        hb = HOT
+        st = _tcp_store(tmp_path, num_shards=1, hb=hb, faults=plan)
+        try:
+            with pytest.raises(ShardWorkerDied) as ei:
+                st.put("d", b"d" * 9_000)
+            assert ei.value.op == "put"
+            # the frame never arrived, so the retry is version 1
+            assert st.put("d", b"d" * 9_000) == 1
+            assert st.get("d") == b"d" * 9_000
+            assert ("net.drop", 1, "drop") in plan.log
+        finally:
+            st.close()
+
+    def test_dup_deduped_by_worker_rid(self, tmp_path):
+        plan = FaultPlan(seed=5, points=[
+            FaultPoint(site="net.dup", action="dup", hits=(1, 2),
+                       match="op:put:")])
+        st = _tcp_store(tmp_path, num_shards=1, faults=plan)
+        try:
+            assert st.put("x", b"x" * 9_000) == 1   # dup'd frame
+            assert st.put("y", b"y" * 9_000) == 1   # dup'd frame
+            assert st.get("x") == b"x" * 9_000
+            xs = st.shards[0].transport_stats()
+            assert xs["dup_frames_dropped"] >= 2
+        finally:
+            st.close()
+
+    def test_same_seed_same_schedule_byte_identical_log(self, tmp_path):
+        """Two runs of one seeded net.* schedule produce byte-identical
+        fault logs and identical per-op outcomes (satellite 4)."""
+        def run(tag):
+            plan = FaultPlan(seed=11, points=[
+                FaultPoint(site="net.drop", action="drop", hits=(2, 5),
+                           match="op:put:"),
+                FaultPoint(site="net.delay", action="delay", every=3,
+                           latency_s=0.01, match="op:put:"),
+                FaultPoint(site="net.dup", action="dup", hits=(4,),
+                           match="op:put:")])
+            st = _tcp_store(tmp_path / tag, num_shards=1, faults=plan)
+            outcomes = []
+            try:
+                rng = np.random.default_rng(7)
+                payloads = [rng.bytes(8_000) for _ in range(8)]
+                for i, v in enumerate(payloads):
+                    try:
+                        st.put(f"k{i}", v)
+                        outcomes.append((i, "ok"))
+                    except ShardWorkerDied:
+                        outcomes.append((i, "died"))
+                reads = {f"k{i}": st.get(f"k{i}")
+                         for i, o in outcomes if o == "ok"}
+                for i, o in outcomes:
+                    if o == "ok":
+                        assert reads[f"k{i}"] == payloads[i]
+            finally:
+                st.close()
+            return outcomes, list(plan.log)
+
+        out1, log1 = run("r1")
+        out2, log2 = run("r2")
+        assert out1 == out2
+        assert log1 == log2
+        assert repr(log1) == repr(log2)          # byte-identical
+        assert any(s == "net.drop" for s, _, _ in log1)
+        assert any(s == "net.dup" for s, _, _ in log1)
+
+    def test_heartbeat_traffic_does_not_shift_op_schedule(self, tmp_path):
+        """The drop targets put hit #3: with match-filtered points the
+        interleaved ping stream consumes no hit indices, so exactly
+        puts 1–2 succeed and put 3 drops — regardless of timing."""
+        plan = FaultPlan(seed=3, points=[
+            FaultPoint(site="net.drop", action="drop", hits=(3,),
+                       match="op:put:")])
+        st = _tcp_store(tmp_path, num_shards=1, faults=plan)
+        try:
+            assert st.put("p1", b"1" * 8_000) == 1
+            time.sleep(0.3)          # let heartbeats interleave
+            assert st.put("p2", b"2" * 8_000) == 1
+            with pytest.raises(ShardWorkerDied):
+                st.put("p3", b"3" * 8_000)
+        finally:
+            st.close()
+
+
+# ---------------------------------------------------------------------------
+# partition-tolerant 2PC (satellite 4 tentpole test)
+# ---------------------------------------------------------------------------
+
+class TestPartitionDuring2PC:
+    def test_partition_after_decision_rolls_forward(self, tmp_path):
+        """The leader journals decision/<ticket>, the partition eats
+        shard 0's commit frame, and the reconnect sweep at epoch 2
+        rolls the ticket forward: all keys committed, no PENDING keys,
+        zero stale-epoch acks."""
+        plan = FaultPlan(seed=21, points=[
+            FaultPoint(site="net.partition", action="partition",
+                       hits=(1,), match="op:commit2pc:s0")])
+        hb = HeartbeatConfig(interval_s=0.05, suspect_after_s=0.15,
+                             dead_after_s=0.4, connect_timeout_s=5.0,
+                             rpc_deadline_s=1.0,
+                             reconnect_max_attempts=40,
+                             reconnect_backoff_base_s=0.05,
+                             reconnect_backoff_cap_s=0.2,
+                             partition_s=1.2)
+        st = _tcp_store(tmp_path, num_shards=2, hb=hb, faults=plan)
+        try:
+            rng = np.random.default_rng(9)
+            # span both shards so the batch runs the 2PC ticket path
+            batch, per_shard = {}, {0: 0, 1: 0}
+            i = 0
+            while min(per_shard.values()) < 2:
+                k = f"t{i}"
+                sid = st.router.shard_of(k)
+                if per_shard[sid] < 2:
+                    batch[k] = rng.bytes(8_000)
+                    per_shard[sid] += 1
+                i += 1
+            with pytest.raises(Exception):
+                # commit frame to s0 is eaten + link blackholed: the
+                # ticketed commit round reports the stranded shard
+                st.put_many(batch, raise_on_conflict=True)
+            assert ("net.partition", 1, "partition") in plan.log
+            _poll(lambda:
+                  st.shard_transport_health()[0]["state"] == CONNECTED
+                  and st.shard_transport_health()[0]["epoch"] >= 2,
+                  what="shard 0 reconnect after the partition")
+
+            def settled():
+                if st.indoubt_tickets():
+                    st.resolve_indoubt()
+                    return False
+                got = st.get_many(list(batch))
+                return all(got[k] == v for k, v in batch.items())
+            _poll(settled, timeout=20.0,
+                  what="ticket rolled forward on every shard")
+            assert st.indoubt_tickets() == []
+            # zero PENDING keys: every key reads at its batch value
+            got = st.get_many(list(batch))
+            assert all(got[k] == v for k, v in batch.items())
+            # zero stale-epoch acks anywhere
+            for proxy in st.shards:
+                assert proxy.transport_stats()[
+                    "stale_acks_suppressed"] == 0
+        finally:
+            st.close()
