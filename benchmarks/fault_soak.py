@@ -379,6 +379,14 @@ def net_chaos_soak(seed: int, workdir: str, n_keys: int) -> dict:
 
 
 def run_bench(smoke: bool) -> dict:
+    # Lock-order witness rides the whole soak: every lock created by
+    # the stores below is validated against the static hierarchy, and
+    # a single observed inversion fails the gate. Parent-side only —
+    # forked shard workers inherit a dormant copy they never assert.
+    from repro.core import locks as _locks
+    from repro.devtools.witness import LockWitness
+    witness = LockWitness.with_static_order()
+    _locks.install_witness(witness)
     overhead = bench_overhead(256 * 1024, repeats=16 if smoke else 48)
     runs = []
     for tag in ("a", "b"):                    # same seed, twice
@@ -403,7 +411,10 @@ def run_bench(smoke: bool) -> dict:
         "same seed produced different network fault sequences"
     for r in runs + net_runs:
         r["log"] = [list(e) for e in r["log"]]
+    witness.assert_clean()           # zero lock-order inversions
+    _locks.install_witness(None)
     return {"bench": "fault_soak", "smoke": smoke,
+            "lock_witness": witness.snapshot(),
             "overhead": overhead,
             "chaos": {"seed": CHAOS_SEED,
                       "reproducible_log": reproducible,

@@ -9,6 +9,10 @@ python -m pip install -q -r requirements-dev.txt 2>/dev/null \
     || echo "ci.sh: pip install failed (offline?); using preinstalled deps"
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# istore-lint first: the static concurrency/invariant gate is seconds,
+# so a lock-order cycle or unwaived finding fails fast before the
+# multi-minute test suite runs. Zero new findings required.
+python -m repro.devtools.lint src/repro
 python -m pytest -x -q
 python benchmarks/ec_path.py --smoke
 # async PUT path exercised end-to-end (1 MB point, sync-vs-async ack)

@@ -133,6 +133,19 @@ _RAISING = {
 #: actions `fire()` RETURNS (the site interprets them in-line)
 _ADVISORY = ("reclaim", "torn", "drop", "dup", "partition", "delay")
 
+#: every instrumented `fire()` site in the tree (the table in the
+#: module docstring, one entry per row).  `istore-lint` cross-checks
+#: fire()/FaultPoint call sites against this manifest so a typo'd
+#: site cannot silently never fire.
+FAULT_SITES = frozenset({
+    "cos.put", "cos.get",
+    "writeback.persist",
+    "sms.store", "sms.load",
+    "spill.append", "spill.sync", "spill.io", "spill.torn_close",
+    "shard.decision", "shard.leader_death", "shard.commit_submit",
+    "net.drop", "net.delay", "net.partition", "net.dup",
+})
+
 
 @dataclass
 class FaultPoint:
@@ -159,6 +172,13 @@ class FaultPoint:
     def __post_init__(self):
         if self.action not in _RAISING and self.action not in _ADVISORY:
             raise ValueError(f"unknown fault action: {self.action!r}")
+        if (self.site.startswith("net.") or self.site.startswith("hb")) \
+                and not self.match:
+            raise ValueError(
+                f"FaultPoint({self.site!r}) must set match= ("
+                f"'op:...' or 'hb') — an unmatched point consumes hit "
+                f"indices for heartbeat traffic too, breaking same-seed "
+                f"log determinism")
         self.hits = frozenset(self.hits)
         self._fired = 0
 

@@ -78,6 +78,7 @@ import numpy as np
 from .clock import Clock
 from .ipc import ArenaBroken, ShmArena, desc_watermark, pack_payload, \
     unpack_payload
+from .locks import make_lock
 from .shard import ShardedStore
 from .store import InfiniStore, StoreStats
 from .transport import (HeartbeatConfig, LocalTransport, ShardTransport,
@@ -123,11 +124,12 @@ def _worker_main(spec: dict) -> None:
     except (ValueError, OSError):                     # pragma: no cover
         pass
     conn = spec["conn"]
-    send_lock = threading.Lock()
+    send_lock = make_lock("host._worker_main.send_lock")
 
     def send(msg) -> None:
         with send_lock:
             try:
+                # lint: allow(blocking-under-lock): send_lock exists to serialize exactly this pipe write
                 conn.send(msg)
             except (OSError, ValueError, BrokenPipeError):
                 pass                 # parent gone: nothing left to tell
@@ -180,7 +182,7 @@ class _WorkerLoop:
         self.aux = ThreadPoolExecutor(max_workers=2,
                                       thread_name_prefix="shard-host-aux")
         self.preps: Dict[int, object] = {}   # prepare rid -> prepared
-        self.resp_lock = threading.Lock()    # resp pack+send = one unit
+        self.resp_lock = make_lock("host._WorkerLoop.resp_lock")    # resp pack+send = one unit
         self._last_rel = 0
 
     def run(self) -> None:
@@ -404,8 +406,8 @@ class _ShardProxy:
         self.shard_id = shard_id
         self.name = name
         self.spill_dir = cfg.spill_dir
-        self._order_lock = threading.Lock()
-        self._state_lock = threading.Lock()
+        self._order_lock = make_lock("host._ShardProxy._order_lock")
+        self._state_lock = make_lock("host._ShardProxy._state_lock")
         self._rids = itertools.count(1)
         self._inflight: Dict[int, tuple] = {}
         self._alive = False
@@ -533,6 +535,7 @@ class _ShardProxy:
                     dl = None if dls is None \
                         else time.monotonic() + dls
                     self._inflight[rid] = (fut, post, op, dl)
+                # lint: allow(blocking-under-lock): _order_lock must span staging and send so ring order equals wire order
                 self._t.send((op, rid, payload))
             except BaseException as e:
                 # failed before the frame left: unstage its payloads
@@ -807,7 +810,7 @@ class _HostResources:
     collectable and its workers/segments still get reaped."""
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
+        self._lock = make_lock("host._HostResources._lock")
         self._proxies: List[_ShardProxy] = []
 
     def register(self, p: _ShardProxy) -> None:
@@ -837,7 +840,7 @@ class _HostResources:
                 pass
 
 
-_REGISTRY_LOCK = threading.Lock()
+_REGISTRY_LOCK = make_lock("host._REGISTRY_LOCK")
 _LIVE_RESOURCES: List[_HostResources] = []
 
 
@@ -853,7 +856,7 @@ def _reap_orphans() -> None:         # pragma: no cover - exit path
 # spawn context
 # ---------------------------------------------------------------------------
 
-_CTX_LOCK = threading.Lock()
+_CTX_LOCK = make_lock("host._CTX_LOCK")
 _CTX = None
 
 

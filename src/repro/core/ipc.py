@@ -29,6 +29,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .locks import make_lock
+
 __all__ = [
     "ArenaBroken",
     "ShmArena",
@@ -71,7 +73,7 @@ class ShmArena:
         self._owner = owner
         self._buf = np.frombuffer(shm.buf, dtype=np.uint8, count=self.size)
         # Writer-side state only; the reader never touches these.
-        self._lock = threading.Lock()
+        self._lock = make_lock("ipc.ShmArena._lock")
         self._space = threading.Condition(self._lock)
         self._head = 0          # next byte to allocate (monotonic)
         self._tail = 0          # all bytes below this are free (monotonic)

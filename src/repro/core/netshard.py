@@ -51,6 +51,7 @@ import numpy as np
 
 from .clock import Clock
 from .host import _WorkerLoop, _portable_exc, _swallow
+from .locks import make_lock
 from .payload import as_u8
 from .store import InfiniStore
 from .transport import FrameError, recv_frame, send_frame
@@ -134,8 +135,8 @@ class _NetShardServer:
         self.tls = threading.local()     # .frame / .staged / .off
         self.epoch = 0
         self._sock: Optional[socket.socket] = None
-        self._lock = threading.Lock()    # sock/epoch/rid bookkeeping
-        self._send_lock = threading.Lock()
+        self._lock = make_lock("netshard._NetShardServer._lock")    # sock/epoch/rid bookkeeping
+        self._send_lock = make_lock("netshard._NetShardServer._send_lock")
         self._rid_epoch: Dict[int, int] = {}
         self._last_rid = 0
         self.fenced_connects = 0
@@ -291,6 +292,7 @@ class _NetShardServer:
             return
         try:
             with self._send_lock:
+                # lint: allow(blocking-under-lock): _send_lock's critical section IS the frame pack+send
                 send_frame(c, (ep, kind, rid, val), bufs)
         except OSError:
             pass                     # conn broke: parent reconnects

@@ -89,6 +89,7 @@ import numpy as np
 from repro.core.clock import Clock
 from repro.core.cos import COS
 from repro.core.faults import RetryPolicy
+from repro.core.locks import make_lock
 from repro.core.spill import SpillJournal
 from repro.core.store import (_STAT_FIELDS, InfiniStore, StoreConfig,
                               StoreStats)
@@ -185,7 +186,7 @@ class ShardedStore:
         # Journal-less deployments fall back to COS decision stubs.
         # NOT fault-instrumented: the dedicated "shard.decision" site
         # models decision loss without entangling shard spill schedules.
-        self._tlock = threading.Lock()
+        self._tlock = make_lock("shard.ShardedStore._tlock")
         self._decisions: Dict[int, int] = {}     # ticket -> record seq
         self._inflight_tickets: set = set()
         self._decision_retry = RetryPolicy(
@@ -421,7 +422,7 @@ class ShardedStore:
             out._resolve({})
             return out
         merged: Dict = {}
-        lock = threading.Lock()
+        lock = make_lock("shard.ShardedStore._join.lock")
         remaining = [len(futs)]
 
         def on_done(f):
@@ -432,6 +433,7 @@ class ShardedStore:
                 if err is not None:
                     out.set_exception(err)
                     return
+                # lint: allow(blocking-under-lock): future is already done inside its own done-callback; result() cannot block
                 merged.update(f.result())
                 remaining[0] -= 1
                 if remaining[0] == 0:

@@ -18,6 +18,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, Optional, Tuple
 
 from repro.core.clock import Clock
+from repro.core.locks import make_rlock
 
 # Lambda runtime overhead the paper excludes from HARDCAP (~100 MB of a
 # 1536 MB function) and the fraction reserved for recovery buffers §5.5.2.
@@ -78,7 +79,7 @@ class Slab:
         self.diff_rank = 0
         self.last_invoked = clock.now()
         self.stats = SlabStats()
-        self._lock = threading.RLock()
+        self._lock = make_rlock("sms.Slab._lock")
 
     # ---- billing / liveness -------------------------------------------------
 
@@ -221,7 +222,7 @@ class SMS:
         self.clock = clock
         self.slabs: Dict[int, Slab] = {}
         self.faults = None               # propagated to new slabs
-        self._lock = threading.RLock()
+        self._lock = make_rlock("sms.SMS._lock")
 
     def add(self, fid: int, capacity: int) -> Slab:
         with self._lock:

@@ -79,6 +79,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.locks import make_rlock
 from repro.core.payload import as_u8, payload_nbytes
 
 _MAGIC = 0x53504C31                      # "SPL1"
@@ -202,7 +203,7 @@ class SpillJournal:
         self.compact_below = compact_below
         self.sync_each = sync_each
         self.stats = SpillStats()
-        self._lock = threading.RLock()
+        self._lock = make_rlock("spill.SpillJournal._lock")
         self._closed = False
         # live (unpersisted) records by seq; _by_key for supersession
         self._records: Dict[int, _Rec] = {}
@@ -523,6 +524,7 @@ class SpillJournal:
     def _do_flush(self) -> None:
         self._f.flush()
         if self.fsync:
+            # lint: allow(blocking-under-lock): journal I/O is inline under _lock by design (crash-order atomicity); waiver covers all callers
             os.fsync(self._f.fileno())       # machine-crash durability
         self._synced = self._written
 

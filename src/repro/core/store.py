@@ -79,6 +79,7 @@ from repro.core.ec import ECConfig, RSCodec
 from repro.core.faults import (FaultPlan, OpDeadlineExceeded, RetryPolicy)
 from repro.core.gc_window import BucketState, GCConfig, SlidingWindow
 from repro.core.insertion_log import InsertionLog, Piggyback, PutRecord
+from repro.core.locks import make_rlock
 from repro.core.payload import (as_u8, is_array_payload, needs_snapshot,
                                 payload_nbytes, to_bytes)
 from repro.core.placement import PlacementManager
@@ -386,7 +387,7 @@ class InfiniStore:
         self.ledger = CostLedger()
         self.stats = StoreStats()
         self.rng = np.random.default_rng(seed)
-        self._lock = threading.RLock()
+        self._lock = make_rlock("store.InfiniStore._lock")
         # crash-consistent spill journal (§5.3.2): the writeback queue
         # appends every enqueue here before the PUT acks; metadata
         # records ("meta/<key>|<ver>") journal the table entry so a

@@ -68,6 +68,7 @@ from typing import Callable, List, Optional, Tuple
 
 from .faults import RetryPolicy
 from .ipc import ShmArena, pack_payload
+from .locks import make_lock
 from .payload import as_u8
 
 __all__ = [
@@ -291,7 +292,7 @@ class LocalTransport(ShardTransport):
         self._spec = spec
         self._arena_bytes = int(arena_bytes)
         self._boot_timeout_s = float(boot_timeout_s)
-        self._send_lock = threading.Lock()
+        self._send_lock = make_lock("transport.LocalTransport._send_lock")
         self._req: Optional[ShmArena] = None
         self._resp: Optional[ShmArena] = None
         self._conn = None
@@ -393,6 +394,7 @@ class LocalTransport(ShardTransport):
     def send(self, msg: tuple) -> None:
         with self._send_lock:
             try:
+                # lint: allow(blocking-under-lock): _send_lock's critical section IS the pipe write
                 self._conn.send(msg)
             except (OSError, ValueError, BrokenPipeError) as e:
                 raise ShardWorkerDied(
@@ -409,6 +411,7 @@ class LocalTransport(ShardTransport):
     def ack_reply(self, watermark: int) -> None:
         with self._send_lock:
             try:
+                # lint: allow(blocking-under-lock): release watermark shares the serialized pipe write
                 self._conn.send(("release", 0, watermark))
             except (OSError, ValueError, BrokenPipeError):
                 pass
@@ -433,6 +436,7 @@ class LocalTransport(ShardTransport):
         if self._conn is not None:
             with self._send_lock:
                 try:
+                    # lint: allow(blocking-under-lock): final 'bye' shares the serialized pipe write
                     self._conn.send(("bye", 0, None))
                 except (OSError, ValueError, BrokenPipeError):
                     pass             # worker already gone
@@ -487,9 +491,9 @@ class TcpTransport(ShardTransport):
             max_attempts=self.hb.reconnect_max_attempts,
             backoff_base_s=self.hb.reconnect_backoff_base_s,
             backoff_cap_s=self.hb.reconnect_backoff_cap_s, seed=seed)
-        self._lock = threading.Lock()    # sock/epoch/state/last_pong
-        self._send_lock = threading.Lock()
-        self._conn_lock = threading.Lock()   # one (re)connect at a time
+        self._lock = make_lock("transport.TcpTransport._lock")    # sock/epoch/state/last_pong
+        self._send_lock = make_lock("transport.TcpTransport._send_lock")
+        self._conn_lock = make_lock("transport.TcpTransport._conn_lock")   # one (re)connect at a time
         self._sock: Optional[socket.socket] = None
         self._last_pong: Optional[float] = None
         self._partition_until = 0.0
@@ -564,6 +568,7 @@ class TcpTransport(ShardTransport):
                     op="connect")
             ep = self.epoch + 1
             try:
+                # lint: allow(blocking-under-lock): _conn_lock serializes connect+handshake; bounded by connect timeout
                 s = socket.create_connection(self._addr, timeout=timeout)
             except OSError as e:
                 raise ShardWorkerDied(
@@ -573,7 +578,9 @@ class TcpTransport(ShardTransport):
             try:
                 s.settimeout(timeout)
                 s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                # lint: allow(blocking-under-lock): handshake frame under _conn_lock; socket timeout bounds it
                 send_frame(s, (ep, "hello", 0, None))
+                # lint: allow(blocking-under-lock): handshake reply under _conn_lock; socket timeout bounds it
                 ctrl, _ = recv_frame(s)
                 _fep, kind, _rid, val = ctrl
                 if kind != "welcome":
@@ -745,8 +752,10 @@ class TcpTransport(ShardTransport):
         ctrl = (ep, kind, rid, val)
         try:
             with self._send_lock:
+                # lint: allow(blocking-under-lock): _send_lock's critical section IS the frame write
                 send_frame(sock, ctrl, bufs)
                 if dup:
+                    # lint: allow(blocking-under-lock): fault-injected dup frame shares the serialized write
                     send_frame(sock, ctrl, bufs)
         except OSError as e:
             raise ShardWorkerDied(

@@ -51,6 +51,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.faults import RetryPolicy
+from repro.core.locks import make_lock
 
 
 class StoreFuture(Future):
@@ -130,7 +131,7 @@ class WritebackQueue:
         self._inflight = 0
         self._paused = False
         self._stop = False
-        self._lock = threading.Lock()
+        self._lock = make_lock("writeback.WritebackQueue._lock")
         self._not_empty = threading.Condition(self._lock)
         self._not_full = threading.Condition(self._lock)
         self._idle = threading.Condition(self._lock)    # empty + no inflight

@@ -1,0 +1,564 @@
+"""istore-lint + LockWitness test suite (PR 9 tentpole).
+
+Each rule gets a positive fixture (a synthetic module seeded with the
+violation — lint must report it and `main()` must exit non-zero) and a
+negative fixture (the idiomatic-correct variant — lint must stay
+silent).  On top of the per-rule checks: pragma and baseline waiver
+semantics, lock-hierarchy extraction over the real tree, the runtime
+witness's dynamic/static inversion detection, and the zero-findings
+gate over ``src/repro`` itself — the same invocation `scripts/ci.sh`
+runs.
+"""
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.core import locks
+from repro.core.faults import FaultPoint
+from repro.devtools import lint, lockgraph
+from repro.devtools.scan import scan_tree
+from repro.devtools.witness import LockWitness
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src" / "repro"
+
+
+def _lint_dir(tmp_path, **files):
+    """Write `name -> source` files, lint the directory with no
+    baseline, return the new findings."""
+    tmp_path.mkdir(parents=True, exist_ok=True)
+    for name, src in files.items():
+        (tmp_path / f"{name}.py").write_text(src)
+    new, _tm = lint.run([str(tmp_path)], root=tmp_path,
+                        baseline_path=tmp_path / "absent.json")
+    return new
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# rule: lock-order
+# ---------------------------------------------------------------------------
+
+CYCLE_SRC = """\
+import threading
+
+class A:
+    def __init__(self):
+        self._l1 = threading.Lock()
+        self._l2 = threading.Lock()
+
+    def f(self):
+        with self._l1:
+            with self._l2:
+                pass
+
+    def g(self):
+        with self._l2:
+            with self._l1:
+                pass
+"""
+
+
+def test_lock_order_cycle_detected(tmp_path):
+    new = _lint_dir(tmp_path, m=CYCLE_SRC)
+    assert _rules(new) == ["lock-order"]
+    assert any("cycle" in f.detail for f in new)
+
+
+def test_lock_order_consistent_nesting_clean(tmp_path):
+    src = CYCLE_SRC.replace("with self._l2:\n            with self._l1:",
+                            "with self._l1:\n            with self._l2:")
+    assert _lint_dir(tmp_path, m=src) == []
+
+
+def test_lock_order_plain_lock_self_deadlock(tmp_path):
+    src = """\
+import threading
+
+class B:
+    def __init__(self):
+        self._l = threading.Lock()
+
+    def outer(self):
+        with self._l:
+            self.inner()
+
+    def inner(self):
+        with self._l:
+            pass
+"""
+    new = _lint_dir(tmp_path, m=src)
+    assert any(f.rule == "lock-order" and f.detail.startswith("self:")
+               for f in new)
+    # the same shape over an RLock is reentrant — clean
+    rl = _lint_dir(tmp_path / "rlock", m=src.replace(
+        "threading.Lock()", "threading.RLock()"))
+    assert rl == []
+
+
+def test_lock_order_factory_name_drift(tmp_path):
+    src = """\
+from repro.core.locks import make_lock
+
+class C:
+    def __init__(self):
+        self._l = make_lock("othermodule.C._l")
+"""
+    new = _lint_dir(tmp_path, m=src)
+    assert any(f.rule == "lock-order" and "name-drift" in f.detail
+               for f in new)
+    good = src.replace("othermodule.C._l", "m.C._l")
+    assert _lint_dir(tmp_path / "ok", m=good) == []
+
+
+# ---------------------------------------------------------------------------
+# rule: blocking-under-lock
+# ---------------------------------------------------------------------------
+
+SLEEP_UNDER_LOCK = """\
+import threading
+import time
+
+class C:
+    def __init__(self):
+        self._l = threading.Lock()
+
+    def f(self):
+        with self._l:
+            time.sleep(0.1)
+"""
+
+
+def test_blocking_under_lock_direct(tmp_path):
+    new = _lint_dir(tmp_path, m=SLEEP_UNDER_LOCK)
+    assert _rules(new) == ["blocking-under-lock"]
+    assert "time.sleep" in new[0].message
+
+
+def test_blocking_outside_lock_clean(tmp_path):
+    src = """\
+import threading
+import time
+
+class C:
+    def __init__(self):
+        self._l = threading.Lock()
+
+    def f(self):
+        with self._l:
+            pass
+        time.sleep(0.1)
+"""
+    assert _lint_dir(tmp_path, m=src) == []
+
+
+def test_blocking_under_lock_via_callee(tmp_path):
+    src = """\
+import threading
+import time
+
+class C:
+    def __init__(self):
+        self._l = threading.Lock()
+
+    def _helper(self):
+        time.sleep(0.1)
+
+    def f(self):
+        with self._l:
+            self._helper()
+"""
+    new = _lint_dir(tmp_path, m=src)
+    assert any("may block" in f.message for f in new)
+
+
+def test_release_reacquire_window_not_flagged(tmp_path):
+    # the writeback.flush idiom: drop the lock around the blocking
+    # call, retake it in finally — must NOT be flagged even when the
+    # release/acquire pair sits below while/if/try nesting
+    src = """\
+import threading
+import time
+
+class C:
+    def __init__(self):
+        self._l = threading.Lock()
+
+    def f(self):
+        with self._l:
+            while True:
+                if True:
+                    self._l.release()
+                    try:
+                        time.sleep(0.1)
+                    finally:
+                        self._l.acquire()
+"""
+    assert _lint_dir(tmp_path, m=src) == []
+
+
+# ---------------------------------------------------------------------------
+# rule: fault-site
+# ---------------------------------------------------------------------------
+
+MANIFEST_SRC = """\
+FAULT_SITES = frozenset({"cos.put", "net.drop"})
+"""
+
+
+def test_fault_site_unguarded_and_typo(tmp_path):
+    src = """\
+class D:
+    def __init__(self, faults=None):
+        self.faults = faults
+
+    def ok(self, key):
+        if self.faults is not None:
+            self.faults.fire("cos.put", key)
+
+    def unguarded(self, key):
+        self.faults.fire("cos.put", key)
+
+    def typo(self, key):
+        if self.faults is not None:
+            self.faults.fire("cos.putt", key)
+"""
+    new = _lint_dir(tmp_path, faults=MANIFEST_SRC, m=src)
+    details = {f.detail for f in new}
+    assert "unguarded:self.faults" in details
+    assert "unregistered:cos.putt" in details
+    # the guarded, registered call produced nothing
+    assert not any(f.line == 7 for f in new)
+
+
+def test_fault_site_net_point_requires_match(tmp_path):
+    src = """\
+def plan():
+    return [FaultPoint(site="net.drop", action="drop", hits=(1,))]
+"""
+    new = _lint_dir(tmp_path, faults=MANIFEST_SRC, m=src)
+    assert any(f.detail == "point-no-match:net.drop" for f in new)
+    good = src.replace('hits=(1,)', 'hits=(1,), match="op:put:"')
+    assert _lint_dir(tmp_path / "ok", faults=MANIFEST_SRC, m=good) == []
+
+
+def test_faultpoint_runtime_match_validation():
+    # satellite: __post_init__ mirrors the static rule at runtime
+    with pytest.raises(ValueError, match="must set match"):
+        FaultPoint(site="net.drop", action="drop", hits=(1,))
+    with pytest.raises(ValueError, match="must set match"):
+        FaultPoint(site="hb", action="transient", hits=(1,))
+    FaultPoint(site="net.drop", action="drop", hits=(1,), match="op:put:")
+    FaultPoint(site="cos.put", action="transient", hits=(1,))
+
+
+# ---------------------------------------------------------------------------
+# rule: atomic-counter
+# ---------------------------------------------------------------------------
+
+def test_atomic_counter_rmw_flagged(tmp_path):
+    src = """\
+from repro.core.store import StoreStats
+
+class E:
+    def __init__(self):
+        self.stats = StoreStats()
+
+    def bad(self):
+        self.stats.puts += 1
+
+    def good(self):
+        self.stats.inc("puts")
+"""
+    new = _lint_dir(tmp_path, m=src)
+    assert _rules(new) == ["atomic-counter"]
+    assert len(new) == 1 and "inc('puts')" in new[0].message
+
+
+# ---------------------------------------------------------------------------
+# rule: resource-lifecycle
+# ---------------------------------------------------------------------------
+
+THREAD_LEAK = """\
+import threading
+
+class F:
+    def __init__(self):
+        self._t = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        pass
+"""
+
+
+def test_resource_lifecycle_leak_flagged(tmp_path):
+    new = _lint_dir(tmp_path, m=THREAD_LEAK)
+    assert _rules(new) == ["resource-lifecycle"]
+    assert "self._t" in new[0].message
+
+
+def test_resource_lifecycle_joined_clean(tmp_path):
+    src = THREAD_LEAK + """\
+
+    def close(self):
+        self._t.join(timeout=1.0)
+"""
+    assert _lint_dir(tmp_path, m=src) == []
+
+
+def test_resource_lifecycle_teardown_via_helper(tmp_path):
+    # join reachable transitively from close() counts
+    src = THREAD_LEAK + """\
+
+    def _stop(self):
+        self._t.join(timeout=1.0)
+
+    def close(self):
+        self._stop()
+"""
+    assert _lint_dir(tmp_path, m=src) == []
+
+
+# ---------------------------------------------------------------------------
+# pragma + baseline semantics
+# ---------------------------------------------------------------------------
+
+def test_pragma_with_reason_waives(tmp_path):
+    src = SLEEP_UNDER_LOCK.replace(
+        "time.sleep(0.1)",
+        "time.sleep(0.1)  # lint: allow(blocking-under-lock): test waiver")
+    assert _lint_dir(tmp_path, m=src) == []
+
+
+def test_pragma_on_line_above_waives(tmp_path):
+    src = SLEEP_UNDER_LOCK.replace(
+        "            time.sleep(0.1)",
+        "            # lint: allow(blocking-under-lock): test waiver\n"
+        "            time.sleep(0.1)")
+    assert _lint_dir(tmp_path, m=src) == []
+
+
+def test_pragma_without_reason_does_not_waive(tmp_path):
+    src = SLEEP_UNDER_LOCK.replace(
+        "time.sleep(0.1)",
+        "time.sleep(0.1)  # lint: allow(blocking-under-lock)")
+    new = _lint_dir(tmp_path, m=src)
+    assert len(new) == 1
+    assert new[0].detail.endswith("|no-reason")
+    assert "gives no reason" in new[0].message
+
+
+def test_baseline_roundtrip_waives_and_is_line_independent(tmp_path):
+    (tmp_path / "m.py").write_text(SLEEP_UNDER_LOCK)
+    base = tmp_path / "base.json"
+    # 1) finding is new without a baseline
+    new, tm = lint.run([str(tmp_path)], root=tmp_path, baseline_path=base)
+    assert len(new) == 1
+    # 2) write the baseline; the same run is now clean
+    lint.write_baseline(base, new)
+    new2, _ = lint.run([str(tmp_path)], root=tmp_path, baseline_path=base)
+    assert new2 == []
+    # 3) shift every line down: fingerprints are line-independent
+    (tmp_path / "m.py").write_text("# moved\n# moved\n" + SLEEP_UNDER_LOCK)
+    new3, _ = lint.run([str(tmp_path)], root=tmp_path, baseline_path=base)
+    assert new3 == []
+
+
+def test_main_exit_codes_per_rule(tmp_path):
+    """A seeded synthetic violation of EACH rule exits non-zero via
+    the same CLI entry ci.sh uses; a clean tree exits zero."""
+    violations = {
+        "lock-order": {"m": CYCLE_SRC},
+        "blocking-under-lock": {"m": SLEEP_UNDER_LOCK},
+        "fault-site": {"faults": MANIFEST_SRC,
+                       "m": "def f(faults, key):\n"
+                            "    faults.fire('cos.put', key)\n"},
+        "atomic-counter": {"m": "class E:\n"
+                                "    def __init__(self):\n"
+                                "        self.stats = StoreStats()\n"
+                                "    def bad(self):\n"
+                                "        self.stats.puts += 1\n"},
+        "resource-lifecycle": {"m": THREAD_LEAK},
+    }
+    for rule, files in violations.items():
+        d = tmp_path / rule
+        d.mkdir()
+        for name, src in files.items():
+            (d / f"{name}.py").write_text(src)
+        assert lint.main([str(d), "--no-baseline", "-q"]) == 1, rule
+    good = tmp_path / "good"
+    good.mkdir()
+    (good / "m.py").write_text("x = 1\n")
+    assert lint.main([str(good), "--no-baseline", "-q"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# the real tree: zero-findings gate + hierarchy extraction
+# ---------------------------------------------------------------------------
+
+def test_real_tree_lints_clean():
+    """The CI gate itself: src/repro with the checked-in baseline must
+    produce zero new findings."""
+    new, tm = lint.run([str(SRC)], root=REPO)
+    assert new == [], "\n".join(f.render() for f in new)
+    assert len(tm.locks) >= 25          # the tree's locks were modeled
+
+
+def test_real_tree_hierarchy_edges():
+    tm = scan_tree([str(SRC)], root=REPO)
+    edges, findings = lockgraph.build_edges(tm)
+    pairs = set(edges)
+    # the proxy stages payloads under _order_lock, then registers the
+    # rid under _state_lock: the hierarchy must order them
+    assert ("host._ShardProxy._order_lock",
+            "host._ShardProxy._state_lock") in pairs
+    # reconnect takes _conn_lock then publishes under _lock
+    assert ("transport.TcpTransport._conn_lock",
+            "transport.TcpTransport._lock") in pairs
+    # and the graph is acyclic: no lock-order cycle findings
+    cycle, _ = lockgraph.check(tm)
+    assert not [f for f in cycle if "cycle" in f.detail]
+
+
+def test_hierarchy_doc_is_current(tmp_path):
+    """docs/lock_hierarchy.md is generated — fail if someone edited
+    the lock structure without regenerating it."""
+    tm = scan_tree([str(SRC)], root=REPO)
+    edges, _ = lockgraph.build_edges(tm)
+    want = lockgraph.render_hierarchy(tm, edges)
+    have = (REPO / "docs" / "lock_hierarchy.md").read_text()
+    assert have == want, ("docs/lock_hierarchy.md is stale — regenerate "
+                          "with: PYTHONPATH=src python -m "
+                          "repro.devtools.lint src/repro "
+                          "--emit-hierarchy docs/lock_hierarchy.md")
+
+
+# ---------------------------------------------------------------------------
+# runtime LockWitness
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def witness_installed():
+    assert locks.current_witness() is None
+    yield
+    locks.install_witness(None)
+
+
+def test_witness_detects_dynamic_inversion(witness_installed):
+    w = LockWitness()
+    locks.install_witness(w)
+    a = locks.make_lock("t.a")
+    b = locks.make_lock("t.b")
+    with a:
+        with b:
+            pass
+    with b:
+        with a:                      # reverse order: inversion
+            pass
+    inv = w.inversions()
+    assert len(inv) == 1 and inv[0].kind == "dynamic"
+    assert (inv[0].first, inv[0].second) == ("t.b", "t.a")
+    with pytest.raises(AssertionError, match="inversions"):
+        w.assert_clean()
+
+
+def test_witness_consistent_order_clean(witness_installed):
+    w = LockWitness()
+    locks.install_witness(w)
+    a = locks.make_lock("t.a")
+    b = locks.make_lock("t.b")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert w.pairs_observed == 1
+    w.assert_clean()
+
+
+def test_witness_detects_static_inversion(witness_installed):
+    # static model says a-before-b; runtime does b-then-a just once —
+    # the dynamic check alone can't see it, the static one must
+    w = LockWitness(order={"t.a": frozenset({"t.b"})})
+    locks.install_witness(w)
+    a = locks.make_lock("t.a")
+    b = locks.make_lock("t.b")
+    with b:
+        with a:
+            pass
+    inv = w.inversions()
+    assert len(inv) == 1 and inv[0].kind == "static"
+    # same single order, but consistent with the model: clean
+    w2 = LockWitness(order={"t.a": frozenset({"t.b"})})
+    locks.install_witness(w2)
+    a2 = locks.make_lock("t.a")
+    b2 = locks.make_lock("t.b")
+    with a2:
+        with b2:
+            pass
+    w2.assert_clean()
+
+
+def test_witness_rlock_reentrancy_not_a_pair(witness_installed):
+    w = LockWitness()
+    locks.install_witness(w)
+    r = locks.make_rlock("t.r")
+    with r:
+        with r:                      # reentrant: not an ordered pair
+            pass
+    assert w.pairs_observed == 0
+    w.assert_clean()
+
+
+def test_witness_condition_over_witnessed_lock(witness_installed):
+    # threading.Condition must work over the proxy, both flavors
+    w = LockWitness()
+    locks.install_witness(w)
+    for mk in (locks.make_lock, locks.make_rlock):
+        lk = mk("t.c")
+        cond = threading.Condition(lk)
+        fired = []
+
+        def waiter():
+            with cond:
+                while not fired:
+                    cond.wait(timeout=1.0)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        with cond:
+            fired.append(1)
+            cond.notify()
+        t.join(timeout=2.0)
+        assert not t.is_alive()
+    w.assert_clean()
+
+
+def test_make_lock_without_witness_is_raw(witness_installed):
+    lk = locks.make_lock("t.raw")
+    assert type(lk) is type(threading.Lock())
+
+
+def test_witness_threads_have_independent_stacks(witness_installed):
+    # two threads each holding one of the locks is NOT an ordering
+    w = LockWitness()
+    locks.install_witness(w)
+    a = locks.make_lock("t.a")
+    b = locks.make_lock("t.b")
+    gate = threading.Barrier(2, timeout=5.0)
+
+    def hold(lk):
+        with lk:
+            gate.wait()              # both held concurrently
+            gate.wait()
+
+    ts = [threading.Thread(target=hold, args=(lk,)) for lk in (a, b)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=5.0)
+    assert w.pairs_observed == 0
+    w.assert_clean()

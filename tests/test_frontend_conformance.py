@@ -48,11 +48,28 @@ def _build(kind, tmp_path):
     raise ValueError(kind)
 
 
+@pytest.fixture
+def lock_witness():
+    """Runtime lock-order witness over every store the test builds:
+    locks created while it is installed report acquisitions, and any
+    inversion against the static hierarchy fails the test at teardown
+    (after close(), so shutdown-path orders are witnessed too)."""
+    from repro.core import locks
+    from repro.devtools.witness import LockWitness
+    w = LockWitness.with_static_order()
+    locks.install_witness(w)
+    try:
+        yield w
+    finally:
+        locks.install_witness(None)
+
+
 @pytest.fixture(params=FRONTENDS)
-def frontend(request, tmp_path):
+def frontend(request, tmp_path, lock_witness):
     st = _build(request.param, tmp_path)
     yield st
     st.close()
+    lock_witness.assert_clean()
 
 
 def test_conforms_to_protocol(frontend):
