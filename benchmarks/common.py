@@ -3,16 +3,34 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
 from repro.core import Clock, InfiniStore, StoreConfig
 from repro.core.ec import ECConfig
 from repro.core.gc_window import GCConfig
+from repro.obs import LatencyHistogram, quantile_us, summarize
 from repro.data.traces import TraceEvent
 
 MB = 1024 * 1024
+
+
+def lat_summary(samples_us: Iterable[float]) -> Dict[str, float]:
+    """Quantile summary through the SAME log-spaced histogram the store
+    exports (`repro.obs.metrics`): every BENCH json reports p50/p99/p999
+    with identical bucketing, so bench numbers and live `dump_metrics`
+    output are directly comparable."""
+    samples_us = list(samples_us)
+    h = LatencyHistogram()
+    for v in samples_us:
+        h.record(v)
+    out = summarize(h.snapshot())
+    if samples_us:
+        out["min_us"] = round(min(samples_us), 3)
+        out["mean_us"] = round(sum(samples_us) / len(samples_us), 3)
+        out["max_us"] = round(max(samples_us), 3)
+    return out
 
 
 def bench_store(*, elastic: bool = True, recovery: bool = True,
@@ -54,8 +72,18 @@ class ReplayResult:
     overhead: float = 0.0
 
     def p(self, series: str, q: float) -> float:
+        """Percentile (q in 0..100) through the shared histogram."""
         data = getattr(self, series)
-        return float(np.percentile(data, q)) if data else 0.0
+        if not data:
+            return 0.0
+        h = LatencyHistogram()
+        for v in data:
+            h.record(v)
+        return quantile_us(h.snapshot(), q / 100.0)
+
+    def lat_summaries(self) -> Dict[str, Dict[str, float]]:
+        return {"get": lat_summary(self.get_lat_us),
+                "put": lat_summary(self.put_lat_us)}
 
 
 def replay(store: InfiniStore, clock: Clock, events: List[TraceEvent],

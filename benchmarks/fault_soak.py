@@ -54,6 +54,9 @@ from repro.core import (Clock, FaultPlan, FaultPoint, HeartbeatConfig,
                         ShardedStore, ShardWorkerDied, StoreConfig)
 from repro.core.ec import ECConfig
 from repro.core.gc_window import GCConfig
+from repro.obs import ObsPlane
+
+from benchmarks.common import lat_summary
 
 MB = 1024 * 1024
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
@@ -114,11 +117,120 @@ def bench_overhead(size: int, repeats: int, max_repeats: int = 0) -> dict:
            "repeats": len(acks["off"]),
            "off_put_ack_ms": round(off_ms, 3),
            "armed_idle_put_ack_ms": round(armed_ms, 3),
+           "off_put_ack_us": lat_summary(a * 1e6 for a in acks["off"]),
+           "armed_idle_put_ack_us": lat_summary(
+               a * 1e6 for a in acks["armed_idle"]),
            "overhead_pct": round(overhead_pct, 2),
            "gate_overhead_max_pct": 2.0}
     assert overhead_pct <= 2.0, \
         f"disabled fault plane costs {overhead_pct:.2f}% PUT-ack (> 2%)"
     return out
+
+
+# ---------------------------------------------------------------------------
+# gate 1b: disabled observability-plane ack overhead
+# ---------------------------------------------------------------------------
+
+def bench_obs_overhead(size: int, repeats: int,
+                       max_repeats: int = 0) -> dict:
+    """PUT-ack latency, obs=None vs an ATTACHED-but-disabled ObsPlane.
+    Every instrumented site guards with one `obs is not None` check and
+    a disabled plane early-returns before touching buckets or rings, so
+    the delta must stay <= 2% — same methodology as bench_overhead."""
+    rng = np.random.default_rng(size)
+    plane = ObsPlane(enabled=False, name="bench-disabled")
+    stores = {
+        "off": InfiniStore(_cfg(faults=None), clock=Clock()),
+        "attached_disabled": InfiniStore(_cfg(faults=None, obs=plane),
+                                         clock=Clock()),
+    }
+    acks = {m: [] for m in stores}
+    for st in stores.values():
+        st.writeback.pause()                  # measure the ack path only
+    max_repeats = max_repeats or 4 * repeats
+    since_new_min = 0
+    for r in range(max_repeats):
+        data = rng.bytes(size)
+        improved = False
+        for mode, st in stores.items():
+            t0 = time.perf_counter()
+            st.put(f"obj{r}", data)
+            dt = time.perf_counter() - t0
+            if not acks[mode] or dt < min(acks[mode]):
+                improved = True
+            acks[mode].append(dt)
+        since_new_min = 0 if improved else since_new_min + 1
+        if r + 1 >= repeats and since_new_min >= 8:
+            break
+    for st in stores.values():
+        st.writeback.resume()
+        assert st.flush_writeback(timeout=600.0)
+        st.close()
+    snap = plane.snapshot()
+    recorded = sum(h["count"] for h in snap["histograms"].values())
+    assert recorded == 0, "disabled plane recorded samples"
+    assert not snap["spans"] and not snap["events"]
+    off_ms = min(acks["off"]) * 1e3
+    dis_ms = min(acks["attached_disabled"]) * 1e3
+    overhead_pct = (dis_ms - off_ms) / off_ms * 100.0
+    out = {"object_mb": size / MB,
+           "repeats": len(acks["off"]),
+           "off_put_ack_ms": round(off_ms, 3),
+           "attached_disabled_put_ack_ms": round(dis_ms, 3),
+           "off_put_ack_us": lat_summary(a * 1e6 for a in acks["off"]),
+           "attached_disabled_put_ack_us": lat_summary(
+               a * 1e6 for a in acks["attached_disabled"]),
+           "overhead_pct": round(overhead_pct, 2),
+           "gate_overhead_max_pct": 2.0}
+    assert overhead_pct <= 2.0, \
+        f"disabled obs plane costs {overhead_pct:.2f}% PUT-ack (> 2%)"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# gate 1c: flight recorder survives a real SIGKILL
+# ---------------------------------------------------------------------------
+
+def flight_recorder_soak(workdir: str) -> dict:
+    """SIGKILL one worker process mid-run, restart it, and require the
+    dead incarnation's flight file (mmap page-cache writes) to come
+    back as forensics on the parent plane — events AND mirrored spans,
+    tagged with the dead worker's epoch."""
+    plane = ObsPlane(name="flight-soak")
+    cfg = _cfg(faults=None, spill_dir=os.path.join(workdir, "spill"),
+               obs=plane)
+    st = ProcessShardedStore(cfg, num_shards=2, clock=Clock(),
+                             cos_root=os.path.join(workdir, "cos"),
+                             seed=7)
+    rng = np.random.default_rng(7)
+    try:
+        acked = {f"f{i}": rng.bytes(8_000) for i in range(8)}
+        for k, v in acked.items():
+            assert st.put(k, v) == 1
+        assert st.flush_writeback(timeout=600.0)
+        st.simulate_crash(shard=0)            # REAL SIGKILL
+        st.restart_shard(0)                   # reads forensics first
+        snap = st.snapshot_metrics()
+        forensics = [f for f in snap["forensics"]
+                     if f["source"] == "shard-0"]
+        assert forensics, "no forensics recovered after SIGKILL"
+        records = forensics[0]["records"]
+        kinds = {r.get("kind") for r in records}
+        assert "store.open" in kinds, kinds
+        assert "span" in kinds, kinds         # mirrored spans survived
+        epochs = {r.get("epoch") for r in records if "epoch" in r}
+        assert epochs, "records lost their epoch tags"
+        # the restarted worker replayed its journal: no acked-write loss
+        got = st.get_many(list(acked))
+        lost = [k for k, v in acked.items() if got[k] != v]
+        assert not lost, f"acked writes lost across SIGKILL: {lost[:8]}"
+    finally:
+        st.close()
+    return {"forensic_records": len(records),
+            "forensic_kinds": sorted(k for k in kinds if k),
+            "dead_epochs": sorted(epochs),
+            "acked_writes": len(acked),
+            "lost_acked_writes": 0}
 
 
 # ---------------------------------------------------------------------------
@@ -388,6 +500,13 @@ def run_bench(smoke: bool) -> dict:
     witness = LockWitness.with_static_order()
     _locks.install_witness(witness)
     overhead = bench_overhead(256 * 1024, repeats=16 if smoke else 48)
+    obs_overhead = bench_obs_overhead(256 * 1024,
+                                      repeats=16 if smoke else 48)
+    flight_dir = tempfile.mkdtemp(prefix="flight-soak-")
+    try:
+        flight = flight_recorder_soak(flight_dir)
+    finally:
+        shutil.rmtree(flight_dir, ignore_errors=True)
     runs = []
     for tag in ("a", "b"):                    # same seed, twice
         workdir = tempfile.mkdtemp(prefix=f"fault-soak-{tag}-")
@@ -416,6 +535,8 @@ def run_bench(smoke: bool) -> dict:
     return {"bench": "fault_soak", "smoke": smoke,
             "lock_witness": witness.snapshot(),
             "overhead": overhead,
+            "obs_overhead": obs_overhead,
+            "flight_recorder": flight,
             "chaos": {"seed": CHAOS_SEED,
                       "reproducible_log": reproducible,
                       "runs": runs},
@@ -435,10 +556,16 @@ def run() -> list:
     result = run_bench(smoke=True)
     _write(result, os.path.join(ROOT, "BENCH_faults.json"))
     ov = result["overhead"]
+    oo = result["obs_overhead"]
+    fl = result["flight_recorder"]
     r0 = result["chaos"]["runs"][0]
     n0 = result["net_chaos"]["runs"][0]
     return [f"fault_plane_idle_overhead,{ov['overhead_pct']},"
             f"% of {ov['off_put_ack_ms']}ms PUT ack",
+            f"obs_plane_disabled_overhead,{oo['overhead_pct']},"
+            f"% of {oo['off_put_ack_ms']}ms PUT ack",
+            f"flight_recorder_sigkill,{fl['forensic_records']},"
+            f"records recovered lost={fl['lost_acked_writes']}",
             f"chaos_soak,{r0['faults_fired']},"
             f"faults lost={r0['lost_acked_writes']} "
             f"stranded={r0['stranded_indoubt_after_restart']}",
@@ -461,6 +588,14 @@ def main() -> None:
     print(f"idle fault plane | put ack {ov['off_put_ack_ms']} ms -> "
           f"{ov['armed_idle_put_ack_ms']} ms "
           f"({ov['overhead_pct']:+.2f}%, gate <= 2%)")
+    oo = result["obs_overhead"]
+    print(f"disabled obs plane | put ack {oo['off_put_ack_ms']} ms -> "
+          f"{oo['attached_disabled_put_ack_ms']} ms "
+          f"({oo['overhead_pct']:+.2f}%, gate <= 2%)")
+    fl = result["flight_recorder"]
+    print(f"flight recorder | SIGKILL -> {fl['forensic_records']} "
+          f"forensic records {fl['forensic_kinds']} | epochs "
+          f"{fl['dead_epochs']} | lost {fl['lost_acked_writes']}")
     for i, r in enumerate(result["chaos"]["runs"]):
         print(f"chaos run {i} | {r['faults_fired']} faults "
               f"{r['fired_by_site']} | acked {r['acked_writes']} "

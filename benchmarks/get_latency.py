@@ -46,6 +46,8 @@ from repro.core import Clock, InfiniStore, StoreConfig
 from repro.core.ec import ECConfig
 from repro.core.gc_window import GCConfig
 
+from benchmarks.common import lat_summary
+
 MB = 1024 * 1024
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
@@ -120,6 +122,7 @@ def bench_point(size: int, repeats: int) -> dict:
         for _ in range(rounds):
             lats += _timed_gets(st, objs)
         out[f"{mode}_warm_ms"] = round(min(lats) * 1e3, 2)
+        out[f"{mode}_warm_us"] = lat_summary(v * 1e6 for v in lats)
         st.close()
         # aged: DEGRADED-bucket SMS hits (serial pays inline migration)
         st = make_store(pipelined=pipelined)
@@ -127,6 +130,7 @@ def bench_point(size: int, repeats: int) -> dict:
         _age_to_degraded(st)
         lats = _timed_gets(st, objs)
         out[f"{mode}_aged_ms"] = round(min(lats) * 1e3, 2)
+        out[f"{mode}_aged_us"] = lat_summary(v * 1e6 for v in lats)
         st.close()
         # degraded: slabs reclaimed, every chunk demand-read from COS
         st = make_store(pipelined=pipelined)
@@ -135,6 +139,7 @@ def bench_point(size: int, repeats: int) -> dict:
             st.inject_failure(fid)
         lats = _timed_gets(st, objs)
         out[f"{mode}_degraded_ms"] = round(min(lats) * 1e3, 2)
+        out[f"{mode}_degraded_us"] = lat_summary(v * 1e6 for v in lats)
         if pipelined:
             out["cos_fallback_reads"] = st.stats.cos_fallback_reads
             out["decode_batches"] = st.stats.decode_batches

@@ -36,6 +36,8 @@ from repro.core import Clock, InfiniStore, StoreConfig
 from repro.core.ec import ECConfig
 from repro.core.gc_window import GCConfig
 
+from benchmarks.common import lat_summary
+
 MB = 1024 * 1024
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
@@ -87,6 +89,8 @@ def bench_point(size: int, repeats: int) -> dict:
             assert len(got) == size
         out[f"{mode}_put_ack_ms"] = round(min(acks) * 1e3, 2)
         out[f"{mode}_get_ms"] = round(min(get_lats) * 1e3, 2)
+        out[f"{mode}_put_ack_us"] = lat_summary(a * 1e6 for a in acks)
+        out[f"{mode}_get_us"] = lat_summary(g * 1e6 for g in get_lats)
         if mode == "async":
             out["get_gather_invokes_per_op"] = round(
                 (st.stats.gather_invokes - inv0) / repeats, 2)

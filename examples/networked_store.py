@@ -29,6 +29,13 @@ a partition stranded in doubt.
 `HeartbeatConfig` defaults are lazy (0.5s pings, DOWN after 10s) to
 stay quiet on loaded boxes; this demo runs a hot detector so the
 failure story fits in seconds.
+
+The demo also attaches an `ObsPlane` (`StoreConfig(obs=...)`): every
+op is traced ACROSS the TCP frames into the worker processes, latency
+histograms merge back into one `snapshot_metrics()` view, and the
+SIGKILL'd worker's last spans come back as flight-recorder forensics.
+See `docs/observability.md` for the site registry, the span taxonomy,
+and the Prometheus export format.
 """
 import os
 import shutil
@@ -42,6 +49,7 @@ from repro.core import (Clock, HeartbeatConfig, ProcessShardedStore,
                         ShardWorkerDied, StoreConfig)
 from repro.core.ec import ECConfig
 from repro.core.gc_window import GCConfig
+from repro.obs import ObsPlane
 
 MB = 1024 * 1024
 
@@ -69,6 +77,7 @@ def main() -> None:
             function_capacity=8 * MB,
             gc=GCConfig(gc_interval=1e9),
             spill_dir=spill_root,
+            obs=ObsPlane(name="demo"),     # tracing + histograms + flight
         ),
         num_shards=2,
         clock=Clock(),
@@ -133,6 +142,22 @@ def main() -> None:
     assert all(store.get(k) == v for k, v in vals.items())
     assert store.flush_writeback(timeout=120.0)
     print("SIGKILL + restart on shard 1: journal replayed, reads ok")
+
+    # 6. one merged observability view (docs/observability.md): worker
+    #    histograms sum into the frontend's, spans from both sides of
+    #    the socket stitch by trace id, and the SIGKILL'd worker's last
+    #    pre-kill spans came back as dead-epoch forensics
+    snap = store.snapshot_metrics()
+    rpc = snap["histograms"]["rpc.roundtrip_us"]
+    print(f"rpc roundtrip: n={rpc['count']} p50={rpc['p50_us']}us "
+          f"p99={rpc['p99_us']}us")
+    traces = {s["trace_id"] for s in snap["spans"]}
+    print(f"{len(snap['spans'])} spans across {len(traces)} traces, "
+          f"transport totals {snap['transport']['totals']}")
+    for f in snap["forensics"]:
+        kinds = {r.get("kind") for r in f["records"]}
+        print(f"forensics from dead {f['source']}: "
+              f"{len(f['records'])} records, kinds {sorted(kinds)}")
 
     assert store.close() is True
     shutil.rmtree(spill_root, ignore_errors=True)

@@ -33,6 +33,11 @@ python benchmarks/spill_overhead.py --smoke
 # counts the box can run in parallel
 # (writes BENCH_shard_smoke.json)
 python benchmarks/shard_scaleout.py --smoke
+# observability export gate: drives a store with an enabled ObsPlane,
+# asserts the Prometheus dump parses and contains every HISTOGRAM_SITES
+# name, the JSON dump mirrors the full registry, and the
+# ISTORE_METRICS_DUMP atexit hook leaves a parseable file behind
+python scripts/check_metrics_dump.py
 # deterministic chaos soak: seeded fault schedule (COS errors/throttle,
 # slab kill, torn journal tail, 2PC leader death) + full restart must
 # lose zero acked writes, strand zero in-doubt tickets, and reproduce
@@ -40,5 +45,8 @@ python benchmarks/shard_scaleout.py --smoke
 # Also runs the network-chaos gate over the TCP transport: seeded
 # net.drop/delay/dup on the PUT stream plus a net.partition that eats a
 # 2PC commit frame — zero acked loss, zero stranded tickets, zero
-# stale-epoch acks, and the byte-identical net fault log twice
+# stale-epoch acks, and the byte-identical net fault log twice.
+# Also gates the observability plane: a disabled (attached) ObsPlane
+# must cost <= 2% PUT-ack overhead, and a REAL worker SIGKILL must
+# leave recoverable flight-recorder forensics behind
 python benchmarks/fault_soak.py --smoke

@@ -219,6 +219,11 @@ class FaultPlan:
         self._lock = threading.Lock()
         self.log: List[Tuple[str, int, str]] = []
         self._sleep: Callable[[float], None] = time.sleep
+        # optional ObsPlane (repro.obs): every trigger is mirrored into
+        # the flight recorder ("fault.fire"), so post-crash forensics
+        # show which injected faults preceded the failure. Set by the
+        # owning store; NOT pickled (each process re-attaches its own).
+        self.obs = None
         for p in points:
             self.add(p)
 
@@ -249,6 +254,9 @@ class FaultPlan:
             self.log.append((site, hit, armed.action))
             latency = armed.latency_s
             action = armed.action
+        obs = self.obs
+        if obs is not None:
+            obs.event("fault.fire", at=site, hit=hit, action=action)
         if latency > 0.0:
             self._sleep(latency)
         maker = _RAISING.get(action)
@@ -278,6 +286,7 @@ class FaultPlan:
             state["_hits"] = dict(self._hits)  # count objects pickle
         del state["_lock"]
         state["_sleep"] = None                 # may be a test lambda
+        state["obs"] = None                    # re-attached per process
         return state
 
     def __setstate__(self, state):

@@ -75,6 +75,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import FlightRecorder
+
 from .clock import Clock
 from .ipc import ArenaBroken, ShmArena, desc_watermark, pack_payload, \
     unpack_payload
@@ -146,6 +148,10 @@ def _worker_main(spec: dict) -> None:
         # in the spec and applied before "ready"
         for attr, val in spec.get("cos_latency", {}).items():
             setattr(store.cos, attr, val)
+        if store.obs is not None:
+            # shm workers have no reconnect epochs; pin epoch 1 so
+            # flight records are attributable like the TCP worker's
+            store.obs.set_epoch(1)
     except BaseException as e:                        # noqa: BLE001
         send(("err", -1, _portable_exc(e)))
         return
@@ -294,7 +300,20 @@ class _WorkerLoop:
 
     # -- dispatch ----------------------------------------------------------
 
-    def dispatch(self, op: str, rid: int, p) -> None:  # noqa: C901
+    def dispatch(self, op: str, rid: int, p) -> None:
+        # trace envelope: _ShardProxy._rpc wraps the payload when the
+        # parent has an ambient span; adopting it here means every span
+        # the store opens below stitches into the parent's trace
+        if type(p) is tuple and len(p) == 3 and p[0] == "_tctx":
+            _, tctx, p = p
+            obs = self.store.obs
+            if obs is not None:
+                with obs.adopt(tctx):
+                    self._dispatch(op, rid, p)
+                return
+        self._dispatch(op, rid, p)
+
+    def _dispatch(self, op: str, rid: int, p) -> None:  # noqa: C901
         store = self.store
         if op == "put":
             key, desc = p
@@ -354,6 +373,8 @@ class _WorkerLoop:
                                                         commit=commit))
         elif op == "stats":
             self._reply_sync(rid, lambda: store.stats.as_dict())
+        elif op == "obs":
+            self._reply_sync(rid, store.snapshot_metrics)
         elif op == "snapshot":
             self._reply_sync(rid, store.snapshot_metadata)
         elif op == "cos_keys":
@@ -402,9 +423,11 @@ class _ShardProxy:
                  transport: str = "shm",
                  heartbeat: Optional[HeartbeatConfig] = None,
                  faults=None,
+                 obs=None,
                  on_reconnect=None) -> None:
         self.shard_id = shard_id
         self.name = name
+        self._obs = obs              # parent-side plane (may be None)
         self.spill_dir = cfg.spill_dir
         self._order_lock = make_lock("host._ShardProxy._order_lock")
         self._state_lock = make_lock("host._ShardProxy._state_lock")
@@ -435,6 +458,7 @@ class _ShardProxy:
                 arena_bytes=arena_bytes, boot_timeout_s=boot_timeout_s)
         else:
             raise ValueError(f"unknown shard transport {transport!r}")
+        self._t.obs = obs            # heartbeat/reconnect instrumentation
         resources.register(self)
         try:
             self.pid = self._t.start(on_message=self._on_message,
@@ -518,11 +542,18 @@ class _ShardProxy:
     def _rpc(self, op: str, payload=None, *, pack=None, post=None,
              deadline_s=_USE_DEFAULT) -> StoreFuture:
         fut = StoreFuture()
+        obs = self._obs
+        tctx = obs.ctx() if obs is not None else None
+        t0 = time.perf_counter() if obs is not None else 0.0
         with self._order_lock:
             rid = None
             try:
                 if pack is not None:
                     payload = pack()
+                if tctx is not None:
+                    # trace envelope: the worker loop unwraps + adopts
+                    # it, stitching worker spans into the parent trace
+                    payload = ("_tctx", tctx, payload)
                 with self._state_lock:
                     if not self._alive:
                         raise ShardWorkerDied(
@@ -549,6 +580,11 @@ class _ShardProxy:
                         str(e), shard_id=self.shard_id,
                         epoch=self._t.epoch, op=op) from e
                 raise
+        if obs is not None:
+            def _timed(_f, obs=obs, t0=t0):
+                obs.record("rpc.roundtrip_us",
+                           (time.perf_counter() - t0) * 1e6)
+            fut.add_done_callback(_timed)
         return fut
 
     def _pack_items(self, items) -> List[tuple]:
@@ -736,6 +772,14 @@ class _ShardProxy:
         if self._t.kind != "tcp":
             return {}
         return self._rpc("xstats").result()
+
+    def snapshot_metrics(self) -> dict:
+        """The worker's ObsPlane snapshot ({} when the worker is down
+        or was built without a plane)."""
+        try:
+            return self._rpc("obs").result() or {}
+        except ConnectionError:
+            return {}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -948,6 +992,7 @@ class ProcessShardedStore(ShardedStore):
                            transport=self._transport_kind,
                            heartbeat=self._heartbeat,
                            faults=getattr(self.cfg, "faults", None),
+                           obs=self.obs,
                            on_reconnect=self._shard_reconnected)
 
     def _shard_reconnected(self, shard_id: int, epoch: int) -> None:
@@ -965,12 +1010,55 @@ class ProcessShardedStore(ShardedStore):
         RECONNECTING), current epoch, last-heartbeat age."""
         return [s.transport_health() for s in self.shards]
 
+    # -- observability fan-in -----------------------------------------------
+
+    def _shard_metric_snapshots(self) -> List[dict]:
+        """Each live worker's ObsPlane snapshot (per-process histograms,
+        spans, flight events) for `snapshot_metrics()` to merge."""
+        return [snap for snap in
+                (s.snapshot_metrics() for s in self.shards) if snap]
+
+    def transport_metrics(self) -> dict:
+        """Per-shard transport health + worker fencing counters, with
+        store-wide totals (stale frames are counted on BOTH ends:
+        parent reader and worker server)."""
+        per: List[dict] = []
+        totals = {"reconnects": 0, "fenced_connects": 0,
+                  "stale_acks_suppressed": 0, "dup_frames_dropped": 0,
+                  "stale_frames_dropped_client": 0,
+                  "stale_frames_dropped_server": 0}
+        for s in self.shards:
+            h = s.transport_health()
+            try:
+                x = s.transport_stats()
+            except ConnectionError:
+                x = {}
+            per.append({"shard": s.shard_id, "health": h, "xstats": x})
+            totals["reconnects"] += h.get("reconnects") or 0
+            totals["stale_frames_dropped_client"] += \
+                h.get("stale_frames_dropped") or 0
+            totals["fenced_connects"] += x.get("fenced_connects", 0)
+            totals["stale_acks_suppressed"] += \
+                x.get("stale_acks_suppressed", 0)
+            totals["dup_frames_dropped"] += x.get("dup_frames_dropped", 0)
+            totals["stale_frames_dropped_server"] += \
+                x.get("stale_frames_dropped", 0)
+        return {"per_shard": per, "totals": totals}
+
     def restart_shard(self, i: int) -> _ShardProxy:
         """Respawn shard i's worker: the old process (usually already
         SIGKILLed) is reaped — pipe closed, rings unlinked — and the
         fresh worker's `InfiniStore` replays `<spill>/shard-<i>/`
         before reporting ready; the inherited sweep then settles any
         ticket the kill left in doubt."""
+        obs = self.obs
+        if obs is not None:
+            # recover the dead worker's flight file BEFORE the respawn
+            # truncates it: its pre-kill events/spans become forensics
+            path = os.path.join(self._shard_spill_dir(i), "flight.bin")
+            records = FlightRecorder.read_file(path)
+            if records:
+                obs.add_forensics(f"shard-{i}", records, shard=i)
         self.shards[i].reap()
         return super().restart_shard(i)
 

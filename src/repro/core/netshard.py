@@ -201,6 +201,12 @@ class _NetShardServer:
         # store-side prepared state stays journaled in-doubt and the
         # leader sweep rolls it per the durable decision
         self.loop.preps.clear()
+        obs = self.store.obs
+        if obs is not None:
+            # spans/events recorded from here on belong to this epoch;
+            # post-SIGKILL forensics can attribute them across restarts
+            obs.set_epoch(ep)
+            obs.event("epoch.bump", epoch=ep)
         try:
             c.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             c.settimeout(None)

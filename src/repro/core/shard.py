@@ -94,6 +94,7 @@ from repro.core.spill import SpillJournal
 from repro.core.store import (_STAT_FIELDS, InfiniStore, StoreConfig,
                               StoreStats)
 from repro.core.writeback import StoreFuture
+from repro.obs import NOOP_CM, ObsPlane, merge_metric_snapshots
 
 
 class HashRouter:
@@ -178,6 +179,21 @@ class ShardedStore:
         self.faults = cfg.faults
         if cfg.faults is not None:
             self.cos.faults = cfg.faults
+        # observability plane (repro.obs), resolved BEFORE the shards
+        # are built: the front-end binds the root flight file first, so
+        # in-process shards' own binds no-op (one file per crash
+        # domain) while worker processes bind their shard directories.
+        # ISTORE_METRICS_DUMP auto-attaches a plane like InfiniStore.
+        if cfg.obs is None and os.environ.get("ISTORE_METRICS_DUMP"):
+            cfg.obs = ObsPlane(name="frontend")
+        self.obs = cfg.obs
+        if self.obs is not None:
+            if self._spill_root is not None:
+                self.obs.bind_flight(
+                    os.path.join(self._spill_root, "flight.bin"))
+            if cfg.faults is not None:
+                # leader-side fires mirror on the front-end's copy
+                cfg.faults.obs = self.obs
         self.shards: List[InfiniStore] = [
             self._make_shard(i) for i in range(self.num_shards)]
         # leader decision journal (2PC in-doubt closure): the durable
@@ -244,6 +260,8 @@ class ShardedStore:
         daemon restart, while the other shards keep serving. Any 2PC
         batch the replay found in doubt is resolved against the
         leader's decisions before this returns."""
+        if self.obs is not None:
+            self.obs.event("shard.restart", shard=i)
         self.shards[i] = self._make_shard(i)
         self.resolve_indoubt()
         return self.shards[i]
@@ -345,6 +363,9 @@ class ShardedStore:
                     all_answered = False
                     continue
                 out[t] = "commit" if commit else "abort"
+                if self.obs is not None:
+                    self.obs.event("2pc.indoubt_resolved",
+                                   ticket=t, decision=out[t])
         with self._tlock:
             candidates = [t for t in self._decisions
                           if t not in self._inflight_tickets]
@@ -468,8 +489,11 @@ class ShardedStore:
 
     def get_many_async(self, keys) -> StoreFuture:
         groups = self._scatter(dict.fromkeys(keys))
-        return self._join([self.shards[sid].get_many_async(sub)
-                           for sid, sub in groups.items()])
+        obs = self.obs
+        with (obs.span("client.get_many", shards=len(groups))
+              if obs is not None else NOOP_CM):
+            return self._join([self.shards[sid].get_many_async(sub)
+                               for sid, sub in groups.items()])
 
     def get_many(self, keys) -> Dict[str, Optional[bytes]]:
         return self.get_many_async(keys).result()
@@ -517,24 +541,32 @@ class ShardedStore:
         groups: Dict[int, List] = {}
         for k, v in items:
             groups.setdefault(self.router.shard_of(k), []).append((k, v))
-        if len(groups) == 1:
-            # single-shard fast path: the shard's own put_many_async
-            # captures payloads at submission (snapshot copy in-process,
-            # arena copy over IPC) — snapshotting here too would be a
-            # second full memcpy of the batch
-            sid = next(iter(groups))
-            return self.shards[sid].put_many_async(
-                groups[sid], raise_on_conflict=raise_on_conflict)
-        # cross-shard: the leader thread touches payloads AFTER this
-        # returns, so mutable buffers must be snapshotted NOW — the
-        # caller may reuse them the moment this returns
-        groups = {sid: [(k, InfiniStore._snapshot_value(v))
-                        for k, v in sub]
-                  for sid, sub in groups.items()}
-        fut = StoreFuture()
-        self._leader.submit(self._cross_shard_put, groups,
-                            raise_on_conflict, fut)
-        return fut
+        obs = self.obs
+        with (obs.span("client.put_many", n=len(items),
+                       shards=len(groups))
+              if obs is not None else NOOP_CM):
+            if len(groups) == 1:
+                # single-shard fast path: the shard's own put_many_async
+                # captures payloads at submission (snapshot copy
+                # in-process, arena copy over IPC) — snapshotting here
+                # too would be a second full memcpy of the batch
+                sid = next(iter(groups))
+                return self.shards[sid].put_many_async(
+                    groups[sid], raise_on_conflict=raise_on_conflict)
+            # cross-shard: the leader thread touches payloads AFTER this
+            # returns, so mutable buffers must be snapshotted NOW — the
+            # caller may reuse them the moment this returns
+            groups = {sid: [(k, InfiniStore._snapshot_value(v))
+                            for k, v in sub]
+                      for sid, sub in groups.items()}
+            fut = StoreFuture()
+            # executor hop: carry the client span's context onto the
+            # leader thread so the 2PC span stitches under it
+            self._leader.submit(
+                obs.bind_current(self._cross_shard_put)
+                if obs is not None else self._cross_shard_put,
+                groups, raise_on_conflict, fut)
+            return fut
 
     def _cross_shard_put(self, groups: Dict[int, List],
                          raise_on_conflict: bool, fut: StoreFuture) -> None:
@@ -552,9 +584,13 @@ class ShardedStore:
         ticket = next(self._tickets)
         with self._tlock:
             self._inflight_tickets.add(ticket)
+        obs = self.obs
         try:
-            return self._cross_shard_rounds(ticket, groups,
-                                            raise_on_conflict)
+            with (obs.span("leader.2pc", ticket=ticket,
+                           shards=len(groups))
+                  if obs is not None else NOOP_CM):
+                return self._cross_shard_rounds(ticket, groups,
+                                                raise_on_conflict)
         finally:
             with self._tlock:
                 self._inflight_tickets.discard(ticket)
@@ -729,6 +765,10 @@ class ShardedStore:
         states = {s["health"]["state"] for s in shards}
         with self._tlock:
             decisions = sorted(self._decisions)
+        # ONE aggregated counter snapshot: every derived ratio below
+        # comes from this dict, not from fresh per-ratio counter reads
+        # (see StoreStats.derived)
+        stats = self.stats.as_dict()
         return {"router": self.router.snapshot(),
                 "num_shards": self.num_shards,
                 "balance": self.shard_balance(),
@@ -747,5 +787,53 @@ class ShardedStore:
                     # in-process shards
                     "shard_transports": [
                         s["health"].get("transport") for s in shards]},
-                "stats": self.stats.as_dict(),
+                "stats": stats,
+                "derived": StoreStats.derived(stats),
                 "shards": shards}
+
+    # ------------------------------------------------------------------
+    # unified metrics export (repro.obs)
+    # ------------------------------------------------------------------
+
+    def _shard_metric_snapshots(self) -> List[Dict]:
+        """Plane snapshots beyond the front-end's own. In-process
+        shards SHARE the front-end plane (their spans and histogram
+        samples are already in its snapshot), so there is nothing extra
+        here; the process host overrides this with one RPC-collected
+        snapshot per worker."""
+        return []
+
+    def transport_metrics(self) -> Dict:
+        """Per-shard transport counters + summed totals. In-process
+        shards have no transport; the process host overlays heartbeat
+        health and the PR-8 fencing counters (stale_acks_suppressed,
+        dup_frames_dropped, fenced_connects, stale_frames_dropped,
+        reconnects)."""
+        return {"per_shard": [], "totals": {}}
+
+    def snapshot_metrics(self) -> Dict:
+        """Store-wide unified observability export: the front-end
+        plane's snapshot merged with every worker process's (histograms
+        sum bucket-wise; spans stitch by trace id; flight events and
+        forensics concatenate), plus the aggregated store counters and
+        the transport section."""
+        snaps = []
+        if self.obs is not None:
+            snaps.append(self.obs.snapshot())
+        snaps.extend(self._shard_metric_snapshots())
+        merged = merge_metric_snapshots(snaps)
+        merged["counters"] = self.stats.as_dict()
+        merged["transport"] = self.transport_metrics()
+        return merged
+
+    def dump_metrics(self, path: str) -> str:
+        """Write `snapshot_metrics()` to `path` — Prometheus text, or
+        JSON when the path ends in `.json`. Returns the path."""
+        from repro.obs.metrics import dump_json, to_prometheus
+        snap = self.snapshot_metrics()
+        if path.endswith(".json"):
+            dump_json(snap, path)
+        else:
+            with open(path, "w") as f:
+                f.write(to_prometheus(snap))
+        return path

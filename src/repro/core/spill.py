@@ -81,6 +81,7 @@ import numpy as np
 
 from repro.core.locks import make_rlock
 from repro.core.payload import as_u8, payload_nbytes
+from repro.obs import NOOP_CM
 
 _MAGIC = 0x53504C31                      # "SPL1"
 _MAGIC_S = struct.Struct("<I")
@@ -179,6 +180,10 @@ class SpillJournal:
         # the (possibly async) frame writer, "spill.torn_close" tears
         # the unsynced tail on a hard close.
         self.faults = faults
+        # optional ObsPlane (repro.obs), attached by the owning store
+        # after construction: "journal.append" / "journal.sync" spans
+        # around the ack-path journal work
+        self.obs = None
         self.dir = Path(path)
         self.dir.mkdir(parents=True, exist_ok=True)
         # inter-process exclusivity: two journals on the same directory
@@ -348,15 +353,22 @@ class SpillJournal:
         """Journal one pending write BEFORE it is acknowledged. Returns
         the record's seq (handed back via `mark_persisted`). In group-
         commit mode the frame is durable only after the next `sync()`."""
-        with self._lock:
-            return self._append_locked(key, data)
+        obs = self.obs
+        with (obs.span("journal.append")
+              if obs is not None else NOOP_CM):
+            with self._lock:
+                return self._append_locked(key, data)
 
     def append_many(self, items) -> List[int]:
         """Batch append (one lock round for a PUT's whole chunk set —
         the per-record overhead matters on the ack path). items:
         iterable of (key, payload). Returns the seqs in order."""
-        with self._lock:
-            return [self._append_locked(k, d) for k, d in items]
+        items = list(items)
+        obs = self.obs
+        with (obs.span("journal.append", n=len(items))
+              if obs is not None else NOOP_CM):
+            with self._lock:
+                return [self._append_locked(k, d) for k, d in items]
 
     def _append_locked(self, key: str, data) -> int:
         if self.faults is not None:
@@ -412,11 +424,14 @@ class SpillJournal:
         acknowledging the writes those records cover."""
         if self.faults is not None:
             self.faults.fire("spill.sync")
-        with self._lock:
-            if self._closed:
-                return
-            self._submit(("flush",))
-        self._drain()
+        obs = self.obs
+        with (obs.span("journal.sync")
+              if obs is not None else NOOP_CM):
+            with self._lock:
+                if self._closed:
+                    return
+                self._submit(("flush",))
+            self._drain()
 
     # ---- internal writer --------------------------------------------------
 

@@ -60,6 +60,7 @@ from __future__ import annotations
 import itertools
 import json
 import logging
+import os
 import shutil
 import tempfile
 import threading
@@ -89,6 +90,8 @@ from repro.core.sms import SMS
 from repro.core.spill import SpillJournal
 from repro.core.versioning import Meta, MetadataTable, PersistentBuffer
 from repro.core.writeback import StoreFuture, WritebackQueue
+from repro.obs import NOOP_CM, ObsPlane, to_prometheus
+from repro.obs.metrics import dump_json
 
 MB = 1024 * 1024
 
@@ -140,6 +143,13 @@ class StoreConfig:
     # journal, and the writeback writer; None (default) keeps every
     # instrumented site a single attribute check
     faults: Optional[FaultPlan] = None
+    # ---- observability plane (repro.obs) -------------------------------
+    # an optional ObsPlane threaded through the same layers as `faults`
+    # (client daemon, writeback writer, GET I/O executor, spill journal,
+    # and across the shard transports so worker-process spans stitch
+    # into the frontend's trace); None (default) keeps every
+    # instrumented site a single attribute check
+    obs: Optional[ObsPlane] = None
     # ---- crash-consistent writeback spill (§5.3.2 durability) ----------
     # The durable half of the persistent buffer: enqueued writes are
     # journaled to an append-only, CRC-framed, segment-rotated local log
@@ -289,8 +299,28 @@ class StoreStats:
 
     @property
     def hit_ratio(self) -> float:
-        tot = self.sms_chunk_hits + self.sms_chunk_misses
-        return self.sms_chunk_hits / tot if tot else 0.0
+        return self.derived(self.as_dict())["hit_ratio"]
+
+    @staticmethod
+    def derived(snap: Dict[str, int]) -> Dict[str, float]:
+        """Ratios computed from ONE `as_dict()` snapshot, so each
+        numerator/denominator pair comes from the same read pass.
+        Reading the live counters once per ratio (the old pattern) let
+        in-flight traffic skew a ratio's own terms against each other;
+        a single snapshot keeps every reported ratio internally
+        consistent (still approximate vs other counters — see the class
+        docstring's consistency model)."""
+        hits, misses = snap["sms_chunk_hits"], snap["sms_chunk_misses"]
+        tot = hits + misses
+        warmed = snap["prefetch_hits"] + snap["prefetch_wasted"]
+        gets = snap["gets"]
+        return {"hit_ratio": hits / tot if tot else 0.0,
+                "prefetch_efficiency":
+                    snap["prefetch_hits"] / warmed if warmed else 0.0,
+                "cos_fallback_per_get":
+                    snap["cos_fallback_reads"] / gets if gets else 0.0,
+                "decode_batches_per_get":
+                    snap["decode_batches"] / gets if gets else 0.0}
 
 
 @dataclass
@@ -344,6 +374,7 @@ class StoreFrontend(Protocol):
     def gc_tick(self) -> None: ...
     def cos_keys(self, prefix: str = "") -> List[str]: ...
     def snapshot_metadata(self): ...
+    def snapshot_metrics(self) -> Dict: ...
 
 
 class InfiniStore:
@@ -388,6 +419,16 @@ class InfiniStore:
         self.stats = StoreStats()
         self.rng = np.random.default_rng(seed)
         self._lock = make_rlock("store.InfiniStore._lock")
+        # observability plane (repro.obs): threaded through the same
+        # layers as `faults`. ISTORE_METRICS_DUMP=<path> auto-attaches
+        # an enabled plane so the atexit Prometheus dump has a source
+        # even when the caller configured none.
+        if cfg.obs is None and os.environ.get("ISTORE_METRICS_DUMP"):
+            cfg.obs = ObsPlane(name=name or "store")
+        self._obs = cfg.obs
+        if cfg.faults is not None and self._obs is not None:
+            # mirror fault-plane fires into the flight recorder
+            cfg.faults.obs = self._obs
         # crash-consistent spill journal (§5.3.2): the writeback queue
         # appends every enqueue here before the PUT acks; metadata
         # records ("meta/<key>|<ver>") journal the table entry so a
@@ -415,7 +456,15 @@ class InfiniStore:
                 spill_dir, segment_bytes=cfg.spill_segment_bytes,
                 fsync=cfg.spill_fsync, sync_each=False,
                 faults=cfg.faults)
+            self.spill.obs = self._obs
         self.spill_dir = spill_dir if self.spill is not None else None
+        if self._obs is not None and self.spill_dir is not None:
+            # one flight file per crash domain (= process): first bind
+            # wins, so a worker process binds its shard directory here
+            # while thread shards under a ShardedStore no-op (the
+            # front-end bound the root's file before building shards)
+            self._obs.bind_flight(
+                os.path.join(self.spill_dir, "flight.bin"))
         self.writeback = WritebackQueue(
             self.cos, max_depth=cfg.writeback_depth,
             max_retries=cfg.writeback_retries,
@@ -424,7 +473,7 @@ class InfiniStore:
             spill=self.spill,
             name=f"cos-writeback{tag}",
             degraded_after=cfg.writeback_degraded_after,
-            faults=cfg.faults)
+            faults=cfg.faults, obs=self._obs)
         # chunk key -> function id (the daemon's chunk-function mapping)
         self.chunk_map: Dict[str, int] = {}
         # daemon's piggybacked view of each function's insertion state
@@ -492,6 +541,9 @@ class InfiniStore:
         # RecoveryManager._download serve them like live pending data)
         if self.spill is not None:
             self._replay_spill()
+        if self._obs is not None:
+            self._obs.event("store.open", store=name or "store",
+                            pid=os.getpid())
 
     # ------------------------------------------------------------------
     # async plumbing
@@ -501,6 +553,12 @@ class InfiniStore:
         self._daemon_ident = threading.get_ident()
 
     def _submit(self, fn) -> StoreFuture:
+        obs = self._obs
+        if obs is not None:
+            # executor hop: the daemon runs `fn` on its own thread —
+            # close it over the submitter's ambient trace context so
+            # daemon-side spans stitch under the caller's span
+            fn = obs.bind_current(fn)
         fut = StoreFuture()
         if threading.get_ident() == self._daemon_ident:
             # re-entrant call from the daemon thread itself: run inline
@@ -1128,24 +1186,34 @@ class InfiniStore:
         items = list(items.items()) if isinstance(items, dict) \
             else list(items)
         items = [(k, self._snapshot_value(v)) for k, v in items]
-        return self._submit(
-            lambda: self._put_many_impl(items,
-                                        raise_on_conflict=raise_on_conflict))
+        obs = self._obs
+        with (obs.span("client.put_many", n=len(items))
+              if obs is not None else NOOP_CM):
+            return self._submit(
+                lambda: self._put_many_impl(
+                    items, raise_on_conflict=raise_on_conflict))
 
     def _put_many_impl(self, items, *, raise_on_conflict: bool = False
                        ) -> Dict[str, int]:
         """Single-store PUT batch: prepare + immediate self-commit (the
         degenerate one-shard case of the cross-shard protocol)."""
-        prep = self._put_many_prepare(items,
-                                      raise_on_conflict=raise_on_conflict)
-        try:
-            return self._put_many_commit(prep)
-        except BaseException:
-            # a commit-side failure (GC / journal I/O) must not leave
-            # PENDING heads behind — readers would block and later PUTs
-            # would conflict forever
-            self._put_many_abort(prep)
-            raise
+        obs = self._obs
+        t0 = time.perf_counter() if obs is not None else 0.0
+        with (obs.span("daemon.put_many", n=len(items))
+              if obs is not None else NOOP_CM):
+            prep = self._put_many_prepare(
+                items, raise_on_conflict=raise_on_conflict)
+            try:
+                out = self._put_many_commit(prep)
+            except BaseException:
+                # a commit-side failure (GC / journal I/O) must not leave
+                # PENDING heads behind — readers would block and later
+                # PUTs would conflict forever
+                self._put_many_abort(prep)
+                raise
+        if obs is not None:
+            obs.record("put.ack_us", (time.perf_counter() - t0) * 1e6)
+        return out
 
     def prepare_put_many_async(self, items, *,
                                raise_on_conflict: bool = False,
@@ -1170,16 +1238,20 @@ class InfiniStore:
             else list(items)
         items = [(k, self._snapshot_value(v)) for k, v in items]
 
+        obs = self._obs
+
         def run():
-            prep = self._put_many_prepare(
-                items, raise_on_conflict=raise_on_conflict)
-            if ticket is not None:
-                try:
-                    self._register_prepared(prep, ticket)
-                except BaseException:
-                    self._put_many_abort(prep)
-                    raise
-            return prep
+            with (obs.span("daemon.2pc_prepare", ticket=ticket)
+                  if obs is not None else NOOP_CM):
+                prep = self._put_many_prepare(
+                    items, raise_on_conflict=raise_on_conflict)
+                if ticket is not None:
+                    try:
+                        self._register_prepared(prep, ticket)
+                    except BaseException:
+                        self._put_many_abort(prep)
+                        raise
+                return prep
         return self._submit(run)
 
     def _register_prepared(self, prep: "_PreparedBatch",
@@ -1220,13 +1292,17 @@ class InfiniStore:
         durable, so aborting one shard would leave the batch
         half-visible forever — the batch stays registered in doubt and
         the cross-shard resolver retries the (idempotent) commit."""
+        obs = self._obs
+
         def run():
-            try:
-                return self._put_many_commit(prep, ticket=ticket)
-            except BaseException:
-                if ticket is None:
-                    self._put_many_abort(prep)
-                raise
+            with (obs.span("daemon.2pc_commit", ticket=ticket)
+                  if obs is not None else NOOP_CM):
+                try:
+                    return self._put_many_commit(prep, ticket=ticket)
+                except BaseException:
+                    if ticket is None:
+                        self._put_many_abort(prep)
+                    raise
         return self._submit(run)
 
     def abort_put_many_async(self, prep: "_PreparedBatch") -> StoreFuture:
@@ -1382,7 +1458,12 @@ class InfiniStore:
             # this batch appended (metadata + chunk + log records,
             # plus the prepared-record truncation) before any caller
             # observes the ack
+            obs = self._obs
+            t0 = time.perf_counter() if obs is not None else 0.0
             self.spill.sync()
+            if obs is not None:
+                obs.record("put.journal_sync_us",
+                           (time.perf_counter() - t0) * 1e6)
         for key in prep.conflicted:
             out[key] = -1
         prep.resolved = True
@@ -1503,8 +1584,11 @@ class InfiniStore:
         Returns the set of fragment keys whose chunks failed to store."""
         if not frags:
             return set()
-        all_chunks = self.codec.encode_many([frag for _, frag in frags],
-                                            as_arrays=True)
+        obs = self._obs
+        with (obs.span("ec.encode", fragments=len(frags))
+              if obs is not None else NOOP_CM):
+            all_chunks = self.codec.encode_many(
+                [frag for _, frag in frags], as_arrays=True)
         # single-fragment batches skip the compaction memcpy: the stacked
         # encode buffer IS that fragment's chunk set (data rows + parity,
         # ~(k+p)/k of the payload), so aliasing it pins nothing foreign —
@@ -1633,7 +1717,10 @@ class InfiniStore:
         reconstruction are decoded by a single `decode_many` call. The
         future resolves to {key: value-or-None}."""
         keys = list(keys)
-        return self._submit(lambda: self._get_many_impl(keys))
+        obs = self._obs
+        with (obs.span("client.get_many", n=len(keys))
+              if obs is not None else NOOP_CM):
+            return self._submit(lambda: self._get_many_impl(keys))
 
     def get_array(self, key: str) -> Optional[np.ndarray]:
         """GET returning a flat uint8 array (no bytes materialization) —
@@ -1649,9 +1736,12 @@ class InfiniStore:
             lambda: self._get_many_impl(keys, as_arrays=True))
 
     def _get_many_impl(self, keys, *, as_arrays: bool = False) -> Dict:
-        if self.cfg.pipelined_get:
-            return self._get_many_pipelined(keys, as_arrays=as_arrays)
-        return self._get_many_serial(keys, as_arrays=as_arrays)
+        obs = self._obs
+        with (obs.span("daemon.get_many", n=len(keys))
+              if obs is not None else NOOP_CM):
+            if self.cfg.pipelined_get:
+                return self._get_many_pipelined(keys, as_arrays=as_arrays)
+            return self._get_many_serial(keys, as_arrays=as_arrays)
 
     def _plan_gets(self, keys, out: Dict):
         """Shared GET planning: resolve metadata, serve read-after-write
@@ -1804,7 +1894,12 @@ class InfiniStore:
         fkeys = list(dict.fromkeys(fkeys))
         have: Dict[str, Dict[int, object]] = {f: {} for f in fkeys}
         degraded: List[str] = []
+        obs = self._obs
+        t0 = time.perf_counter() if obs is not None else 0.0
         self._sms_sweep(fkeys, have, degraded)
+        if obs is not None:
+            obs.record("get.sms_sweep_us",
+                       (time.perf_counter() - t0) * 1e6)
         if degraded:
             self._pending_migrations.update(dict.fromkeys(degraded))
         # stage 2: every short fragment's demand reads fan out at once
@@ -1826,8 +1921,10 @@ class InfiniStore:
                 # Adopted warms are counted as hits only when their data
                 # actually arrives (stage 3), never at adoption time
                 self.stats.inc("cos_fallback_reads")
-                fut = self._io.submit(self._cos_fetch_task,
-                                      f"chunk/{ckey}")
+                fut = self._io.submit(
+                    obs.bind_current(self._cos_fetch_task)
+                    if obs is not None else self._cos_fetch_task,
+                    f"chunk/{ckey}")
             futs[fut] = (fkey, idx, ckey)
             frag_pending.setdefault(fkey, set()).add(fut)
 
@@ -1853,9 +1950,15 @@ class InfiniStore:
         while queue or futs:
             if queue:
                 batch, queue = queue[:batch_size], queue[batch_size:]
-                vals = self.codec.decode_many([have[f] for f in batch],
-                                              as_arrays=as_arrays)
+                td = time.perf_counter() if obs is not None else 0.0
+                with (obs.span("get.decode", fragments=len(batch))
+                      if obs is not None else NOOP_CM):
+                    vals = self.codec.decode_many(
+                        [have[f] for f in batch], as_arrays=as_arrays)
                 self.stats.inc("decode_batches")
+                if obs is not None:
+                    obs.record("get.decode_batch_us",
+                               (time.perf_counter() - td) * 1e6)
                 out.update(zip(batch, vals))
                 continue
             ready, _ = wait(list(futs), return_when=FIRST_COMPLETED)
@@ -2064,7 +2167,15 @@ class InfiniStore:
         only thread-safe layers (pending map, COS, clock, ledger under
         the store lock); all store mutation happens back on the daemon
         thread when the future is harvested."""
-        return self._cos_read_consistent(cos_key)
+        obs = self._obs
+        if obs is None:
+            return self._cos_read_consistent(cos_key)
+        t0 = time.perf_counter()
+        with obs.span("get.cos_fallback", key=cos_key):
+            data = self._cos_read_consistent(cos_key)
+        obs.record("get.cos_fallback_us",
+                   (time.perf_counter() - t0) * 1e6)
+        return data
 
     # ------------------------------------------------------------------
     # prefetch (sequential-scan readahead)
@@ -2353,26 +2464,66 @@ class InfiniStore:
                                if s != _SNAP_COVERED)
             snap_covered = len(self._spill_meta_seqs) - meta_records
             tombstones = len(self._spill_tombstones)
+        # ONE counter snapshot feeds every derived field below — each
+        # reported ratio is internally consistent instead of re-reading
+        # live counters per term (see StoreStats.derived)
+        stats = self.stats.as_dict()
         return {"mt": self.mt.snapshot(),
                 "health": self.health(),
                 "chunk_map": dict(self.chunk_map),
+                "stats": stats,
+                "derived": StoreStats.derived(stats),
                 "get_pipeline": {
                     "pipelined": self.cfg.pipelined_get,
-                    "prefetch_hits": self.stats.prefetch_hits,
-                    "prefetch_wasted": self.stats.prefetch_wasted,
-                    "cos_fallback_reads": self.stats.cos_fallback_reads,
-                    "decode_batches": self.stats.decode_batches,
+                    "prefetch_hits": stats["prefetch_hits"],
+                    "prefetch_wasted": stats["prefetch_wasted"],
+                    "cos_fallback_reads": stats["cos_fallback_reads"],
+                    "decode_batches": stats["decode_batches"],
                     "pending_migrations": len(self._pending_migrations),
                     "prefetch": self.prefetcher.snapshot()},
                 "meta_log": {
                     "individual_records": meta_records,
                     "snapshot_covered": snap_covered,
                     "tombstones": tombstones,
-                    "snapshots_taken": self.stats.spill_meta_snapshots,
+                    "snapshots_taken": stats["spill_meta_snapshots"],
                     "generation": self.spill.generation
                     if self.spill is not None else None},
                 "spill": self.spill.snapshot()
                 if self.spill is not None else None}
+
+    # ------------------------------------------------------------------
+    # observability export (repro.obs)
+    # ------------------------------------------------------------------
+
+    @property
+    def obs(self) -> Optional[ObsPlane]:
+        return self._obs
+
+    def snapshot_metrics(self) -> Dict:
+        """The unified observability export: latency histograms with
+        p50/p99/p999, recent spans, flight-recorder events, recovered
+        forensics, plus the store counters (one `as_dict` pass). With no
+        (or a disabled) plane attached only the counters carry data —
+        same shape either way, so exporters need no special case."""
+        plane = self._obs
+        snap = dict(plane.snapshot()) if plane is not None \
+            else {"enabled": False, "histograms": {}, "spans": [],
+                  "events": [], "forensics": []}
+        snap["counters"] = self.stats.as_dict()
+        return snap
+
+    def dump_metrics(self, path: str) -> str:
+        """Write `snapshot_metrics()` to `path` — Prometheus text, or
+        JSON when the path ends in `.json`. Returns the path. (The
+        `ISTORE_METRICS_DUMP` env var arranges the same dump from an
+        atexit hook, covering every live plane in the process.)"""
+        snap = self.snapshot_metrics()
+        if path.endswith(".json"):
+            dump_json(snap, path)
+        else:
+            with open(path, "w") as f:
+                f.write(to_prometheus(snap))
+        return path
 
 
 class ConcurrentPutError(RuntimeError):

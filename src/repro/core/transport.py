@@ -487,6 +487,9 @@ class TcpTransport(ShardTransport):
         self._addr = addr
         self._boot_timeout_s = float(boot_timeout_s)
         self._faults = faults
+        # parent-side ObsPlane (attached by _ShardProxy): heartbeat-age
+        # samples + SUSPECT/DOWN/reconnect flight events. None = free.
+        self.obs = None
         self._backoff = RetryPolicy(
             max_attempts=self.hb.reconnect_max_attempts,
             backoff_base_s=self.hb.reconnect_backoff_base_s,
@@ -641,6 +644,10 @@ class TcpTransport(ShardTransport):
             self.state = DOWN
             sock, self._sock = self._sock, None
         _close_sock(sock)
+        obs = self.obs
+        if obs is not None:
+            obs.event("transport.down", shard=self.shard_id,
+                      epoch=self.epoch, why=why)
         exc = ShardWorkerDied(
             f"shard {self.shard_id} worker unreachable at epoch "
             f"{self.epoch}: {why}", shard_id=self.shard_id,
@@ -669,6 +676,10 @@ class TcpTransport(ShardTransport):
             self.reconnects += 1
             _LOG.info("shard %d reconnected at epoch %d (attempt %d)",
                       self.shard_id, self.epoch, attempt)
+            obs = self.obs
+            if obs is not None:
+                obs.event("transport.reconnect", shard=self.shard_id,
+                          epoch=self.epoch, attempt=attempt)
             if self._on_reconnect is not None:
                 self._on_reconnect(self.epoch)
             return
@@ -697,13 +708,20 @@ class TcpTransport(ShardTransport):
             except ShardWorkerDied:
                 pass                 # the reader declares the down
             age = time.monotonic() - (last or 0.0)
+            obs = self.obs
+            if obs is not None and last is not None:
+                obs.record("transport.heartbeat_age_us", age * 1e6)
             if age > hb.dead_after_s:
                 self._declare_down(f"heartbeat timeout ({age:.2f}s "
                                    f"since last pong)")
             elif age > hb.suspect_after_s:
                 with self._lock:
-                    if self.state == CONNECTED:
+                    became_suspect = self.state == CONNECTED
+                    if became_suspect:
                         self.state = SUSPECT
+                if became_suspect and obs is not None:
+                    obs.event("transport.suspect", shard=self.shard_id,
+                              epoch=self.epoch, age_s=round(age, 3))
             else:
                 with self._lock:
                     if self.state == SUSPECT:

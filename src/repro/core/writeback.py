@@ -52,6 +52,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.faults import RetryPolicy
 from repro.core.locks import make_lock
+from repro.obs import NOOP_CM
 
 
 class StoreFuture(Future):
@@ -90,6 +91,7 @@ class _Task:
     attempts: int = 0
     not_before: float = 0.0           # wall time; retry backoff gate
     seq: Optional[int] = None         # spill-journal record to truncate
+    ctx: Optional[tuple] = None       # trace context of the causing PUT
 
 
 class WritebackQueue:
@@ -101,8 +103,12 @@ class WritebackQueue:
                  start_thread: bool = True, spill=None,
                  name: str = "cos-writeback",
                  retry: Optional[RetryPolicy] = None,
-                 degraded_after: int = 12, faults=None):
+                 degraded_after: int = 12, faults=None, obs=None):
         self.cos = cos
+        # optional ObsPlane (repro.obs): "wb.persist" spans adopt the
+        # causing PUT's trace context; degraded enter/heal transitions
+        # land in the flight recorder
+        self.obs = obs
         # optional SpillJournal: enqueues are journaled before ack and
         # truncated on persistence (crash-consistent pending map)
         self.spill = spill
@@ -156,10 +162,14 @@ class WritebackQueue:
         for records already journaled."""
         if self.spill is not None and seq is None:
             seq = self.spill.append(key, data)
+        obs = self.obs
+        # capture the enqueuing PUT's ambient trace context so the
+        # writer thread's persist span stitches into the same trace
+        ctx = obs.ctx() if obs is not None else None
         with self._lock:
             while len(self._q) >= self.max_depth and not self._stop:
                 self._not_full.wait(timeout=0.1)
-            self._q.append(_Task(key, data, on_done, seq=seq))
+            self._q.append(_Task(key, data, on_done, seq=seq, ctx=ctx))
             self._pending[key] = data
             self.stats.enqueued += 1
             self.stats.peak_depth = max(self.stats.peak_depth,
@@ -315,6 +325,9 @@ class WritebackQueue:
                     if degraded:                  # COS healed: auto-exit
                         self._degraded_since = None
                         self.stats.degraded_exits += 1
+                        if self.obs is not None:
+                            self.obs.event("wb.degraded_heal",
+                                           key=task.key)
                 else:
                     self.stats.failures += 1
                     self._errors.append(f"{task.key}: {exc!r}")
@@ -337,6 +350,10 @@ class WritebackQueue:
                     self._degraded_since = time.monotonic()
                     self.stats.degraded_entries += 1
                     degraded = True
+                    if self.obs is not None:
+                        self.obs.event("wb.degraded_enter",
+                                       consecutive=self._consec_errors,
+                                       key=task.key)
                 if degraded:
                     # ride out the outage: reset the retry budget and
                     # probe COS at the backoff cap
@@ -377,10 +394,18 @@ class WritebackQueue:
                 task.on_done(task.key, True)
             return
         task.attempts += 1
+        obs = self.obs
+        t0 = time.perf_counter() if obs is not None else 0.0
         try:
             if self.faults is not None:
                 self.faults.fire("writeback.persist", task.key)
-            self.cos.put(task.key, task.data)
+            with (obs.adopt(task.ctx) if obs is not None else NOOP_CM):
+                with (obs.span("wb.persist", key=task.key)
+                      if obs is not None else NOOP_CM):
+                    self.cos.put(task.key, task.data)
+            if obs is not None:
+                obs.record("wb.persist_us",
+                           (time.perf_counter() - t0) * 1e6)
             self._finalize(task, True)
         except Exception as e:                   # noqa: BLE001
             self._finalize(task, False, e)

@@ -30,6 +30,7 @@ def collect_findings(tm: TreeModel) -> List[Finding]:
     out = list(order_findings)
     out += rules.blocking_under_lock(tm)
     out += rules.fault_site(tm)
+    out += rules.metric_site(tm)
     out += rules.atomic_counter(tm)
     out += rules.resource_lifecycle(tm)
     return out

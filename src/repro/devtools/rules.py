@@ -172,6 +172,63 @@ def fault_site(tm: TreeModel) -> List[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# rule: metric-site
+# ---------------------------------------------------------------------------
+
+_OBS_CALLS = ("span", "record", "event")
+
+
+def _is_obs_recv(recv: str) -> bool:
+    """True for receivers that name an ObsPlane handle by convention:
+    `obs`, `self.obs`, `self._obs`, `store.obs`, ..."""
+    return recv.rsplit(".", 1)[-1] in ("obs", "_obs")
+
+
+def metric_site(tm: TreeModel) -> List[Finding]:
+    """Every `<obs>.span/record/event(...)` instrumentation site must
+    (a) sit under an `<obs> is not None` guard (the plane is optional
+    and off by default), and (b) pass a literal site name registered in
+    `repro.obs.sites.METRIC_SITES` — a typo'd site would silently
+    record into nothing (span/event) or KeyError at runtime (record)."""
+    findings: List[Finding] = []
+    manifest = tm.metric_manifest
+    for (modname, qual), fm in tm.funcs.items():
+        if "obs/" in fm.path.replace("\\", "/"):
+            continue             # the plane's own internals are exempt
+        scope = f"{modname}.{qual}"
+        for ci in fm.calls:
+            if ci.name not in _OBS_CALLS or ci.recv is None \
+                    or not _is_obs_recv(ci.recv):
+                continue
+            # a parameter-bound plane (callback closures with `obs=obs`
+            # defaults) is the caller's contract: the binding site only
+            # exists inside the caller's own non-None guard
+            if ci.recv not in ci.guarded and ci.recv not in fm.params:
+                findings.append(Finding(
+                    rule="metric-site", path=fm.path, line=ci.line,
+                    scope=scope, detail=f"unguarded:{ci.recv}",
+                    message=(f"{ci.recv}.{ci.name}() without an "
+                             f"enclosing `{ci.recv} is not None` guard "
+                             f"— a plane-less store would crash here")))
+            if ci.arg0 is None:
+                findings.append(Finding(
+                    rule="metric-site", path=fm.path, line=ci.line,
+                    scope=scope, detail=f"nonliteral:{ci.recv}",
+                    message=(f"{ci.recv}.{ci.name}() site is not a "
+                             f"string literal — the manifest check "
+                             f"cannot see it")))
+            elif manifest and ci.arg0 not in manifest:
+                findings.append(Finding(
+                    rule="metric-site", path=fm.path, line=ci.line,
+                    scope=scope, detail=f"unregistered:{ci.arg0}",
+                    message=(f"site {ci.arg0!r} is not in "
+                             f"obs.METRIC_SITES — register it or fix "
+                             f"the typo (unregistered names never "
+                             f"surface in the export)")))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # rule: atomic-counter
 # ---------------------------------------------------------------------------
 

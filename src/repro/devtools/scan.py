@@ -100,6 +100,9 @@ class FuncModel:
     line: int
     acquires: List[AcqEvent] = field(default_factory=list)
     calls: List[CallInfo] = field(default_factory=list)
+    # parameter names (incl. defaults-bound closure captures) — rules
+    # may treat a parameter receiver as a caller-guaranteed value
+    params: frozenset = frozenset()
     # fixed-point results (filled by link step)
     acquires_closure: Set[str] = field(default_factory=set)
     may_block: Optional[str] = None   # label of the first blocking call, or None
@@ -138,6 +141,7 @@ class ModuleModel:
     pragmas: Dict[int, List[Tuple[str, Optional[str]]]] = \
         field(default_factory=dict)
     fault_manifest: Optional[Set[str]] = None
+    metric_manifest: Optional[Set[str]] = None
     # AugAssign on <recv>.<attr>: (line, scope, recv, attr)
     augassigns: List[Tuple[int, str, str, str]] = field(default_factory=list)
 
@@ -295,13 +299,17 @@ class _DeclVisitor(ast.NodeVisitor):
         cls = self.cls_stack[-1] if self.cls_stack else None
         in_init = bool(self.func_stack) and self.func_stack[0] == "__init__"
 
-        # fault-site manifest: FAULT_SITES = frozenset({...})
-        if (isinstance(tgt, ast.Name) and tgt.id == "FAULT_SITES"
+        # site manifests: FAULT_SITES / METRIC_SITES = frozenset({...})
+        if (isinstance(tgt, ast.Name)
+                and tgt.id in ("FAULT_SITES", "METRIC_SITES")
                 and not self.func_stack and not self.cls_stack):
             sites = {n.value for n in ast.walk(node.value)
                      if isinstance(n, ast.Constant)
                      and isinstance(n.value, str)}
-            self.mm.fault_manifest = sites
+            if tgt.id == "FAULT_SITES":
+                self.mm.fault_manifest = sites
+            else:
+                self.mm.metric_manifest = sites
             return
 
         lock = self._lock_ctor(node.value)
@@ -469,8 +477,15 @@ class _FuncWalker:
             nn = _is_nonnull_test(stmt.test)
             null = _is_null_test(stmt.test)
             self._expr(stmt.test, held, guards)
-            if nn:
-                self._stmts(stmt.body, held, guards | {nn})
+            nns = {nn} if nn else set()
+            if not nns and isinstance(stmt.test, ast.BoolOp) \
+                    and isinstance(stmt.test.op, ast.And):
+                # `if X is not None and <...>:` — every non-null
+                # conjunct guards the body
+                nns = {g for g in (_is_nonnull_test(v)
+                                   for v in stmt.test.values) if g}
+            if nns:
+                self._stmts(stmt.body, held, guards | nns)
                 self._stmts(stmt.orelse, held, guards)
                 return guards
             self._stmts(stmt.body, held, guards)
@@ -661,8 +676,11 @@ def scan_module(path: Path, root: Path) -> ModuleModel:
         for (q, var), lockname in mm.local_lock_vars.items():
             if q == qual:
                 local_scope[var] = lockname
+        a = node.args
+        params = frozenset(
+            p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs))
         fm = FuncModel(qualname=qual, module=mm.modname, cls=cls,
-                       path=mm.relpath, line=node.lineno)
+                       path=mm.relpath, line=node.lineno, params=params)
         mm.funcs[qual] = fm
         walker = _FuncWalker(mm, fm, local_scope)
         walker.walk(node.body, held=(), guards=frozenset())
@@ -691,6 +709,7 @@ class TreeModel:
     funcs: Dict[Tuple[str, str], FuncModel] = field(default_factory=dict)
     locks: Dict[str, LockDef] = field(default_factory=dict)
     fault_manifest: Set[str] = field(default_factory=set)
+    metric_manifest: Set[str] = field(default_factory=set)
 
     def pragma_for(self, mm: ModuleModel, rule: str,
                    line: int) -> Optional[Tuple[str, Optional[str]]]:
@@ -722,6 +741,8 @@ def scan_tree(targets: Sequence[str], root: Optional[Path] = None) -> TreeModel:
             tm.locks[name] = ld
         if mm.fault_manifest:
             tm.fault_manifest |= mm.fault_manifest
+        if mm.metric_manifest:
+            tm.metric_manifest |= mm.metric_manifest
     _link(tm)
     return tm
 

@@ -1,0 +1,402 @@
+"""Observability plane tests (`repro.obs`): histogram math, the
+Prometheus/JSON export, the crash-surviving flight recorder, and —
+the end-to-end contract — cross-process trace stitching: one traced
+`put_many` against every conformance frontend must yield ONE trace
+whose spans cover client AND daemon stages, across the process
+boundary for the process/tcp frontends, with worker spans recovered
+as dead-epoch forensics after a real SIGKILL."""
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import (Clock, InfiniStore, ProcessShardedStore,
+                        ShardedStore, StoreConfig)
+from repro.core.ec import ECConfig
+from repro.core.gc_window import GCConfig
+from repro.core.store import StoreStats
+from repro.devtools import lint
+from repro.obs import (HISTOGRAM_SITES, NBUCKETS, NOOP_CM, FlightRecorder,
+                       LatencyHistogram, ObsPlane, merge_counts,
+                       merge_metric_snapshots, parse_prometheus,
+                       quantile_us, summarize, to_prometheus)
+from repro.obs.metrics import BOUNDS_US, bucket_of
+
+MB = 1024 * 1024
+
+# ---------------------------------------------------------------------------
+# histogram math
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_bounds_monotonic_with_overflow():
+    assert bucket_of(0.0) == 0 and bucket_of(1.0) == 0
+    assert bucket_of(BOUNDS_US[0] * 1.0001) == 1
+    prev = 0
+    for v in (1.2, 5.0, 100.0, 1e4, 1e6, 5e8):
+        b = bucket_of(v)
+        assert prev <= b < NBUCKETS
+        prev = b
+    assert bucket_of(1e12) == NBUCKETS - 1    # overflow bucket
+
+
+def test_quantiles_within_bucket_resolution():
+    h = LatencyHistogram()
+    for _ in range(1000):
+        h.record(1000.0)
+    s = summarize(h.snapshot())
+    assert s["count"] == 1000
+    # log-spaced buckets at 2^(1/4): every quantile lands within ~10%
+    for key in ("p50_us", "p99_us", "p999_us"):
+        assert abs(s[key] - 1000.0) / 1000.0 < 0.11
+
+
+def test_merge_counts_is_bucketwise_sum():
+    a, b = LatencyHistogram(), LatencyHistogram()
+    for v in (10.0, 50.0, 900.0):
+        a.record(v)
+    for v in (10.0, 7e9):
+        b.record(v)
+    merged = merge_counts([a.snapshot(), b.snapshot()])
+    assert sum(merged) == 5
+    assert merged[bucket_of(10.0)] == 2
+    assert merged[NBUCKETS - 1] == 1          # overflow survived the merge
+    assert quantile_us(merged, 0.5) > 0
+
+
+def test_summarize_empty_is_zeroes():
+    assert summarize([0] * NBUCKETS) == {
+        "count": 0, "p50_us": 0.0, "p99_us": 0.0, "p999_us": 0.0}
+
+
+def test_histogram_concurrent_record_no_lost_updates():
+    import threading
+    h = LatencyHistogram()
+
+    def hammer():
+        for _ in range(5000):
+            h.record(100.0)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.count() == 20_000
+
+
+# ---------------------------------------------------------------------------
+# export: Prometheus text + merge
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_roundtrip_covers_registry():
+    plane = ObsPlane(name="t-prom")
+    plane.record("put.ack_us", 123.0)
+    snap = plane.snapshot()
+    snap["counters"] = {"puts": 3}
+    parsed = parse_prometheus(to_prometheus(snap))
+    for site in HISTOGRAM_SITES:              # zero-count sites included
+        name = "istore_" + site.replace(".", "_")
+        assert name in parsed and f"{name}_count" in parsed
+    assert parsed["istore_put_ack_us_count"] == {"": 1.0}
+    assert parsed["istore_puts"] == {"": 3.0}
+    assert parsed["istore_obs_enabled"] == {"": 1.0}
+
+
+def test_parse_prometheus_rejects_malformed():
+    with pytest.raises(ValueError):
+        parse_prometheus("metric notanumber")
+    with pytest.raises(ValueError):
+        parse_prometheus('metric{q="0.5" 1.0')
+
+
+def test_merge_metric_snapshots_sums_and_concats():
+    a, b = ObsPlane(name="a"), ObsPlane(name="b")
+    a.record("put.ack_us", 10.0)
+    b.record("put.ack_us", 10.0)
+    b.event("fault.fire", n=1)
+    with a.span("daemon.put_many"):
+        pass
+    sa, sb = a.snapshot(), b.snapshot()
+    sa["counters"], sb["counters"] = {"puts": 1}, {"puts": 2}
+    m = merge_metric_snapshots([sa, sb])
+    assert m["histograms"]["put.ack_us"]["count"] == 2
+    assert len(m["spans"]) == 1 and len(m["events"]) == 1
+    assert m["events"][0]["source"] == "b"    # provenance survives merge
+    assert m["counters"] == {"puts": 3}
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+_HDR_SIZE = struct.calcsize("<IHH")
+_SLOT = 256                                   # recorder.DEFAULT_SLOT_SIZE
+
+
+def test_flight_file_roundtrip_and_wraparound(tmp_path):
+    p = str(tmp_path / "flight.bin")
+    r = FlightRecorder(capacity=4)
+    assert r.bind(p) is True
+    assert r.bind(p) is False                 # first bind wins
+    for i in range(6):                        # 6 events, 4 slots: 0,1 evicted
+        r.event("fault.fire", n=i)
+    r.close()
+    recs = FlightRecorder.read_file(p)
+    assert [rec["n"] for rec in recs] == [2, 3, 4, 5]
+    assert [rec["seq"] for rec in recs] == sorted(rec["seq"] for rec in recs)
+
+
+def test_flight_torn_slot_loses_one_record_only(tmp_path):
+    p = str(tmp_path / "flight.bin")
+    r = FlightRecorder(capacity=8)
+    r.bind(p)
+    for i in range(5):
+        r.event("fault.fire", n=i)
+    r.close()
+    blob = bytearray(open(p, "rb").read())
+    off = _HDR_SIZE + 1 * _SLOT               # tear slot 1 (event n=1)
+    blob[off:off + 2] = struct.pack("<H", 12)
+    blob[off + 2:off + 14] = b"\xff" * 12
+    open(p, "wb").write(bytes(blob))
+    recs = FlightRecorder.read_file(p)
+    assert [rec["n"] for rec in recs] == [0, 2, 3, 4]
+
+
+def test_flight_oversize_record_truncates_parseably(tmp_path):
+    p = str(tmp_path / "flight.bin")
+    r = FlightRecorder(capacity=4)
+    r.bind(p)
+    r.event("fault.fire", blob="x" * 4 * _SLOT)
+    r.close()
+    (rec,) = FlightRecorder.read_file(p)
+    assert rec["kind"] == "fault.fire" and rec["truncated"] is True
+
+
+def test_flight_read_missing_or_foreign_file(tmp_path):
+    assert FlightRecorder.read_file(str(tmp_path / "absent.bin")) == []
+    junk = tmp_path / "junk.bin"
+    junk.write_bytes(b"not a flight file at all")
+    assert FlightRecorder.read_file(str(junk)) == []
+
+
+def test_disabled_plane_is_inert(tmp_path):
+    plane = ObsPlane(enabled=False, name="off")
+    assert plane.span("daemon.put_many") is NOOP_CM
+    plane.record("put.ack_us", 5.0)
+    plane.event("fault.fire", n=1)
+    assert plane.ctx() is None
+    assert plane.bind_flight(str(tmp_path / "f.bin")) is False
+    snap = plane.snapshot()
+    assert snap["enabled"] is False
+    assert sum(h["count"] for h in snap["histograms"].values()) == 0
+    assert snap["spans"] == [] and snap["events"] == []
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: traced put_many across every conformance frontend
+# ---------------------------------------------------------------------------
+
+FRONTENDS = ("single", "sharded", "process", "tcp")
+
+
+def _cfg(spill, plane):
+    return StoreConfig(ec=ECConfig(k=4, p=2), function_capacity=8 * MB,
+                       fragment_bytes=1 * MB,
+                       gc=GCConfig(gc_interval=1e9),
+                       num_recovery_functions=4, spill_dir=spill,
+                       obs=plane)
+
+
+def _build(kind, tmp_path, plane):
+    cfg = _cfg(str(tmp_path / f"spill-{kind}"), plane)
+    if kind == "single":
+        return InfiniStore(cfg, clock=Clock(), seed=0)
+    if kind == "sharded":
+        return ShardedStore(cfg, num_shards=2, clock=Clock(), seed=0)
+    if kind == "process":
+        return ProcessShardedStore(cfg, num_shards=2, clock=Clock(), seed=0)
+    if kind == "tcp":
+        return ProcessShardedStore(cfg, num_shards=2, clock=Clock(),
+                                   seed=0, transport="tcp")
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("kind", FRONTENDS)
+def test_traced_put_many_yields_one_stitched_trace(kind, tmp_path):
+    plane = ObsPlane(name=f"t-{kind}")
+    st = _build(kind, tmp_path, plane)
+    try:
+        rng = np.random.default_rng(0)
+        st.put_many({f"k{i}": rng.bytes(8_000) for i in range(6)})
+        st.put("solo", rng.bytes(8_000))      # single-shard ack path
+        snap = st.snapshot_metrics()
+        spans = snap["spans"]
+        roots = [s for s in spans if s["site"] == "client.put_many"]
+        assert roots, "no client root span recorded"
+        tid = roots[-1]["trace_id"]
+        trace = [s for s in spans if s["trace_id"] == tid]
+        sites = {s["site"] for s in trace}
+        assert "client.put_many" in sites
+        if kind == "single":
+            assert "daemon.put_many" in sites
+        else:
+            # a 6-key batch spans both shards: the 2PC path, leader and
+            # both participant rounds, all stitched into the one trace
+            assert {"leader.2pc", "daemon.2pc_prepare",
+                    "daemon.2pc_commit"} <= sites
+        # every daemon-side stage parents into this trace, not a fresh one
+        ids = {s["span_id"] for s in trace}
+        daemon = [s for s in trace if s["site"].startswith("daemon.")]
+        assert daemon and all(s["parent_id"] in ids for s in daemon)
+        assert snap["histograms"]["put.ack_us"]["count"] > 0
+        if kind in ("process", "tcp"):
+            # the trace crossed the transport: worker pids differ from
+            # the frontend's, and the RPC roundtrip histogram saw it
+            assert len({s["pid"] for s in trace}) >= 2
+            assert snap["histograms"]["rpc.roundtrip_us"]["count"] > 0
+            totals = st.transport_metrics()["totals"]
+            assert isinstance(totals, dict)
+    finally:
+        st.close()
+
+
+def test_sigkill_worker_leaves_dead_epoch_forensics(tmp_path):
+    """A REAL SIGKILL of a worker must not lose its trace: the flight
+    file's page-cache writes survive, and `restart_shard` surfaces the
+    dead worker's spans/events as forensics tagged with their epoch."""
+    plane = ObsPlane(name="t-forensics")
+    st = _build("process", tmp_path, plane)
+    try:
+        rng = np.random.default_rng(1)
+        st.put_many({f"k{i}": rng.bytes(8_000) for i in range(8)})
+        st.simulate_crash(shard=0)
+        st.restart_shard(0)
+        snap = st.snapshot_metrics()
+        forens = [f for f in snap["forensics"] if f["source"] == "shard-0"]
+        assert forens, "no forensics recovered from the dead worker"
+        assert forens[0]["dead"] is True and forens[0]["shard"] == 0
+        recs = forens[0]["records"]
+        kinds = {r.get("kind") for r in recs}
+        assert "store.open" in kinds, "worker boot anchor missing"
+        span_recs = [r for r in recs if r.get("kind") == "span"]
+        assert span_recs, "dead worker's spans were lost"
+        # shm workers pin epoch 1; the dead spans must carry it
+        assert any(r.get("epoch") == 1 for r in span_recs)
+        # the restarted shard still serves
+        assert st.get("k0") is not None or st.get("k1") is not None
+    finally:
+        st.close()
+
+
+def test_obs_none_store_works_and_exports_counters_only(tmp_path):
+    st = _build("single", tmp_path, None)
+    try:
+        st.put("k", b"v" * 8_000)
+        assert st.get("k") == b"v" * 8_000
+        snap = st.snapshot_metrics()
+        assert snap["enabled"] is False
+        assert snap["counters"]["puts"] >= 1
+        parse_prometheus(to_prometheus(snap))     # still a valid dump
+    finally:
+        st.close()
+
+
+# ---------------------------------------------------------------------------
+# derived stats ratios (single-snapshot consistency)
+# ---------------------------------------------------------------------------
+
+
+def test_stats_derived_ratios_from_one_snapshot():
+    snap = {"sms_chunk_hits": 3, "sms_chunk_misses": 1,
+            "prefetch_hits": 2, "prefetch_wasted": 2,
+            "gets": 4, "cos_fallback_reads": 2, "decode_batches": 8}
+    d = StoreStats.derived(snap)
+    assert d == {"hit_ratio": 0.75, "prefetch_efficiency": 0.5,
+                 "cos_fallback_per_get": 0.5, "decode_batches_per_get": 2.0}
+    zero = {k: 0 for k in snap}
+    assert all(v == 0.0 for v in StoreStats.derived(zero).values())
+
+
+def test_snapshot_metadata_derived_matches_stats_block(tmp_path):
+    st = _build("single", tmp_path, None)
+    try:
+        rng = np.random.default_rng(2)
+        for i in range(4):
+            st.put(f"k{i}", rng.bytes(8_000))
+            st.get(f"k{i}")
+        snap = st.snapshot_metadata()
+        # the ratios must be computable from the SAME stats dict the
+        # snapshot reports — one counter pass, internally consistent
+        assert snap["derived"] == StoreStats.derived(snap["stats"])
+    finally:
+        st.close()
+
+
+# ---------------------------------------------------------------------------
+# metric_site lint rule
+# ---------------------------------------------------------------------------
+
+_SITES_SRC = 'METRIC_SITES = frozenset({"ok.site_us"})\n'
+
+_BAD_OBS_SRC = '''\
+class C:
+    obs = None
+
+    def unguarded(self):
+        obs = self.obs
+        obs.record("ok.site_us", 1.0)
+
+    def unregistered(self):
+        obs = self.obs
+        if obs is not None:
+            obs.record("typo.site_us", 1.0)
+
+    def nonliteral(self, site):
+        obs = self.obs
+        if obs is not None:
+            obs.event(site)
+'''
+
+_CLEAN_OBS_SRC = '''\
+class C:
+    obs = None
+
+    def guarded(self):
+        obs = self.obs
+        if obs is not None:
+            obs.record("ok.site_us", 1.0)
+
+    def compound_guard(self, ready):
+        obs = self.obs
+        if obs is not None and ready:
+            obs.event("ok.site_us", n=1)
+
+    def callback_bound(self):
+        obs = self.obs
+        if obs is not None:
+            def cb(v, obs=obs):
+                obs.record("ok.site_us", v)
+            cb(1.0)
+'''
+
+
+def _lint_dir(tmp_path, **files):
+    for name, src in files.items():
+        (tmp_path / f"{name}.py").write_text(src)
+    new, _tm = lint.run([str(tmp_path)], root=tmp_path,
+                        baseline_path=tmp_path / "absent.json")
+    return new
+
+
+def test_metric_site_rule_flags_bad_sites(tmp_path):
+    new = [f for f in _lint_dir(tmp_path, sites=_SITES_SRC, m=_BAD_OBS_SRC)
+           if f.rule == "metric-site"]
+    details = sorted(f.detail.split(":")[0] for f in new)
+    assert details == ["nonliteral", "unguarded", "unregistered"]
+
+
+def test_metric_site_rule_clean_patterns_pass(tmp_path):
+    new = _lint_dir(tmp_path, sites=_SITES_SRC, m=_CLEAN_OBS_SRC)
+    assert [f for f in new if f.rule == "metric-site"] == []
